@@ -1,0 +1,43 @@
+"""Beyond-paper distributed-optimization rungs on the production mesh.
+
+The paper stops at ZeRO + mixed precision on 8 GPUs.  At 512 chips across
+two pods the slow fabric is the DCN pod axis, and two further rungs apply
+(both implemented in the framework, priced here with the same collective
+math the cost model uses):
+
+  1. hierarchical allreduce — reduce-scatter intra-pod, all-reduce the
+     1/256 shard across pods, all-gather intra-pod.
+  2. int8 error-feedback compression on the cross-pod hop only.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+from repro.configs import get_config
+from repro.core.hierarchy import flat_time, hierarchical_time
+from repro.core.compose import production_system
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows = []
+    sys_ = production_system(multi_pod=True)
+    fast_n = 256
+    slow_n = 2
+    fast_bw = sys_.axis_bandwidth("data")
+    slow_bw = sys_.axis_bandwidth("pod")
+    for arch in ("llama3.2-3b", "command-r-35b", "llama4-scout-17b-a16e"):
+        t0 = time.perf_counter()
+        cfg = get_config(arch)
+        gbytes = cfg.param_count() * 2.0          # bf16 grads
+        t_flat = flat_time(gbytes, fast_n * slow_n, slow_bw)
+        t_hier = hierarchical_time(gbytes, fast_n, slow_n, fast_bw, slow_bw)
+        t_hier_int8 = hierarchical_time(gbytes, fast_n, slow_n, fast_bw,
+                                        slow_bw, compress=0.25)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"beyond/{arch}", us,
+                     f"flat={t_flat*1e3:.1f}ms "
+                     f"hier={t_hier*1e3:.1f}ms "
+                     f"hier+int8={t_hier_int8*1e3:.1f}ms "
+                     f"speedup={t_flat/t_hier_int8:.1f}x"))
+    return rows

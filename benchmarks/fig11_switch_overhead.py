@@ -1,0 +1,46 @@
+"""Fig 11/15: % change of training time vs localGPUs across fabrics.
+
+Paper claims reproduced here:
+  * vision models: < 7% overhead on falcon-attached GPUs
+  * overhead grows with parameter count
+  * BERT-large: ~2x training time on falconGPUs
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+from benchmarks.paper_model import PAPER_WORKLOADS, overhead_vs_local, \
+    step_time
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows = []
+    ordered = sorted(PAPER_WORKLOADS, key=lambda w: w.params_paper)
+    falcon = {}
+    for w in ordered:
+        t0 = time.perf_counter()
+        hy = overhead_vs_local(w, "hybridGPUs")
+        fa = overhead_vs_local(w, "falconGPUs")
+        falcon[w.name] = fa
+        us = (time.perf_counter() - t0) * 1e6
+        checks = []
+        if w.domain == "vision":
+            checks.append("vision<7%:" + ("OK" if fa < 7 else "FAIL"))
+        if w.name == "bert-large":
+            checks.append("~2x:" + ("OK" if 60 <= fa <= 160 else "FAIL"))
+        rows.append((f"fig11/{w.name}", us,
+                     f"hybrid={hy:+.1f}% falcon={fa:+.1f}% "
+                     f"params={w.params_paper/1e6:.0f}M "
+                     + " ".join(checks)))
+    # the paper's correlation claim: overhead(vision) << overhead(NLP),
+    # growing with parameter count across the NLP pair
+    vis_max = max(v for k, v in falcon.items()
+                  if k in ("mobilenetv2", "resnet50", "yolov5l"))
+    ok = vis_max <= falcon["bert-base"] <= falcon["bert-large"]
+    rows.append(("fig11/size-correlation", 0.0,
+                 f"max(vision)={vis_max:.1f}% <= bert-base="
+                 f"{falcon['bert-base']:.1f}% <= bert-large="
+                 f"{falcon['bert-large']:.1f}%: "
+                 + ("OK" if ok else "FAIL")))
+    return rows

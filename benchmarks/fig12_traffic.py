@@ -1,0 +1,36 @@
+"""Fig 12: sustained traffic (GB/s) on the composed fabric per benchmark.
+
+Paper: BERT-large 76.43 GB/s ~= 19x MobileNetV2 (4 GB/s), ~7x ResNet-50
+(11.31 GB/s).  The quantity is gradient-exchange bytes per wall-second, so
+it is a *joint* property of model size and step time — reproduced here
+from the same analytic step model as Fig 11.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+from benchmarks.paper_model import PAPER_WORKLOADS, fabric_traffic_gbps
+
+PAPER_GBPS = {"mobilenetv2": 4.0, "resnet50": 11.31, "bert-large": 76.43}
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows = []
+    vals = {}
+    for w in PAPER_WORKLOADS:
+        t0 = time.perf_counter()
+        g = fabric_traffic_gbps(w, "falconGPUs")
+        us = (time.perf_counter() - t0) * 1e6
+        vals[w.name] = g
+        note = ""
+        if w.name in PAPER_GBPS:
+            note = f" paper={PAPER_GBPS[w.name]:.1f}GB/s"
+        rows.append((f"fig12/{w.name}", us, f"traffic={g:.2f}GB/s{note}"))
+    r_bl_mb = vals["bert-large"] / vals["mobilenetv2"]
+    r_bl_rn = vals["bert-large"] / vals["resnet50"]
+    rows.append(("fig12/ratios", 0.0,
+                 f"BL/MBv2={r_bl_mb:.1f}x (paper ~19x) "
+                 f"BL/RN50={r_bl_rn:.1f}x (paper ~7x) "
+                 f"ordering={'OK' if vals['mobilenetv2'] < vals['resnet50'] < vals['bert-large'] else 'FAIL'}"))
+    return rows

@@ -1,0 +1,93 @@
+"""Shared analytic model of the paper's 8-GPU DDP experiment.
+
+The paper trains 5 benchmarks data-parallel on 8 V100s and varies the
+fabric (Table III).  To reproduce its *relative* results (Fig 11/12/15/16)
+without GPUs, we price one training step as
+
+    step = overhead + compute + max(0, comm(fabric) - overlap*compute)
+
+Calibration (all from public, era-correct sources; documented in
+EXPERIMENTS.md):
+  * compute = batch / (8 x published V100 fp16 DDP throughput) — NGC-era
+    per-GPU figures; this captures the per-model efficiency differences a
+    flat-MFU model misses (depthwise convs run at ~3% MFU, BERT at ~35%).
+  * gradients are exchanged in FP32 (torch.cuda.amp keeps fp32 master
+    grads; NCCL allreduce payload = 4 B/param even under mixed precision).
+  * fabric bandwidth under an 8-way concurrent ring is a SHARED ceiling:
+    NVLink gives every pair dedicated links (Table IV L-L 72.37 GB/s),
+    but the Falcon switch funnels all 8 GPUs through the chassis -> the
+    effective per-GPU bandwidth is aggregate/8.  We take the aggregate
+    from the paper's own Fig-12 peak measurement (76.43 GB/s).  Hybrid
+    crosses the host root complex (F-L 19.64 GB/s per direction) shared
+    by the 4 switch-attached GPUs.
+  * overlap: PyTorch DDP hides buckets under backward; 0.4 of compute.
+  * overhead: fixed 35 ms/step (input pipeline + launch), visible in the
+    paper's small-model step times (Fig 12: MobileNet 4 GB/s at 0.19 GB
+    exchanged/step -> ~47 ms steps despite ~6 ms of compute).
+
+Absolute seconds are NOT the deliverable (hardware-specific); orderings,
+percent-changes and traffic ratios are — those the paper publishes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.configs.paper_bench import PAPER_WORKLOADS, PaperWorkload
+
+N_GPUS = 8
+
+# published per-V100 fp16 DDP training throughput (samples/s/GPU)
+THROUGHPUT = {"mobilenetv2": 1400.0, "resnet50": 410.0, "yolov5l": 85.0,
+              "bert-base": 105.0, "bert-large": 30.0}
+
+GRAD_BYTES = 4            # torch amp: fp32 master grads on the wire
+OVERLAP = 0.4             # DDP bucket overlap with backward
+STEP_OVERHEAD = 0.035     # input pipeline + launch, seconds
+
+# effective per-GPU bandwidth during an 8-way concurrent ring (bytes/s)
+FALCON_AGGREGATE = 76.43e9            # paper Fig-12 measured switch peak
+EFF_BW = {
+    "localGPUs": 72.37e9,             # NVLink: dedicated per-pair links
+    "falconGPUs": FALCON_AGGREGATE / N_GPUS,
+    "hybridGPUs": 19.64e9 / 2.0,      # F-L host hop shared by 4 GPUs
+}
+
+
+def compute_time(w: PaperWorkload) -> float:
+    return w.batch_size / (N_GPUS * THROUGHPUT[w.name])
+
+
+def allreduce_wire_bytes(params: float,
+                         dtype_bytes: int = GRAD_BYTES) -> float:
+    """Per-GPU ring-allreduce wire bytes for one gradient exchange."""
+    return 2.0 * (N_GPUS - 1) / N_GPUS * params * dtype_bytes
+
+
+def comm_time(w: PaperWorkload, config: str,
+              dtype_bytes: int = GRAD_BYTES) -> float:
+    return allreduce_wire_bytes(w.params_paper, dtype_bytes) \
+        / EFF_BW[config]
+
+
+def step_time(w: PaperWorkload, config: str, *,
+              dtype_bytes: int = GRAD_BYTES,
+              overlap: float = OVERLAP) -> float:
+    c = compute_time(w)
+    m = comm_time(w, config, dtype_bytes)
+    return STEP_OVERHEAD + c + max(0.0, m - overlap * c)
+
+
+def overhead_vs_local(w: PaperWorkload, config: str) -> float:
+    """Fig-11 quantity: % change of training time vs localGPUs."""
+    t0 = step_time(w, "localGPUs")
+    return (step_time(w, config) - t0) / t0 * 100.0
+
+
+def fabric_traffic_gbps(w: PaperWorkload, config: str = "falconGPUs"
+                        ) -> float:
+    """Fig-12 quantity: sustained GB/s through the switch (ingress+egress
+    over all ports) = exchanged bytes per step / step time."""
+    per_gpu = allreduce_wire_bytes(w.params_paper)
+    total = per_gpu * N_GPUS * 2.0        # ingress + egress counted
+    return total / step_time(w, config) / 1e9

@@ -1,0 +1,52 @@
+"""Roofline table: 40-cell (arch x shape) terms from the dry-run artifacts.
+
+Reads results/dryrun/*.json (produced by ``repro.launch.dryrun``) and
+prints per-cell compute/memory/collective seconds, dominant term, useful
+ratio and roofline fraction, for both meshes.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+from typing import List, Tuple
+
+RESULTS_DIR = os.environ.get("DRYRUN_RESULTS", "results/dryrun")
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows = []
+    files = sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json")))
+    if not files:
+        return [("roofline/missing", 0.0,
+                 f"no dry-run artifacts under {RESULTS_DIR}; run "
+                 "PYTHONPATH=src python -m repro.launch.dryrun first")]
+    worst = (None, 1e9)
+    most_coll = (None, -1.0)
+    for path in files:
+        t0 = time.perf_counter()
+        with open(path) as f:
+            js = json.load(f)
+        rl = js.get("roofline", {})
+        us = (time.perf_counter() - t0) * 1e6
+        tag = os.path.basename(path)[:-5]
+        frac = rl.get("roofline_fraction", 0.0)
+        coll = rl.get("collective_s", 0.0)
+        step = rl.get("step_time_s", 1e-30)
+        if frac < worst[1] and "single" in tag:
+            worst = (tag, frac)
+        if coll / step > most_coll[1] and "single" in tag:
+            most_coll = (tag, coll / step)
+        rows.append((f"roofline/{tag}", us,
+                     f"compute={rl.get('compute_s', 0)*1e3:.2f}ms "
+                     f"memory={rl.get('memory_s', 0)*1e3:.2f}ms "
+                     f"collective={coll*1e3:.2f}ms "
+                     f"dominant={rl.get('dominant','?')} "
+                     f"frac={frac:.3f} "
+                     f"useful={rl.get('useful_ratio', 0):.3f}"))
+    rows.append(("roofline/summary", 0.0,
+                 f"cells={len(files)} worst_fraction={worst[0]}({worst[1]:.3f}) "
+                 f"most_collective_bound={most_coll[0]}"
+                 f"({most_coll[1]*100:.0f}% of step)"))
+    return rows

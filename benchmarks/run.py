@@ -1,0 +1,49 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only fig11]
+Prints ``name,us_per_call,derived`` CSV per row.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    from benchmarks import (beyond_paper, fig10_utilization,
+                            fig11_switch_overhead, fig12_traffic,
+                            fig15_storage, fig16_sw_opt, recompose,
+                            roofline, table2_models, table4_links)
+    modules = {
+        "table2": table2_models,
+        "table4": table4_links,
+        "fig10": fig10_utilization,
+        "fig11": fig11_switch_overhead,
+        "fig12": fig12_traffic,
+        "fig15": fig15_storage,
+        "fig16": fig16_sw_opt,
+        "beyond": beyond_paper,
+        "recompose": recompose,
+        "roofline": roofline,
+    }
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, mod in modules.items():
+        if args.only and args.only != name:
+            continue
+        try:
+            for row_name, us, derived in mod.run():
+                print(f"{row_name},{us:.1f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            failed += 1
+            print(f"{name}/ERROR,0.0,{type(e).__name__}: {e}",
+                  file=sys.stdout)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

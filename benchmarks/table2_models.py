@@ -1,0 +1,33 @@
+"""Table II: our re-implementations hit the published model characteristics."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+
+from repro.configs.paper_bench import (BERT_BASE, BERT_LARGE, MOBILENETV2,
+                                       RESNET50, YOLOV5L)
+from repro.models import vision
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+    expected = {"mobilenetv2": 3.4e6, "resnet50": 25.6e6, "yolov5l": 47e6}
+    for cfg in (MOBILENETV2, RESNET50, YOLOV5L):
+        t0 = time.perf_counter()
+        params = vision.init_vision(key, cfg)
+        n = vision.param_count(params)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"table2/{cfg.name}", us,
+                     f"params={n/1e6:.2f}M paper={expected[cfg.name]/1e6:.1f}M "
+                     f"err={abs(n-expected[cfg.name])/expected[cfg.name]*100:.1f}%"))
+    for cfg, exp in ((BERT_BASE, 110e6), (BERT_LARGE, 340e6)):
+        t0 = time.perf_counter()
+        n = cfg.param_count()
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"table2/{cfg.name}", us,
+                     f"params={n/1e6:.2f}M paper={exp/1e6:.0f}M "
+                     f"err={abs(n-exp)/exp*100:.1f}% depth={cfg.n_layers}"))
+    return rows

@@ -1,0 +1,32 @@
+"""Table IV: the composed-fabric link matrix (bandwidth, latency, ratios)."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+from repro.core.topology import (DEFAULT_LINKS, PAPER_FF_BW, PAPER_FL_BW,
+                                 PAPER_LL_BW, LinkClass)
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows = []
+    t0 = time.perf_counter()
+    ll = DEFAULT_LINKS[LinkClass.LOCAL]
+    ff = DEFAULT_LINKS[LinkClass.SWITCH]
+    fl = DEFAULT_LINKS[LinkClass.HOST]
+    us = (time.perf_counter() - t0) * 1e6
+    rows.append(("table4/L-L", us,
+                 f"bw={ll.bandwidth/1e9:.2f}GB/s lat={ll.latency*1e6:.2f}us "
+                 f"(paper {PAPER_LL_BW}GB/s NVLink -> TPU ICI)"))
+    rows.append(("table4/F-F", us,
+                 f"bw={ff.bandwidth/1e9:.2f}GB/s lat={ff.latency*1e6:.2f}us "
+                 f"ratio_vs_LL={ff.bandwidth/ll.bandwidth:.3f} "
+                 f"(paper {PAPER_FF_BW/PAPER_LL_BW:.3f})"))
+    rows.append(("table4/F-L", us,
+                 f"bw={fl.bandwidth/1e9:.2f}GB/s lat={fl.latency*1e6:.2f}us "
+                 f"ratio_vs_LL={fl.bandwidth/ll.bandwidth:.3f} "
+                 f"(paper {PAPER_FL_BW/PAPER_LL_BW:.3f})"))
+    ok = (ll.bandwidth > ff.bandwidth > fl.bandwidth)
+    rows.append(("table4/ordering", us,
+                 f"LL>FF>FL={'OK' if ok else 'VIOLATED'}"))
+    return rows

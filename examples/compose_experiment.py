@@ -1,0 +1,67 @@
+"""The paper's experiment as a library call: one workload, many fabrics.
+
+Builds the five Table-III compositions, prices a BERT-large-class training
+step on each, and prints the Fig-11 percent-overhead table — then shows
+the elastic path: fail devices, recompose, and carry on.
+
+    PYTHONPATH=src python examples/compose_experiment.py
+"""
+from repro.core import compose, costmodel
+from repro.core.recommend import recommend, recommend_from_measurements
+from repro.core.topology import LinkClass, make_pool
+from benchmarks.paper_model import PAPER_WORKLOADS, overhead_vs_local, \
+    step_time
+
+
+def main():
+    print("=== Table III compositions ===")
+    for label in compose.PRESET_LABELS:
+        sys_ = compose.preset(label)
+        links = {a: sys_.fabric.axis_links[a].value
+                 for a in sys_.axis_names}
+        print(f"{label:12s} mesh={dict(zip(sys_.axis_names, sys_.axis_sizes))} "
+              f"links={links} storage={sys_.fabric.storage.name}")
+
+    print("\n=== Fig 11: % training-time change vs localGPUs ===")
+    for w in sorted(PAPER_WORKLOADS, key=lambda w: w.params_paper):
+        hy = overhead_vs_local(w, "hybridGPUs")
+        fa = overhead_vs_local(w, "falconGPUs")
+        print(f"{w.name:12s} ({w.params_paper/1e6:6.0f}M params)  "
+              f"hybrid {hy:+6.1f}%   falcon {fa:+6.1f}%")
+
+    print("\n=== Elastic recomposition after failures ===")
+    pool = make_pool(n_local=300, n_switch=0, pods=1)
+    sys_ = compose.compose(pool, "prod", ("data", "model"), (16, 16),
+                           {"data": LinkClass.LOCAL,
+                            "model": LinkClass.LOCAL})
+    print(f"composed {sys_.n_devices} devices")
+    pool.mark_failed(list(sys_.device_uids[:10]))
+    sys2 = compose.recompose(pool, sys_)
+    print(f"10 devices failed -> recomposed from spares: "
+          f"{sys2.n_devices} devices, overlap with dead: "
+          f"{len(set(sys_.device_uids[:10]) & set(sys2.device_uids))}")
+    pool.mark_failed([d.uid for d in pool.devices[:80]])
+    sys3 = compose.shrink_to_pool(pool, sys2, "data")
+    print(f"80 more failed -> shrunk composition: "
+          f"{dict(zip(sys3.axis_names, sys3.axis_sizes))} "
+          f"(restore latest checkpoint onto the new mesh and continue)")
+
+
+def recommend_demo():
+    print("\n=== Topology recommendation (the paper's §VI future work) ===")
+    for arch, shape in (("mamba2-780m", "train_4k"),
+                        ("command-r-35b", "train_4k"),
+                        ("command-r-35b", "prefill_32k")):
+        cands = recommend(arch, shape, top=3)
+        best = recommend_from_measurements(
+            ["results/dryrun", "results/optimized"], arch, shape)
+        note = f" | measured best: {best.label} ({best.step_s*1e3:.0f}ms)" \
+            if best else ""
+        print(f"{arch:22s} {shape:12s} analytic: "
+              + ", ".join(f"{c.label}={c.step_s*1e3:.0f}ms"
+                          for c in cands) + note)
+
+
+if __name__ == "__main__":
+    main()
+    recommend_demo()

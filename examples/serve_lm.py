@@ -1,0 +1,24 @@
+"""Serving example: continuous batching over a reduced model.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch recurrentgemma-2b
+"""
+import argparse
+import sys
+
+from repro.launch import serve as serve_cli
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--requests", type=int, default=8)
+    args = ap.parse_args()
+    sys.argv = ["serve", "--arch", args.arch,
+                "--requests", str(args.requests),
+                "--slots", "4", "--prompt-len", "24",
+                "--max-new", "12", "--max-seq", "96"]
+    return serve_cli.main()
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

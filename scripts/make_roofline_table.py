@@ -1,0 +1,31 @@
+"""Render EXPERIMENTS.md §Roofline tables from results/dryrun/*.json."""
+import glob
+import json
+import os
+import sys
+
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def main(results="results/dryrun", mesh="single"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(results, f"*__{mesh}.json"))):
+        js = json.load(open(path))
+        rl = js["roofline"]
+        rows.append((js["arch"], js["shape"], rl))
+    rows.sort(key=lambda r: (r[0], ORDER.index(r[1])))
+    print("| arch | shape | compute | memory (hlo) | collective | dominant"
+          " | MODEL/HLO | fraction |")
+    print("|---|---|---|---|---|---|---|---|")
+    for arch, shape, rl in rows:
+        print(f"| {arch} | {shape} "
+              f"| {rl['compute_s']*1e3:8.1f}ms "
+              f"| {rl['memory_s']*1e3:7.1f}ms ({rl['memory_hlo_s']*1e3:.0f}) "
+              f"| {rl['collective_s']*1e3:9.1f}ms "
+              f"| {rl['dominant']} "
+              f"| {rl['useful_ratio']:.2f} "
+              f"| {rl['roofline_fraction']:.3f} |")
+
+
+if __name__ == "__main__":
+    main(*(sys.argv[1:] or []))

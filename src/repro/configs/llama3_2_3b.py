@@ -1,0 +1,20 @@
+"""llama3.2-3b [dense] — small llama3. 28L d_model=3072, 24H (GQA kv=8),
+d_ff=8192, vocab=128256. hf:meta-llama/Llama-3.2-3B family."""
+from repro.configs.base import ModelConfig, ATTN
+
+CONFIG = ModelConfig(
+    name="llama3.2-3b",
+    family="dense",
+    n_layers=28,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab_size=128256,
+    block_pattern=(ATTN,) * 28,
+    act="swiglu",
+    norm="rmsnorm",
+    rope_theta=500000.0,
+    tie_embeddings=True,
+    source="hf:meta-llama/Llama-3.2-1B (scaled per assignment)",
+)

@@ -1,0 +1,221 @@
+"""Composition layer: DevicePool -> ComposedSystem (logical mesh + fabric).
+
+A ``ComposedSystem`` is the paper's "host configuration" (Table III): a
+selection of pool devices arranged into a named-axis logical mesh, plus the
+link class each axis rides on and the storage tier feeding the input
+pipeline.  The same model program runs unmodified on any composition; only
+the fabric pricing (and thus the roofline collective term) changes — which
+is exactly the experiment the paper runs on its Falcon chassis.
+
+Composable operations:
+  * ``compose(...)``           — build a system from the pool
+  * ``recompose(...)``         — swap fabric/axes after failure or resize
+  * ``PRESETS``                — the paper's five Table III configurations
+  * ``ComposedSystem.mesh()``  — materialize a ``jax.Mesh`` over real
+                                 (or ``xla_force_host_platform``) devices
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.topology import (
+    DEFAULT_LINKS, LOCAL_NVME, SWITCH_NVME, ChipSpec, DevicePool, FabricSpec,
+    LinkClass, LinkSpec, StorageSpec, make_pool)
+
+
+@dataclasses.dataclass(frozen=True)
+class ComposedSystem:
+    """A logical machine composed from the pool.
+
+    ``axis_names``/``axis_sizes`` define the logical mesh; ``fabric`` prices
+    every axis; ``device_uids`` records which pool devices were claimed (for
+    elastic recomposition and failure handling).
+    """
+    name: str
+    axis_names: Tuple[str, ...]
+    axis_sizes: Tuple[int, ...]
+    fabric: FabricSpec
+    device_uids: Tuple[int, ...] = ()
+    chip: ChipSpec = ChipSpec()
+
+    # ------------------------------------------------------------ derived --
+    @property
+    def n_devices(self) -> int:
+        return int(np.prod(self.axis_sizes))
+
+    @property
+    def shape(self) -> Dict[str, int]:
+        return dict(zip(self.axis_names, self.axis_sizes))
+
+    def axis_size(self, axis: str) -> int:
+        return self.shape[axis]
+
+    # --------------------------------------------------------------- mesh --
+    def mesh(self, devices=None):
+        """Materialize a ``jax.Mesh``.
+
+        ``devices``: optional explicit device list (tests); defaults to
+        ``jax.devices()`` — which is 512 host devices inside the dry-run
+        (XLA_FLAGS set there) and 1 CPU device elsewhere.
+        """
+        import jax
+        if devices is None:
+            return jax.make_mesh(self.axis_sizes, self.axis_names)
+        arr = np.asarray(devices)[: self.n_devices].reshape(self.axis_sizes)
+        return jax.sharding.Mesh(arr, self.axis_names)
+
+    def abstract_mesh(self):
+        """Mesh of abstract devices — lowering without device state."""
+        import jax
+        return jax.sharding.AbstractMesh(self.axis_sizes, self.axis_names)
+
+    # ----------------------------------------------------------- pricing --
+    def axis_bandwidth(self, axis: str) -> float:
+        return self.fabric.bandwidth(axis)
+
+    def collective_time(self, axis: str, nbytes: float,
+                        kind: str = "all-reduce") -> float:
+        """Ring-collective time for ``nbytes`` (per-device payload) on
+        ``axis``. Standard ring costs on n participants."""
+        n = self.axis_size(axis)
+        if n <= 1:
+            return 0.0
+        link = self.fabric.link(axis)
+        factor = {
+            "all-reduce": 2.0 * (n - 1) / n,
+            "all-gather": (n - 1) / n,
+            "reduce-scatter": (n - 1) / n,
+            "all-to-all": (n - 1) / n,
+            "collective-permute": 1.0,
+        }[kind]
+        return factor * nbytes / link.bandwidth + (n - 1) * link.latency
+
+
+# ---------------------------------------------------------------------------
+# composition / recomposition
+# ---------------------------------------------------------------------------
+class CompositionError(RuntimeError):
+    pass
+
+
+def compose(pool: DevicePool, name: str,
+            axis_names: Sequence[str], axis_sizes: Sequence[int],
+            axis_links: Mapping[str, LinkClass],
+            storage: StorageSpec = LOCAL_NVME,
+            prefer_fabric: Optional[LinkClass] = None) -> ComposedSystem:
+    """Claim devices from the pool and build a ComposedSystem.
+
+    Devices are taken domain-major so that the *innermost* (fastest-varying)
+    axes land inside a single locality domain — mirroring how the paper
+    keeps NVLink cliques intact and spans the falcon switch only on the
+    outer axis.
+    """
+    n = int(np.prod(list(axis_sizes)))
+    healthy = pool.healthy()
+    if prefer_fabric is not None:
+        ordered = ([d for d in healthy if d.fabric == prefer_fabric]
+                   + [d for d in healthy if d.fabric != prefer_fabric])
+    else:
+        ordered = sorted(healthy, key=lambda d: (d.domain, d.fabric.value,
+                                                 d.uid))
+    if len(ordered) < n:
+        raise CompositionError(
+            f"pool has {len(ordered)} healthy devices; composition "
+            f"{name!r} needs {n}")
+    claimed = tuple(d.uid for d in ordered[:n])
+    fabric = FabricSpec(dict(axis_links), dict(pool.links), storage)
+    return ComposedSystem(name, tuple(axis_names), tuple(axis_sizes),
+                          fabric, claimed)
+
+
+def recompose(pool: DevicePool, system: ComposedSystem, *,
+              axis_sizes: Optional[Sequence[int]] = None,
+              axis_links: Optional[Mapping[str, LinkClass]] = None,
+              storage: Optional[StorageSpec] = None) -> ComposedSystem:
+    """Re-build ``system`` after pool change (failure, attach, resize).
+
+    This is the paper's dynamic re-allocation: the logical machine is
+    re-formed from whatever healthy devices remain; training resumes from
+    the latest checkpoint (see ``repro.train.elastic``).
+    """
+    sizes = tuple(axis_sizes or system.axis_sizes)
+    links = dict(axis_links or system.fabric.axis_links)
+    st = storage or system.fabric.storage
+    return compose(pool, system.name, system.axis_names, sizes, links, st)
+
+
+def shrink_to_pool(pool: DevicePool, system: ComposedSystem,
+                   shrink_axis: str) -> ComposedSystem:
+    """Elastic downsize: halve ``shrink_axis`` until the composition fits
+    the healthy pool (node-failure recovery policy)."""
+    sizes = dict(zip(system.axis_names, system.axis_sizes))
+    n_healthy = len(pool.healthy())
+    while int(np.prod(list(sizes.values()))) > n_healthy:
+        if sizes[shrink_axis] <= 1:
+            raise CompositionError("cannot shrink further")
+        sizes[shrink_axis] //= 2
+    return recompose(pool, system,
+                     axis_sizes=[sizes[a] for a in system.axis_names])
+
+
+# ---------------------------------------------------------------------------
+# Table III presets (the paper's five host configurations, TPU-rendered)
+# ---------------------------------------------------------------------------
+def preset(label: str, *, data: int = 16, model: int = 16,
+           pods: int = 1) -> ComposedSystem:
+    """The paper's Table III configurations on the production mesh.
+
+    | paper label  | rendering                                             |
+    |--------------|-------------------------------------------------------|
+    | localGPUs    | both axes on LOCAL ICI, local NVMe                    |
+    | hybridGPUs   | model axis LOCAL, data axis SWITCH (half the machine  |
+    |              | behind the composed fabric), local NVMe               |
+    | falconGPUs   | both axes SWITCH (whole machine composed), local NVMe |
+    | localNVMe    | localGPUs + explicit local NVMe tier                  |
+    | falconNVMe   | localGPUs + switch-attached NVMe tier                 |
+
+    ``pods=2`` adds the "pod" axis on DCN (the multi-pod production mesh).
+    """
+    configs: Dict[str, Tuple[Dict[str, LinkClass], StorageSpec]] = {
+        "localGPUs": ({"data": LinkClass.LOCAL, "model": LinkClass.LOCAL},
+                      LOCAL_NVME),
+        "hybridGPUs": ({"data": LinkClass.SWITCH, "model": LinkClass.LOCAL},
+                       LOCAL_NVME),
+        "falconGPUs": ({"data": LinkClass.SWITCH, "model": LinkClass.SWITCH},
+                       LOCAL_NVME),
+        "localNVMe": ({"data": LinkClass.LOCAL, "model": LinkClass.LOCAL},
+                      LOCAL_NVME),
+        "falconNVMe": ({"data": LinkClass.LOCAL, "model": LinkClass.LOCAL},
+                       SWITCH_NVME),
+    }
+    if label not in configs:
+        raise KeyError(f"unknown preset {label!r}; known: {sorted(configs)}")
+    axis_links, storage = configs[label]
+    names: Tuple[str, ...] = ("data", "model")
+    sizes: Tuple[int, ...] = (data, model)
+    if pods > 1:
+        names = ("pod",) + names
+        sizes = (pods,) + sizes
+        axis_links = dict(axis_links, pod=LinkClass.DCN)
+    pool = make_pool(n_local=pods * data * model,
+                     n_switch=pods * data * model, pods=max(pods, 1))
+    want = (LinkClass.SWITCH if all(
+        v == LinkClass.SWITCH for k, v in axis_links.items() if k != "pod")
+        else LinkClass.LOCAL)
+    sys_ = compose(pool, label, names, sizes, axis_links, storage,
+                   prefer_fabric=want)
+    return sys_
+
+
+PRESET_LABELS = ("localGPUs", "hybridGPUs", "falconGPUs", "localNVMe",
+                 "falconNVMe")
+
+
+def production_system(multi_pod: bool = False,
+                      label: str = "localGPUs") -> ComposedSystem:
+    """The production mesh: 16x16 single-pod or 2x16x16 multi-pod."""
+    return preset(label, data=16, model=16, pods=2 if multi_pod else 1)

@@ -1,0 +1,322 @@
+"""Sharding-policy engine: PolicyConfig -> PartitionSpecs for every tensor.
+
+This is the software ladder the paper measures in §V-4, rendered as
+PartitionSpec generation:
+
+  * DP   (paper "Data Parallel")            — ``zero_stage=0``: params and
+    optimizer state replicated; batch over the dp axes; gradients
+    all-reduced (the master-GPU broadcast of DP is priced by the cost model
+    as a full-size broadcast+reduce on the fabric).
+  * DDP  (paper "Distributed Data Parallel") — same placement, but gradient
+    reduction is bucketed/overlappable (scan-inside psum; see trainer).
+  * mixed precision                          — ``compute_dtype=bf16``.
+  * sharded (paper "sharded training", ZeRO) — ``zero_stage=1``: optimizer
+    state sharded over fsdp axes; ``zero_stage=3``: parameters too.
+
+Tensor-parallel / expert-parallel / sequence-parallel sharding ride the
+``model`` axis and are orthogonal knobs (beyond-paper optimizations).
+
+The engine is rule-based: a leaf's path + shape select a TP dim and an FSDP
+dim; anything small or indivisible is replicated.  Divisibility is always
+checked against the mesh axis sizes so that one policy serves every
+(architecture x mesh) cell.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Mapping, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, PolicyConfig
+
+
+# ---------------------------------------------------------------------------
+# small helpers
+# ---------------------------------------------------------------------------
+def _prod(xs) -> int:
+    out = 1
+    for x in xs:
+        out *= int(x)
+    return out
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def axis_entry_size(entry, mesh_axes: Mapping[str, int]) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, str):
+        return mesh_axes[entry]
+    return _prod(mesh_axes[a] for a in entry)
+
+
+# ---------------------------------------------------------------------------
+# parameter sharding rules
+# ---------------------------------------------------------------------------
+# (regex over path, preferred TP dim index *after* any leading stack dim).
+# -1 means last dim. None means "never TP-shard".
+_TP_RULES: Tuple[Tuple[str, Optional[int]], ...] = (
+    (r"moe/w[igo]$", 0),            # expert dim (EP)
+    (r"moe/router$", None),
+    (r"attn/wq$", 1),               # (d, H, hd) -> heads
+    (r"attn/w[kv]$", 1),            # (d, K, hd) -> kv heads
+    (r"attn/wo$", 0),               # (H, hd, d) -> heads
+    (r"attn/b[qkv]$", 0),
+    (r"(mlp|shared)/w[ig]$", -1),   # (d, F) -> hidden
+    (r"(mlp|shared)/wo$", 0),       # (F, d) -> hidden
+    (r"(embed|head)/table$", 0),    # (V, d) -> vocab
+    (r"pos_embed$", None),
+    (r"ssm/in_[zx]$", -1),          # (d, d_in) -> inner dim (heads x P)
+    (r"ssm/in_(b|c|dt)$", None),    # grouped B/C + dt: small, replicate
+    (r"ssm/out_proj$", 0),          # (d_in, d)
+    (r"ssm/conv_\w+$", -1),
+    (r"rglru/in_(gate|rec)$", -1),  # (d, W)
+    (r"rglru/out_proj$", 0),
+    (r"rglru/conv_[wb]$", -1),
+    (r"rglru/(wa|wx)$", None),      # block-diag gates: small, replicate
+                                    # (TP-sharding the bs contraction was
+                                    # tried: partial-sum all-reduces of the
+                                    # fp32 stream cost MORE than the gather
+                                    # it saves — see EXPERIMENTS.md §Perf)
+    (r"norm", None),
+)
+
+_REPLICATE_BELOW = 1 << 16          # leaves smaller than 64K elems replicate
+
+
+def _pick_tp_dim(pstr: str, shape: Tuple[int, ...], skip: int,
+                 tp_size: int) -> Optional[int]:
+    """Dim index (absolute) to shard over the tp axis, or None."""
+    for pat, dim in _TP_RULES:
+        if re.search(pat, pstr):
+            if dim is None:
+                return None
+            d = dim if dim >= 0 else len(shape) - 1
+            d = d + skip if dim >= 0 else d
+            if d < len(shape) and d >= skip and shape[d] % tp_size == 0:
+                return d
+            break   # rule matched but indivisible -> generic fallback
+    # generic: largest divisible dim (excluding stack dims)
+    cands = [(shape[d], d) for d in range(skip, len(shape))
+             if shape[d] % tp_size == 0]
+    if not cands:
+        return None
+    size, d = max(cands)
+    return d if size >= tp_size else None
+
+
+def _pick_fsdp_dim(shape: Tuple[int, ...], skip: int, taken: Optional[int],
+                   fsdp_size: int) -> Optional[int]:
+    cands = [(shape[d], d) for d in range(skip, len(shape))
+             if d != taken and shape[d] % fsdp_size == 0]
+    if not cands:
+        return None
+    size, d = max(cands)
+    return d if size >= fsdp_size else None
+
+
+def _stack_skip(pstr: str, cfg: ModelConfig) -> int:
+    """1 if this param carries a leading scan-stacked layer dim."""
+    m = re.match(r"stack/seg(\d+)/", pstr)
+    if not m:
+        return 0
+    from repro.models.transformer import plan_segments
+    segs = plan_segments(cfg.pattern)
+    si = int(m.group(1))
+    return 1 if si < len(segs) and segs[si][1] > 1 else 0
+
+
+def param_spec(pstr: str, shape: Tuple[int, ...], cfg: ModelConfig,
+               policy: PolicyConfig, mesh_axes: Mapping[str, int],
+               *, shard_fsdp: bool, is_opt: bool = False) -> P:
+    """PartitionSpec for one parameter leaf."""
+    if _prod(shape) < _REPLICATE_BELOW:
+        return P()
+    skip = _stack_skip(pstr, cfg)
+    entries: list = [None] * len(shape)
+
+    tp = policy.tp_axis
+    tp_size = mesh_axes.get(tp, 1) if tp else 1
+    tp_dim = None
+    if tp and tp_size > 1:
+        tp_dim = _pick_tp_dim(pstr, shape, skip, tp_size)
+        if tp_dim is not None:
+            entries[tp_dim] = tp
+
+    # vocab tables (params only): V over tp only — FSDP-sharding the D
+    # (contraction) dim turns every logits chunk into a full fp32
+    # partial-sum all-reduce over data (62 GiB/step measured on
+    # command-r).  Optimizer/master states never feed a matmul, so they
+    # keep the full fsdp sharding for memory.
+    if (not is_opt and tp_dim is not None
+            and re.search(r"(embed|head)/table$", pstr)):
+        return P(*entries)
+
+    if shard_fsdp and policy.fsdp_axes:
+        fs = tuple(a for a in policy.fsdp_axes if mesh_axes.get(a, 1) > 1)
+        if fs:
+            fsdp_size = _prod(mesh_axes[a] for a in fs)
+            fd = _pick_fsdp_dim(shape, skip, tp_dim, fsdp_size)
+            if fd is not None:
+                entries[fd] = fs if len(fs) > 1 else fs[0]
+    return P(*entries)
+
+
+def param_specs(params: Any, cfg: ModelConfig, policy: PolicyConfig,
+                mesh_axes: Mapping[str, int]) -> Any:
+    """Pytree of PartitionSpecs matching ``params``."""
+    shard = policy.zero_stage >= 3
+
+    def leaf(path, a):
+        return param_spec(_path_str(path), tuple(a.shape), cfg, policy,
+                          mesh_axes, shard_fsdp=shard)
+    return jax.tree_util.tree_map_with_path(leaf, params)
+
+
+def opt_state_specs(params: Any, cfg: ModelConfig, policy: PolicyConfig,
+                    mesh_axes: Mapping[str, int]) -> Any:
+    """Adam moment sharding: ZeRO-1+ shards optimizer state even when the
+    params themselves are replicated (paper's "sharded training")."""
+    shard = policy.zero_stage >= 1
+
+    def leaf(path, a):
+        return param_spec(_path_str(path), tuple(a.shape), cfg, policy,
+                          mesh_axes, shard_fsdp=shard, is_opt=True)
+    return jax.tree_util.tree_map_with_path(leaf, params)
+
+
+# ---------------------------------------------------------------------------
+# batch / activation / cache sharding
+# ---------------------------------------------------------------------------
+def dp_spec_for_batch(batch: int, policy: PolicyConfig,
+                      mesh_axes: Mapping[str, int]):
+    """The batch-dim entry: the largest prefix of dp axes that divides."""
+    axes = [a for a in policy.dp_axes if mesh_axes.get(a, 1) > 1]
+    while axes and batch % _prod(mesh_axes[a] for a in axes):
+        axes = axes[1:]      # drop outermost (pod) first
+    if not axes:
+        return None
+    return tuple(axes) if len(axes) > 1 else axes[0]
+
+
+def batch_specs(example: Any, policy: PolicyConfig,
+                mesh_axes: Mapping[str, int], *,
+                seq_axis: Optional[str] = None) -> Any:
+    """Specs for a batch pytree: dim0 = batch over dp axes; optional
+    sequence sharding of dim1 over ``seq_axis`` (context parallel)."""
+    def leaf(a):
+        if a.ndim == 0:
+            return P()
+        dp = dp_spec_for_batch(a.shape[0], policy, mesh_axes)
+        entries: list = [dp] + [None] * (a.ndim - 1)
+        if (seq_axis and a.ndim >= 2
+                and a.shape[1] % mesh_axes.get(seq_axis, 1) == 0
+                and a.shape[1] >= 2 * mesh_axes.get(seq_axis, 1)):
+            entries[1] = seq_axis
+        return P(*entries)
+    return jax.tree.map(leaf, example)
+
+
+def cache_specs(caches: Any, policy: PolicyConfig,
+                mesh_axes: Mapping[str, int]) -> Any:
+    """Decode-cache sharding.
+
+    Attention k/v (..., B, W, K, D): batch over dp; cache length W over the
+    tp axis (flash-decode style — avoids materializing a gathered cache,
+    which for 32k x 128 would exceed HBM).  ``pos`` (..., B, W) follows W.
+    SSM/RGLRU states: batch over dp; channel dims over tp where divisible.
+    Leading stacked-layer dims (scan segments) are never sharded.
+    """
+    tp = policy.tp_axis
+    tp_size = mesh_axes.get(tp, 1) if tp else 1
+
+    def leaf(path, a):
+        pstr = _path_str(path)
+        # find batch dim: stacked caches have a leading layer dim
+        skip = 1 if re.search(r"seg\d+/slot\d+", pstr) and a.ndim >= 1 and \
+            _is_stacked(pstr) else 0
+        entries: list = [None] * a.ndim
+        bdim = skip
+        if a.ndim > bdim:
+            entries[bdim] = dp_spec_for_batch(a.shape[bdim], policy,
+                                              mesh_axes)
+        if tp and tp_size > 1 and a.ndim > bdim + 1:
+            if re.search(r"/(k|v|pos)$", pstr):
+                wdim = bdim + 1
+                if a.shape[wdim] % tp_size == 0 and a.shape[wdim] >= 2 * tp_size:
+                    entries[wdim] = tp
+            else:
+                cands = [(a.shape[d], d) for d in range(bdim + 1, a.ndim)
+                         if a.shape[d] % tp_size == 0
+                         and a.shape[d] >= 2 * tp_size]
+                if cands:
+                    entries[max(cands)[1]] = tp
+        return P(*entries)
+
+    # stacked-ness: infer from shape bookkeeping done by the caller is
+    # overkill; caches built by init_stack_cache broadcast a leading k dim
+    # for scanned segments. We detect via path later if needed; default to
+    # treating dim0 as layer when the sub-path has seg/slot and ndim>=3.
+    return jax.tree_util.tree_map_with_path(leaf, caches)
+
+
+def _is_stacked(pstr: str) -> bool:
+    # caches under segN/slotM are stacked iff the segment scans (k>1); the
+    # caller cannot cheaply know k here, but stacked caches always have the
+    # layer dim first and batch second — and batch-first unstacked caches
+    # appear only for k==1 segments whose batch dim then gets the dp spec at
+    # dim 0 anyway. Treat "seg*/slot*" with >=3 dims as stacked.
+    return True
+
+
+def logits_spec(policy: PolicyConfig, mesh_axes: Mapping[str, int],
+                batch: int) -> P:
+    dp = dp_spec_for_batch(batch, policy, mesh_axes)
+    tp = policy.tp_axis if mesh_axes.get(policy.tp_axis or "", 1) > 1 else None
+    return P(dp, None, tp)
+
+
+# ---------------------------------------------------------------------------
+# activation constraints (used inside the model when a mesh is active)
+# ---------------------------------------------------------------------------
+def constrain(x, spec: Optional[P]):
+    """with_sharding_constraint that is a no-op without a mesh context."""
+    if spec is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x
+
+
+# ---------------------------------------------------------------------------
+# the paper's software-optimization ladder as named policies
+# ---------------------------------------------------------------------------
+def ladder(policy: PolicyConfig) -> Dict[str, PolicyConfig]:
+    """Fig-16 ladder: DP -> DDP -> +mixed precision -> +ZeRO sharding."""
+    import dataclasses
+    base = dataclasses.replace(policy, zero_stage=0,
+                               compute_dtype="float32",
+                               hierarchical_allreduce=False)
+    return {
+        "DP": base,
+        "DDP": dataclasses.replace(base, hierarchical_allreduce=True),
+        "DDP+mixed": dataclasses.replace(base, compute_dtype="bfloat16",
+                                         hierarchical_allreduce=True),
+        "DDP+mixed+sharded": dataclasses.replace(
+            base, compute_dtype="bfloat16", hierarchical_allreduce=True,
+            zero_stage=3),
+    }

@@ -1,0 +1,246 @@
+"""Composable-fabric topology model (the Falcon-4016 analogue, TPU-native).
+
+The paper's object of study is a *pool* of devices behind a switching fabric
+with heterogeneous link classes (NVLink local vs PCIe-switch "falcon" links,
+Table IV).  On TPU the same object is a fleet of chips joined by link classes
+of very different bandwidth:
+
+  * ``LOCAL``    — intra-pod ICI (the NVLink analogue)
+  * ``SWITCH``   — optically-switched / cross-drawer ICI at the paper's
+                   measured falcon-to-falcon ratio (the Falcon PCIe analogue)
+  * ``HOST``     — chip <-> host staging (the falcon-to-local ratio)
+  * ``DCN``      — data-center network between pods
+
+This module is pure data + arithmetic (no jax device state): it defines the
+link classes, the device pool, and the ``FabricSpec`` that ``compose.py``
+turns into logical meshes.  All bandwidth constants derive from the v5e
+hardware targets given for this project, scaled by the paper's measured
+Table IV ratios so the *relative* fabric economics of the paper carry over.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+from typing import Dict, FrozenSet, List, Mapping, Optional, Sequence, Tuple
+
+
+# ---------------------------------------------------------------------------
+# Hardware constants (TPU v5e targets for this project)
+# ---------------------------------------------------------------------------
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link, intra-pod (LOCAL class)
+
+# Paper Table IV (GB/s bidirectional): L-L 72.37, F-L 19.64, F-F 24.47.
+# We carry the measured *ratios* onto the TPU link classes.
+PAPER_LL_BW = 72.37
+PAPER_FL_BW = 19.64
+PAPER_FF_BW = 24.47
+
+SWITCH_RATIO = PAPER_FF_BW / PAPER_LL_BW       # ~0.338
+HOST_RATIO = PAPER_FL_BW / PAPER_LL_BW         # ~0.271
+
+# Paper Table IV P2P write latency (us): L-L 1.85, F-L 2.66, F-F 2.08.
+PAPER_LL_LAT = 1.85e-6
+PAPER_FL_LAT = 2.66e-6
+PAPER_FF_LAT = 2.08e-6
+
+
+class LinkClass(str, enum.Enum):
+    """A class of interconnect with fixed bandwidth/latency character."""
+    LOCAL = "local"        # intra-pod ICI          (paper: NVLink L-L)
+    SWITCH = "switch"      # switched/composed ICI  (paper: Falcon F-F)
+    HOST = "host"          # chip<->host staging    (paper: F-L)
+    DCN = "dcn"            # cross-pod network
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkSpec:
+    """Bandwidth/latency of one link class (per chip, per direction)."""
+    cls: LinkClass
+    bandwidth: float               # bytes/s per chip on this fabric
+    latency: float                 # seconds, per hop
+
+    def time(self, nbytes: float, hops: int = 1) -> float:
+        return nbytes / self.bandwidth + hops * self.latency
+
+
+# Default link table: LOCAL carries full ICI speed; SWITCH/HOST carry the
+# paper's measured fabric ratios; DCN is the conventional 6.25 GB/s/chip
+# cross-pod figure.
+DEFAULT_LINKS: Dict[LinkClass, LinkSpec] = {
+    LinkClass.LOCAL: LinkSpec(LinkClass.LOCAL, ICI_BW, PAPER_LL_LAT),
+    LinkClass.SWITCH: LinkSpec(LinkClass.SWITCH, ICI_BW * SWITCH_RATIO,
+                               PAPER_FF_LAT),
+    LinkClass.HOST: LinkSpec(LinkClass.HOST, ICI_BW * HOST_RATIO,
+                             PAPER_FL_LAT),
+    LinkClass.DCN: LinkSpec(LinkClass.DCN, 6.25e9, 10e-6),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    """Compute/memory character of one accelerator chip."""
+    name: str = "tpu-v5e"
+    peak_flops_bf16: float = PEAK_FLOPS_BF16
+    hbm_bytes: float = 16e9
+    hbm_bw: float = HBM_BW
+    vmem_bytes: float = 128 * 2 ** 20
+
+
+@dataclasses.dataclass(frozen=True)
+class StorageSpec:
+    """A storage tier (the paper's local vs falcon-attached NVMe)."""
+    name: str
+    read_bw: float                 # bytes/s sustained sequential read
+    attach: LinkClass              # which fabric it sits behind
+
+    def effective_read_bw(self, links: Mapping[LinkClass, LinkSpec]) -> float:
+        """Read bandwidth after the attach fabric's ceiling."""
+        return min(self.read_bw, links[self.attach].bandwidth)
+
+
+# NVMe constants: 4TB enterprise NVMe ~3.2 GB/s sequential read (paper's
+# Intel SSDPEDKX040T7 class device).
+LOCAL_NVME = StorageSpec("local-nvme", 3.2e9, LinkClass.LOCAL)
+SWITCH_NVME = StorageSpec("falcon-nvme", 3.2e9, LinkClass.SWITCH)
+
+
+# ---------------------------------------------------------------------------
+# Device pool (what the management plane owns)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Device:
+    """One poolable accelerator.
+
+    ``fabric``: which link class connects it to its neighbours in the same
+    domain.  ``domain``: failure/locality domain id (a "drawer" / pod slice);
+    devices in the same domain talk over ``fabric``; devices in different
+    domains talk over the slower of the two fabrics (or DCN across pods).
+    """
+    uid: int
+    fabric: LinkClass
+    domain: int
+    healthy: bool = True
+    chip: ChipSpec = ChipSpec()
+
+
+@dataclasses.dataclass
+class DevicePool:
+    """The pool of composable devices + storage (the chassis inventory).
+
+    The pool is mutable: devices can fail (``mark_failed``), be repaired,
+    attached or detached — ``compose.py`` snapshots the healthy set when
+    building a ``ComposedSystem``.
+    """
+    devices: List[Device]
+    storage: List[StorageSpec] = dataclasses.field(
+        default_factory=lambda: [LOCAL_NVME, SWITCH_NVME])
+    links: Dict[LinkClass, LinkSpec] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_LINKS))
+
+    # ------------------------------------------------------------- query --
+    def healthy(self) -> List[Device]:
+        return [d for d in self.devices if d.healthy]
+
+    def by_fabric(self, cls: LinkClass) -> List[Device]:
+        return [d for d in self.healthy() if d.fabric == cls]
+
+    def domains(self) -> Dict[int, List[Device]]:
+        out: Dict[int, List[Device]] = {}
+        for d in self.healthy():
+            out.setdefault(d.domain, []).append(d)
+        return out
+
+    # ----------------------------------------------------------- mutate ---
+    def mark_failed(self, uids: Sequence[int]) -> None:
+        bad = set(uids)
+        self.devices = [
+            dataclasses.replace(d, healthy=False) if d.uid in bad else d
+            for d in self.devices]
+
+    def repair(self, uids: Sequence[int]) -> None:
+        good = set(uids)
+        self.devices = [
+            dataclasses.replace(d, healthy=True) if d.uid in good else d
+            for d in self.devices]
+
+    def attach(self, n: int, fabric: LinkClass, domain: int) -> List[int]:
+        """Hot-add ``n`` devices on ``fabric`` (paper: attach resource)."""
+        start = max((d.uid for d in self.devices), default=-1) + 1
+        new = [Device(start + i, fabric, domain) for i in range(n)]
+        self.devices.extend(new)
+        return [d.uid for d in new]
+
+    def detach(self, uids: Sequence[int]) -> None:
+        drop = set(uids)
+        self.devices = [d for d in self.devices if d.uid not in drop]
+
+    # ------------------------------------------------------------ fabric --
+    def link_between(self, a: Device, b: Device) -> LinkSpec:
+        """Effective link for traffic a<->b (the Table IV lookup)."""
+        if a.domain == b.domain and a.fabric == b.fabric:
+            return self.links[a.fabric]
+        if a.fabric != b.fabric:
+            # crossing fabrics goes through the host root complex (F-L)
+            return self.links[LinkClass.HOST]
+        # same fabric, different domain: pod boundary -> DCN
+        return self.links[LinkClass.DCN]
+
+
+def make_pool(n_local: int = 256, n_switch: int = 256,
+              pods: int = 2) -> DevicePool:
+    """Build the production pool: ``pods`` domains of local-fabric chips plus
+    an equal tranche of switch-attached (composable) chips.
+
+    The single-pod production mesh (16x16=256) draws from one local domain;
+    the multi-pod mesh (2x16x16=512) spans two domains over the DCN/pod axis
+    — the TPU rendering of "host + falcon drawers".
+    """
+    devs: List[Device] = []
+    uid = itertools.count()
+    per_pod = n_local // pods
+    for p in range(pods):
+        devs += [Device(next(uid), LinkClass.LOCAL, p)
+                 for _ in range(per_pod)]
+    per_pod_sw = n_switch // pods
+    for p in range(pods):
+        devs += [Device(next(uid), LinkClass.SWITCH, p)
+                 for _ in range(per_pod_sw)]
+    return DevicePool(devs)
+
+
+# ---------------------------------------------------------------------------
+# FabricSpec: the axis -> link-class map of a composed mesh
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class FabricSpec:
+    """Which link class each logical mesh axis rides on.
+
+    This is the heart of the paper's experiment: the *same* program priced
+    on different fabrics.  ``axis_links["data"] = LinkClass.SWITCH`` is the
+    falconGPUs configuration; ``LOCAL`` everywhere is localGPUs.
+    """
+    axis_links: Mapping[str, LinkClass]
+    links: Mapping[LinkClass, LinkSpec] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_LINKS))
+    storage: StorageSpec = LOCAL_NVME
+
+    def bandwidth(self, axis: str) -> float:
+        return self.links[self.axis_links[axis]].bandwidth
+
+    def latency(self, axis: str) -> float:
+        return self.links[self.axis_links[axis]].latency
+
+    def link(self, axis: str) -> LinkSpec:
+        return self.links[self.axis_links[axis]]
+
+    def with_axis(self, axis: str, cls: LinkClass) -> "FabricSpec":
+        m = dict(self.axis_links)
+        m[axis] = cls
+        return dataclasses.replace(self, axis_links=m)
+
+    def slowest(self) -> LinkSpec:
+        return min((self.links[c] for c in self.axis_links.values()),
+                   key=lambda l: l.bandwidth)

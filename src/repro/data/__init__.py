@@ -1,0 +1,2 @@
+from repro.data.pipeline import (Prefetcher, StorageModel,  # noqa: F401
+                                 SyntheticDataset, input_stall, make_batch)

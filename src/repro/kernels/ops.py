@@ -1,0 +1,55 @@
+"""Jit'd dispatch wrappers: ``impl="pallas" | "xla"`` per kernel.
+
+The XLA path is the lowering used on CPU (dry-run) and the differentiable
+training path; the Pallas path is the TPU-target hot-spot implementation,
+validated in interpret mode (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rglru as _rg
+from repro.kernels import ssd as _ssd
+from repro.models.attention import flash_attention_xla
+from repro.models.rglru import rglru_scan
+from repro.models.ssm import ssd_chunked
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "impl", "block_q", "block_k",
+    "interpret"))
+def attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+              impl="pallas", block_q=256, block_k=256, interpret=True):
+    """impl: "pallas" (fwd kernel), "pallas_vjp" (fwd+bwd kernels,
+    differentiable — the TPU training path), "xla" (pure-JAX)."""
+    if impl == "pallas":
+        return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                                   softcap=softcap, block_q=block_q,
+                                   block_k=block_k, interpret=interpret)
+    if impl == "pallas_vjp":
+        from repro.kernels.flash_attention_bwd import flash_attention_vjp
+        return flash_attention_vjp(q, k, v, causal, window, softcap,
+                                   block_q, block_k, interpret)
+    return flash_attention_xla(q, k, v, causal=causal, window=window,
+                               softcap=softcap, q_block=block_q,
+                               kv_block=block_k)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl", "interpret"))
+def ssd(x, dt, A, Bm, Cm, *, chunk=256, impl="pallas", interpret=True):
+    if impl == "pallas":
+        return _ssd.ssd(x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)
+    return ssd_chunked(x, dt, A, Bm, Cm, chunk=chunk)
+
+
+@functools.partial(jax.jit, static_argnames=("block_seq", "impl",
+                                             "interpret"))
+def rglru(log_a, gated, *, block_seq=128, impl="pallas", interpret=True):
+    if impl == "pallas":
+        return _rg.rglru(log_a, gated, block_seq=block_seq,
+                         interpret=interpret)
+    return rglru_scan(log_a, gated)

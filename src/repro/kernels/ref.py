@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These delegate to the model-zoo reference implementations so the kernels
+are validated against exactly the math the framework trains/serves with.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import full_attention
+from repro.models.rglru import rglru_scan
+from repro.models.ssm import ssd_chunked
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """q (B,S,H,D); k/v (B,T,K,D) -> (B,S,H,D)."""
+    return full_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap)
+
+
+def ssd_ref(x, dt, A, Bm, Cm, *, chunk=64, h0=None):
+    """Chunked SSD oracle: returns (y (B,S,H,P), h_final (B,H,N,P))."""
+    return ssd_chunked(x, dt, A, Bm, Cm, chunk=chunk, h0=h0)
+
+
+def rglru_ref(log_a, gated, h0=None):
+    """Linear recurrence oracle via associative scan: (B,S,W) -> (B,S,W)."""
+    return rglru_scan(log_a, gated, h0=h0)

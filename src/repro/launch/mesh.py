@@ -1,0 +1,43 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state; the dry-run sets
+``--xla_force_host_platform_device_count=512`` before any jax import and
+then calls it.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+
+def make_production_mesh(*, multi_pod: bool = False, devices=None):
+    """Single-pod (16,16) ("data","model") or multi-pod (2,16,16)
+    ("pod","data","model") mesh over the first N available devices."""
+    import jax
+    import numpy as np
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devs = list(devices if devices is not None else jax.devices())
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devs)} — run "
+            "under launch/dryrun.py (which forces 512 host devices) or on "
+            "real hardware")
+    if len(devs) == n:
+        return jax.make_mesh(shape, axes, devices=devs)
+    arr = np.asarray(devs[:n]).reshape(shape)
+    return jax.sharding.Mesh(arr, axes)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str], devices=None):
+    """Arbitrary mesh over the first prod(shape) devices (perf experiments
+    use this to try alternative axis splits)."""
+    import jax
+    import numpy as np
+    n = int(np.prod(list(shape)))
+    devs = list(devices if devices is not None else jax.devices())[:n]
+    if len(devs) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devs)}")
+    arr = np.asarray(devs).reshape(tuple(shape))
+    return jax.sharding.Mesh(arr, tuple(axes))

@@ -1,0 +1,87 @@
+"""ShapeDtypeStruct stand-ins for every model input/state (no allocation).
+
+``input_specs(arch, shape)`` returns exactly what the lowered step consumes:
+
+  * train/prefill — {"inputs": (B, S) int32 | (B, S, d) f32, "labels": ...}
+  * decode        — (tokens (B,1), positions (B,1), caches pytree)
+
+plus ``state_structs`` (params + optimizer) via ``jax.eval_shape`` over the
+real initializers — weak-type-correct, shardable, zero bytes allocated.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig, PolicyConfig, ShapeConfig, SHAPES
+from repro.models import lm, transformer
+from repro.optim import adamw
+from repro.train import trainer
+
+
+def batch_structs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Train/prefill batch stand-ins."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.input_mode == "embeddings":
+        inputs = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.float32)
+    else:
+        inputs = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    return {"inputs": inputs,
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+
+def decode_structs(cfg: ModelConfig, shape: ShapeConfig,
+                   cache_dtype=jnp.bfloat16) -> Tuple[Any, Any, Any]:
+    """(tokens, positions, caches) stand-ins for one decode step with a
+    cache of ``shape.seq_len`` history."""
+    B = shape.global_batch
+    if cfg.input_mode == "embeddings":
+        tokens = jax.ShapeDtypeStruct((B, 1, cfg.d_model), jnp.float32)
+    else:
+        tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    positions = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    caches = jax.eval_shape(
+        lambda: transformer.init_stack_cache(cfg, B, shape.seq_len,
+                                             cache_dtype))
+    return tokens, positions, caches
+
+
+def state_structs(cfg: ModelConfig, policy: PolicyConfig,
+                  optcfg: adamw.AdamWConfig = adamw.AdamWConfig(),
+                  *, n_pods: int = 1) -> Any:
+    """TrainState stand-in via eval_shape over the real initializers."""
+    return jax.eval_shape(
+        lambda: trainer.init_state(jax.random.PRNGKey(0), cfg, policy,
+                                   optcfg, n_pods=n_pods))
+
+
+def param_structs(cfg: ModelConfig, policy: PolicyConfig) -> Any:
+    dt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[
+        policy.param_dtype]
+    return jax.eval_shape(
+        lambda: lm.init_lm(jax.random.PRNGKey(0), cfg, dtype=dt))
+
+
+def input_specs(arch: str, shape_name: str, policy: PolicyConfig,
+                *, n_pods: int = 1) -> Dict[str, Any]:
+    """Everything the (arch x shape) step consumes, as structs.
+
+    Returns {"kind": "train"|"prefill"|"decode", plus the stand-ins}.
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return {"kind": "train",
+                "state": state_structs(cfg, policy, n_pods=n_pods),
+                "batch": batch_structs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"kind": "prefill",
+                "params": param_structs(cfg, policy),
+                "batch": batch_structs(cfg, shape)}
+    tokens, positions, caches = decode_structs(cfg, shape)
+    return {"kind": "decode", "params": param_structs(cfg, policy),
+            "tokens": tokens, "positions": positions, "caches": caches}

@@ -1,0 +1,1 @@
+"""Model zoo: pure-JAX functional models (params = pytrees of arrays)."""

@@ -1,0 +1,61 @@
+"""BERT-base / BERT-large + SQuAD QA head (the paper's NLP benchmarks).
+
+Reuses the transformer substrate with ``causal=False`` (bidirectional),
+learned positions, post-LN-free GELU blocks per the published config.
+The QA fine-tuning head maps final hidden states to span start/end logits
+(SQuAD v1.1), which is exactly the workload the paper times in Fig 9-16.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers, lm
+from repro.models.transformer import RunCtx
+
+
+def init_bert_qa(key, cfg: ModelConfig, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = lm.init_lm(k1, cfg, dtype)
+    p["segment_embed"] = layers.embed_init(k2, (2, cfg.d_model), dtype)
+    p["qa_head"] = {
+        "w": layers.dense_init(k3, (cfg.d_model, 2), dtype),
+        "b": jnp.zeros((2,), dtype),
+    }
+    return p
+
+
+def forward_qa(params, tokens, cfg: ModelConfig, ctx: RunCtx, *,
+               segments=None, attn_mask=None):
+    """tokens (B, S) -> (start_logits, end_logits) each (B, S)."""
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    hidden, _, _ = lm.forward(params, tokens, cfg, ctx,
+                              positions=positions, kv_mask=attn_mask,
+                              return_hidden=True)
+    if segments is not None:
+        hidden = hidden + params["segment_embed"].astype(hidden.dtype)[
+            segments]
+    logits = (hidden.astype(jnp.float32)
+              @ params["qa_head"]["w"].astype(jnp.float32)
+              + params["qa_head"]["b"].astype(jnp.float32))
+    return logits[..., 0], logits[..., 1]
+
+
+def qa_loss(params, batch, cfg: ModelConfig, ctx: RunCtx):
+    """batch: tokens (B,S), start/end (B,) int32, optional mask (B,S)."""
+    start_l, end_l = forward_qa(params, batch["tokens"], cfg, ctx,
+                                segments=batch.get("segments"),
+                                attn_mask=batch.get("mask"))
+
+    def span_nll(logit, pos):
+        logp = jax.nn.log_softmax(logit, axis=-1)
+        iota = jax.lax.broadcasted_iota(jnp.int32, logp.shape, 1)
+        return -jnp.sum(jnp.where(iota == pos[:, None], logp, 0.0), axis=-1)
+
+    loss = jnp.mean(span_nll(start_l, batch["start"])
+                    + span_nll(end_l, batch["end"])) / 2.0
+    return loss, {"loss": loss}

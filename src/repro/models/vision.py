@@ -1,0 +1,318 @@
+"""The paper's vision benchmarks (Table II) in pure functional JAX.
+
+  * ResNet-50     — 25.6M params (bottleneck v1.5, [3,4,6,3])
+  * MobileNetV2   — 3.4M params (inverted residuals, width 1.0)
+  * YOLOv5-L      — 47M-class CSP detector *analog*: CSPDarknet-L backbone
+                    + PAN-style neck + anchor heads, parameterized to match
+                    the published parameter count/depth class.  NMS
+                    post-processing is outside the training step, exactly
+                    as in the paper's throughput measurements.
+
+BatchNorm runs in batch-stats mode (training characterization only — the
+paper measures training throughput, never eval accuracy).  All models
+expose ``init(key) -> params`` and ``apply(params, images) -> logits`` and
+a classification/detection loss for the benchmark train step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_bench import VisionConfig
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+def conv_init(key, kh, kw, cin, cout, dtype=jnp.float32):
+    fan_in = kh * kw * cin
+    std = math.sqrt(2.0 / fan_in)
+    return (jax.random.normal(key, (kh, kw, cin, cout), jnp.float32)
+            * std).astype(dtype)
+
+
+def conv(x, w, stride=1, groups=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+
+
+def bn_init(c, dtype=jnp.float32):
+    return {"scale": jnp.ones((c,), dtype), "bias": jnp.zeros((c,), dtype)}
+
+
+def bn(params, x, eps=1e-5):
+    mu = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return y * params["scale"] + params["bias"]
+
+
+def conv_bn(key, cin, cout, k=3, dtype=jnp.float32):
+    return {"w": conv_init(key, k, k, cin, cout, dtype),
+            "bn": bn_init(cout, dtype)}
+
+
+def apply_conv_bn(p, x, stride=1, act=jax.nn.relu, groups=1):
+    y = bn(p["bn"], conv(x, p["w"], stride, groups))
+    return act(y) if act is not None else y
+
+
+# ---------------------------------------------------------------------------
+# ResNet-50
+# ---------------------------------------------------------------------------
+_R50_STAGES = ((64, 3, 1), (128, 4, 2), (256, 6, 2), (512, 3, 2))
+
+
+def init_resnet50(key, num_classes=1000, dtype=jnp.float32):
+    ks = iter(jax.random.split(key, 256))
+    p: Dict[str, Any] = {
+        "stem": {"w": conv_init(next(ks), 7, 7, 3, 64, dtype),
+                 "bn": bn_init(64, dtype)}}
+    cin = 64
+    for si, (width, blocks, stride) in enumerate(_R50_STAGES):
+        stage = []
+        for bi in range(blocks):
+            s = stride if bi == 0 else 1
+            blk = {
+                "c1": conv_bn(next(ks), cin, width, 1, dtype),
+                "c2": conv_bn(next(ks), width, width, 3, dtype),
+                "c3": conv_bn(next(ks), width, width * 4, 1, dtype),
+            }
+            if bi == 0:
+                blk["proj"] = conv_bn(next(ks), cin, width * 4, 1, dtype)
+            stage.append(blk)
+            cin = width * 4
+        p[f"stage{si}"] = stage
+    p["fc"] = {"w": (jax.random.normal(next(ks), (cin, num_classes))
+                     * 0.01).astype(dtype),
+               "b": jnp.zeros((num_classes,), dtype)}
+    return p
+
+
+def apply_resnet50(p, x):
+    y = apply_conv_bn(p["stem"], x, stride=2)
+    y = jax.lax.reduce_window(y, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
+                              (1, 2, 2, 1), "SAME")
+    for si, (width, blocks, stride) in enumerate(_R50_STAGES):
+        for bi, blk in enumerate(p[f"stage{si}"]):
+            s = stride if bi == 0 else 1
+            h = apply_conv_bn(blk["c1"], y)
+            h = apply_conv_bn(blk["c2"], h, stride=s)
+            h = apply_conv_bn(blk["c3"], h, act=None)
+            sc = apply_conv_bn(blk["proj"], y, stride=s, act=None) \
+                if "proj" in blk else y
+            y = jax.nn.relu(h + sc)
+    y = jnp.mean(y, axis=(1, 2))
+    return y @ p["fc"]["w"] + p["fc"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# MobileNetV2
+# ---------------------------------------------------------------------------
+# (expansion t, out channels c, repeats n, stride s) — the published table
+_MBV2 = ((1, 16, 1, 1), (6, 24, 2, 2), (6, 32, 3, 2), (6, 64, 4, 2),
+         (6, 96, 3, 1), (6, 160, 3, 2), (6, 320, 1, 1))
+
+
+def init_mobilenetv2(key, num_classes=1000, dtype=jnp.float32):
+    ks = iter(jax.random.split(key, 256))
+    p: Dict[str, Any] = {"stem": conv_bn(next(ks), 3, 32, 3, dtype)}
+    cin = 32
+    blocks = []
+    for t, c, n, s in _MBV2:
+        for i in range(n):
+            hidden = cin * t
+            blk = {}
+            if t != 1:
+                blk["expand"] = conv_bn(next(ks), cin, hidden, 1, dtype)
+            blk["dw"] = conv_bn(next(ks), 1, hidden, 3, dtype)
+            blk["dw"]["w"] = conv_init(next(ks), 3, 3, 1, hidden, dtype)
+            blk["project"] = conv_bn(next(ks), hidden, c, 1, dtype)
+            blocks.append(blk)
+            cin = c
+    p["blocks"] = blocks
+    p["head"] = conv_bn(next(ks), cin, 1280, 1, dtype)
+    p["fc"] = {"w": (jax.random.normal(next(ks), (1280, num_classes))
+                     * 0.01).astype(dtype),
+               "b": jnp.zeros((num_classes,), dtype)}
+    return p
+
+
+def _mbv2_strides():
+    out = []
+    for t, c, n, s in _MBV2:
+        out += [s] + [1] * (n - 1)
+    return out
+
+
+def apply_mobilenetv2(p, x):
+    relu6 = lambda v: jnp.minimum(jax.nn.relu(v), 6.0)
+    y = apply_conv_bn(p["stem"], x, stride=2, act=relu6)
+    for blk, stride in zip(p["blocks"], _mbv2_strides()):
+        inp = y
+        h = apply_conv_bn(blk["expand"], y, act=relu6) if "expand" in blk \
+            else y
+        hidden = h.shape[-1]
+        h = relu6(bn(blk["dw"]["bn"],
+                     conv(h, blk["dw"]["w"], stride, groups=hidden)))
+        h = apply_conv_bn(blk["project"], h, act=None)
+        if stride == 1 and inp.shape[-1] == h.shape[-1]:
+            h = h + inp
+        y = h
+    y = apply_conv_bn(p["head"], y, act=relu6)
+    y = jnp.mean(y, axis=(1, 2))
+    return y @ p["fc"]["w"] + p["fc"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# YOLOv5-L analog (CSP backbone + PAN neck + anchor heads)
+# ---------------------------------------------------------------------------
+def _csp_block(ks, cin, cout, n, dtype):
+    """C3 block: split, n bottlenecks on one path, concat, fuse."""
+    mid = cout // 2
+    blk = {"cv1": conv_bn(next(ks), cin, mid, 1, dtype),
+           "cv2": conv_bn(next(ks), cin, mid, 1, dtype),
+           "cv3": conv_bn(next(ks), 2 * mid, cout, 1, dtype),
+           "m": [{"a": conv_bn(next(ks), mid, mid, 1, dtype),
+                  "b": conv_bn(next(ks), mid, mid, 3, dtype)}
+                 for _ in range(n)]}
+    return blk
+
+
+def _apply_csp(blk, x, shortcut=True):
+    silu = jax.nn.silu
+    a = apply_conv_bn(blk["cv1"], x, act=silu)
+    for m in blk["m"]:
+        h = apply_conv_bn(m["a"], a, act=silu)
+        h = apply_conv_bn(m["b"], h, act=silu)
+        a = a + h if shortcut else h
+    b = apply_conv_bn(blk["cv2"], x, act=silu)
+    return apply_conv_bn(blk["cv3"], jnp.concatenate([a, b], -1), act=silu)
+
+
+# YOLOv5-L: depth_multiple=1.0, width_multiple=1.0
+_Y5L_W = (64, 128, 256, 512, 1024)
+_Y5L_D = (3, 6, 9, 3)
+
+
+def init_yolov5l(key, num_classes=80, dtype=jnp.float32):
+    ks = iter(jax.random.split(key, 1024))
+    W, D = _Y5L_W, _Y5L_D
+    p: Dict[str, Any] = {"stem": conv_bn(next(ks), 3, W[0], 6, dtype)}
+    # backbone
+    for i in range(4):
+        p[f"down{i}"] = conv_bn(next(ks), W[i], W[i + 1], 3, dtype)
+        p[f"csp{i}"] = _csp_block(ks, W[i + 1], W[i + 1], D[i], dtype)
+    p["sppf"] = {"cv1": conv_bn(next(ks), W[4], W[4] // 2, 1, dtype),
+                 "cv2": conv_bn(next(ks), W[4] * 2, W[4], 1, dtype)}
+    # PAN neck
+    p["up1_cv"] = conv_bn(next(ks), W[4], W[3], 1, dtype)
+    p["up1_csp"] = _csp_block(ks, W[3] * 2, W[3], D[3], dtype)
+    p["up2_cv"] = conv_bn(next(ks), W[3], W[2], 1, dtype)
+    p["up2_csp"] = _csp_block(ks, W[2] * 2, W[2], D[3], dtype)
+    p["dn1_cv"] = conv_bn(next(ks), W[2], W[2], 3, dtype)
+    p["dn1_csp"] = _csp_block(ks, W[2] + W[2], W[3], D[3], dtype)
+    p["dn2_cv"] = conv_bn(next(ks), W[3], W[3], 3, dtype)
+    p["dn2_csp"] = _csp_block(ks, W[3] + W[3], W[4], D[3], dtype)
+    # detect heads: 3 anchors x (5 + classes) per scale
+    no = 3 * (5 + num_classes)
+    for i, c in enumerate((W[2], W[3], W[4])):
+        p[f"head{i}"] = {"w": conv_init(next(ks), 1, 1, c, no, dtype),
+                         "b": jnp.zeros((no,), dtype)}
+    return p
+
+
+def apply_yolov5l(p, x):
+    silu = jax.nn.silu
+    y = apply_conv_bn(p["stem"], x, stride=2, act=silu)
+    feats = []
+    for i in range(4):
+        y = apply_conv_bn(p[f"down{i}"], y, stride=2, act=silu)
+        y = _apply_csp(p[f"csp{i}"], y)
+        feats.append(y)
+    # SPPF
+    h = apply_conv_bn(p["sppf"]["cv1"], y, act=silu)
+    pool = lambda v: jax.lax.reduce_window(
+        v, -jnp.inf, jax.lax.max, (1, 5, 5, 1), (1, 1, 1, 1), "SAME")
+    p1 = pool(h); p2 = pool(p1); p3 = pool(p2)
+    y = apply_conv_bn(p["sppf"]["cv2"],
+                      jnp.concatenate([h, p1, p2, p3], -1), act=silu)
+    c3, c4 = feats[1], feats[2]
+    # top-down
+    u1 = apply_conv_bn(p["up1_cv"], y, act=silu)
+    up = jax.image.resize(u1, (u1.shape[0], u1.shape[1] * 2,
+                               u1.shape[2] * 2, u1.shape[3]), "nearest")
+    f4 = _apply_csp(p["up1_csp"], jnp.concatenate([up, c4], -1),
+                    shortcut=False)
+    u2 = apply_conv_bn(p["up2_cv"], f4, act=silu)
+    up = jax.image.resize(u2, (u2.shape[0], u2.shape[1] * 2,
+                               u2.shape[2] * 2, u2.shape[3]), "nearest")
+    f3 = _apply_csp(p["up2_csp"], jnp.concatenate([up, c3], -1),
+                    shortcut=False)
+    # bottom-up
+    d1 = apply_conv_bn(p["dn1_cv"], f3, stride=2, act=silu)
+    f4b = _apply_csp(p["dn1_csp"], jnp.concatenate([d1, u2], -1),
+                     shortcut=False)
+    d2 = apply_conv_bn(p["dn2_cv"], f4b, stride=2, act=silu)
+    f5b = _apply_csp(p["dn2_csp"], jnp.concatenate([d2, u1], -1),
+                     shortcut=False)
+    outs = []
+    for i, f in enumerate((f3, f4b, f5b)):
+        o = conv(f, p[f"head{i}"]["w"]) + p[f"head{i}"]["b"]
+        outs.append(o)
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# registry + losses
+# ---------------------------------------------------------------------------
+VISION_MODELS = {
+    "resnet50": (init_resnet50, apply_resnet50),
+    "mobilenetv2": (init_mobilenetv2, apply_mobilenetv2),
+    "yolov5l": (init_yolov5l, apply_yolov5l),
+}
+
+
+def init_vision(key, cfg: VisionConfig, dtype=jnp.float32):
+    init, _ = VISION_MODELS[cfg.arch]
+    return init(key, cfg.num_classes, dtype)
+
+
+def apply_vision(params, images, cfg: VisionConfig):
+    _, apply = VISION_MODELS[cfg.arch]
+    return apply(params, images)
+
+
+def classification_loss(params, batch, cfg: VisionConfig):
+    logits = apply_vision(params, batch["images"], cfg)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    nll = -jnp.take_along_axis(logp, batch["labels"][:, None], -1)[:, 0]
+    return jnp.mean(nll)
+
+
+def detection_loss(params, batch, cfg: VisionConfig):
+    """Dense objectness/box/class surrogate (training-throughput workload
+    only — matches the paper's measurement, which never inspects mAP)."""
+    outs = apply_yolov5l(params, batch["images"])
+    loss = 0.0
+    for o, tgt in zip(outs, batch["targets"]):
+        loss = loss + jnp.mean(jnp.square(o.astype(jnp.float32) - tgt))
+    return loss
+
+
+def vision_loss(params, batch, cfg: VisionConfig):
+    if cfg.arch == "yolov5l":
+        return detection_loss(params, batch, cfg)
+    return classification_loss(params, batch, cfg)
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params)
+               if hasattr(x, "size"))

@@ -1,0 +1,5 @@
+"""Optimizers + distributed-optimization tricks (ZeRO sharding lives in
+``repro.core.policy`` as PartitionSpecs; compression in ``compress``)."""
+from repro.optim.adamw import (AdamWConfig, AdamWState, apply,  # noqa: F401
+                               clip_by_global_norm, global_norm, init)
+from repro.optim.schedule import ScheduleConfig, lr_at  # noqa: F401

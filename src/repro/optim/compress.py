@@ -1,0 +1,52 @@
+"""Int8 error-feedback gradient compression (beyond-paper optimization).
+
+The paper mitigates the slow composed fabric with mixed precision and ZeRO
+(§V-4).  The next rung on the same ladder — not available in its 2021 stack
+— is lossy gradient compression with error feedback (1-bit Adam / PowerSGD
+family).  We implement the simplest robust member: symmetric per-tensor
+int8 with a globally-agreed scale and local error carry, applied only to
+the *slow* (cross-pod) hop where bandwidth is 8x scarcer.
+
+Error feedback guarantees the quantization error is re-injected next step,
+so the compression is unbiased over time (Karimireddy et al., 2019).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_encode(x: jnp.ndarray,
+                global_max: Callable[[jnp.ndarray], jnp.ndarray] = lambda m: m
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantize fp32 -> int8 against a (collectively agreed) scale.
+
+    ``global_max``: hook to maximize the scale across participants (pmax
+    over the reduction axis) so every rank uses the same grid.
+    """
+    m = jnp.max(jnp.abs(x))
+    m = global_max(m)
+    scale = jnp.maximum(m, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decode(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_leaf(g: jnp.ndarray, residual: jnp.ndarray,
+                     global_max=lambda m: m
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(grad, residual) -> (int8 payload, scale, new residual)."""
+    y = g.astype(jnp.float32) + residual
+    q, scale = int8_encode(y, global_max)
+    new_r = y - int8_decode(q, scale)
+    return q, scale, new_r
+
+
+def compression_ratio(dtype=jnp.float32) -> float:
+    """Wire-byte ratio of int8 vs the uncompressed dtype."""
+    return jnp.dtype(dtype).itemsize / 1.0

@@ -1,0 +1,31 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleConfig:
+    kind: str = "cosine"            # cosine | linear | constant
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_ratio: float = 0.1
+
+
+def lr_at(step, cfg: ScheduleConfig):
+    s = jnp.asarray(step, jnp.float32)
+    warm = cfg.peak_lr * jnp.minimum(1.0, s / jnp.maximum(cfg.warmup_steps, 1))
+    if cfg.kind == "constant":
+        return warm
+    frac = jnp.clip((s - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    if cfg.kind == "linear":
+        decay = 1.0 - (1.0 - cfg.min_ratio) * frac
+    else:  # cosine
+        decay = cfg.min_ratio + (1.0 - cfg.min_ratio) * 0.5 * (
+            1.0 + jnp.cos(jnp.pi * frac))
+    return jnp.where(s < cfg.warmup_steps, warm, cfg.peak_lr * decay)

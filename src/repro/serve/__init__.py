@@ -1,0 +1,3 @@
+from repro.serve.engine import (Request, ServeEngine,  # noqa: F401
+                                greedy_sample, init_caches, make_decode_step,
+                                make_prefill_step)

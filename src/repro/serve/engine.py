@@ -1,0 +1,179 @@
+"""Serving engine: prefill + decode steps with distributed KV/state caches.
+
+The decode path is what the ``decode_32k`` / ``long_500k`` cells lower:
+one new token per sequence against a cache of ``seq_len`` history.  Cache
+placement follows ``core.policy.cache_specs``:
+
+  * batch over the dp axes,
+  * attention cache *length* over the tp axis (flash-decode layout: each
+    model rank holds a slice of history; the softmax combines partial
+    max/sum via the collectives GSPMD inserts for the sharded reduction —
+    no rank ever materializes the full cache, which for 32k x 128 x 40L
+    would blow past HBM),
+  * SSM / RG-LRU state channels over the tp axis.
+
+``ServeEngine`` adds slot-based continuous batching on top: sequences
+occupy slots of a fixed-size batch; finished sequences free their slot for
+the next request (the standard production serving shape).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, PolicyConfig, ShapeConfig
+from repro.core import policy as pol
+from repro.models import lm, transformer
+from repro.models.transformer import RunCtx
+from repro.train.trainer import make_run_ctx
+
+
+# ---------------------------------------------------------------------------
+# step builders (jit-able; used by launch.dryrun and ServeEngine)
+# ---------------------------------------------------------------------------
+def make_prefill_step(cfg: ModelConfig, policy: PolicyConfig, *,
+                      cache_capacity: int, mesh=None) -> Callable:
+    """prefill(params, tokens) -> (last-token logits, caches)."""
+    ctx = dataclasses.replace(make_run_ctx(cfg, policy, mesh),
+                              cache_capacity=cache_capacity)
+
+    def prefill(params, tokens):
+        hidden, caches, _ = lm.forward(params, tokens, cfg, ctx,
+                                       caches="init", return_hidden=True)
+        last = hidden[:, -1:]
+        logits = lm.head_table(params, cfg)
+        out = (last.astype(ctx.compute_dtype)
+               @ logits.astype(ctx.compute_dtype).T)
+        return out, caches
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, policy: PolicyConfig, mesh=None
+                     ) -> Callable:
+    """decode(params, caches, tokens, positions) -> (logits, caches).
+
+    tokens (B, 1) int32 (or (B, 1, d) embeddings); positions (B, 1) int32.
+    """
+    ctx = make_run_ctx(cfg, policy, mesh)
+
+    def decode(params, caches, tokens, positions):
+        logits, new_caches, _ = lm.forward(params, tokens, cfg, ctx,
+                                           positions=positions,
+                                           caches=caches)
+        return logits, new_caches
+
+    return decode
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_seq: int,
+                dtype=jnp.bfloat16):
+    return transformer.init_stack_cache(cfg, batch, max_seq, dtype)
+
+
+def greedy_sample(logits: jnp.ndarray) -> jnp.ndarray:
+    return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+
+
+# ---------------------------------------------------------------------------
+# slot-based continuous batching
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: jnp.ndarray            # (S,) int32
+    max_new: int = 16
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Minimal continuous-batching server over the decode step.
+
+    Slots are prefilling/decoding independently: a finished sequence frees
+    its slot immediately (no head-of-line blocking).  Single-host demo
+    semantics; the jitted steps themselves are the production artifacts.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, policy: PolicyConfig, *,
+                 n_slots: int = 4, max_seq: int = 512, mesh=None):
+        self.cfg = cfg
+        self.params = params
+        self.policy = policy
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.ctx_dtype = jnp.bfloat16 \
+            if policy.compute_dtype == "bfloat16" else jnp.float32
+        self.decode = jax.jit(make_decode_step(cfg, policy, mesh))
+        self.prefill = jax.jit(
+            make_prefill_step(cfg, policy, cache_capacity=max_seq,
+                              mesh=mesh))
+        self.caches = init_caches(cfg, n_slots, max_seq, self.ctx_dtype)
+        self.slot_req: List[Optional[Request]] = [None] * n_slots
+        self.slot_pos = jnp.zeros((n_slots,), jnp.int32)
+        self.slot_tok = jnp.zeros((n_slots, 1), jnp.int32)
+
+    # -- batched-prefill note: per-slot prefill keeps the demo simple; the
+    # -- benchmark harness lowers the full-batch prefill step instead.
+    def add_request(self, req: Request) -> bool:
+        for s, cur in enumerate(self.slot_req):
+            if cur is None:
+                self._prefill_into_slot(s, req)
+                return True
+        return False
+
+    def _prefill_into_slot(self, s: int, req: Request) -> None:
+        toks = req.prompt[None, :]
+        logits, caches = self.prefill(self.params, toks)
+        nxt = greedy_sample(logits)
+        # scatter the single-sequence cache into slot s; scanned segments
+        # carry a leading layer-stack dim, so batch is dim 1 there
+        segs = transformer.plan_segments(self.cfg.pattern)
+
+        def put(path, c_all, c_one):
+            bdim = _batch_dim(path, segs)
+            idx = tuple([slice(None)] * bdim + [slice(s, s + 1)])
+            return c_all.at[idx].set(c_one.astype(c_all.dtype))
+
+        self.caches = jax.tree_util.tree_map_with_path(
+            put, self.caches, caches)
+        self.slot_req[s] = req
+        self.slot_pos = self.slot_pos.at[s].set(req.prompt.shape[0])
+        self.slot_tok = self.slot_tok.at[s].set(nxt[0])
+        req.out.append(int(nxt[0, 0]))
+
+    def step(self) -> int:
+        """One decode step for all active slots; returns #active."""
+        active = [s for s, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return 0
+        pos = self.slot_pos[:, None]
+        logits, self.caches = self.decode(
+            self.params, self.caches, self.slot_tok, pos)
+        nxt = greedy_sample(logits)
+        self.slot_tok = nxt
+        self.slot_pos = self.slot_pos + jnp.asarray(
+            [1 if self.slot_req[s] is not None else 0
+             for s in range(self.n_slots)], jnp.int32)
+        for s in active:
+            req = self.slot_req[s]
+            req.out.append(int(nxt[s, 0]))
+            if len(req.out) >= req.max_new:
+                req.done = True
+                self.slot_req[s] = None
+        return len(active)
+
+
+def _batch_dim(path, segs) -> int:
+    """Cache-leaf batch dim: 1 for scanned (stacked) segments, else 0."""
+    import re
+    for p in path:
+        key = str(getattr(p, "key", ""))
+        m = re.match(r"seg(\d+)$", key)
+        if m:
+            si = int(m.group(1))
+            return 1 if si < len(segs) and segs[si][1] > 1 else 0
+    return 0

@@ -1,0 +1,3 @@
+from repro.train.trainer import (TrainState, init_state,  # noqa: F401
+                                 jit_train_step, make_loss_fn, make_run_ctx,
+                                 make_train_step, state_specs)

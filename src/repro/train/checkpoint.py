@@ -1,0 +1,141 @@
+"""Fault-tolerant checkpointing: atomic, resharding-on-restore.
+
+Requirements at 1000+ nodes (system prompt) rendered here:
+
+  * **Atomicity** — write to ``<dir>/tmp.<step>``, fsync, then rename to
+    ``<dir>/step_<n>``; a crash mid-write never corrupts the latest
+    checkpoint.  A ``DONE`` marker file guards partially-renamed dirs.
+  * **Resharding restore** — checkpoints store *logical* (unsharded)
+    arrays; ``restore(..., mesh, specs)`` device_puts each array under the
+    new mesh/specs, so a job restarted on a *different composition* (fewer
+    pods, swapped fabric — the elastic path) loads the same checkpoint.
+  * **GC** — keep the newest ``keep`` checkpoints.
+
+Storage format: one ``.npz`` per pytree (flattened paths -> arrays) — no
+external deps, portable, testable.  A production deployment would swap the
+file driver for a distributed object store; the interface (save/restore/
+latest_step) is what the rest of the framework depends on.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+from typing import Any, Dict, List, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _treedef_of(tree: Any):
+    return jax.tree_util.tree_structure(tree)
+
+
+def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3,
+         extra: Optional[Mapping[str, Any]] = None) -> str:
+    """Atomically persist ``tree`` (gathered to host) as step ``step``."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(tree)
+    tmp = tempfile.mkdtemp(prefix=f"tmp.{step}.", dir=ckpt_dir)
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        meta = {"step": int(step), "keys": sorted(flat)}
+        if extra:
+            meta["extra"] = dict(extra)
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        with open(os.path.join(tmp, "DONE"), "w") as f:
+            f.write("ok")
+            f.flush()
+            os.fsync(f.fileno())
+        final = os.path.join(ckpt_dir, f"step_{step:010d}")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = all_steps(ckpt_dir)
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:010d}"),
+                      ignore_errors=True)
+    # sweep orphaned tmp dirs from crashed writers
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("tmp."):
+            shutil.rmtree(os.path.join(ckpt_dir, name), ignore_errors=True)
+
+
+def all_steps(ckpt_dir: str) -> List[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        m = re.match(r"step_(\d+)$", name)
+        if m and os.path.exists(os.path.join(ckpt_dir, name, "DONE")):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, like: Any, *, step: Optional[int] = None,
+            mesh=None, specs: Any = None) -> Tuple[Any, int]:
+    """Load a checkpoint into the structure of ``like``.
+
+    ``mesh``/``specs``: optional target sharding — each restored array is
+    device_put under ``NamedSharding(mesh, spec)``, which is what makes
+    restore-onto-a-different-composition (elastic recovery) work.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:010d}")
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    spec_leaves = (jax.tree.leaves(
+        specs, is_leaf=lambda s: s is None or hasattr(s, "_asdict")
+        or isinstance(s, jax.sharding.PartitionSpec))
+        if specs is not None else [None] * len(leaves_like))
+    if specs is not None and len(spec_leaves) != len(leaves_like):
+        spec_leaves = [None] * len(leaves_like)
+    out = []
+    for i, (pth, leaf) in enumerate(leaves_like):
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in pth)
+        arr = data[key]
+        if arr.shape != tuple(leaf.shape):
+            raise ValueError(
+                f"checkpoint leaf {key}: shape {arr.shape} != {leaf.shape}")
+        if mesh is not None and spec_leaves[i] is not None:
+            sh = jax.sharding.NamedSharding(mesh, spec_leaves[i])
+            out.append(jax.device_put(jnp.asarray(arr, leaf.dtype), sh))
+        else:
+            out.append(jnp.asarray(arr, leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), out), step
+
+
+def meta(ckpt_dir: str, step: int) -> Dict[str, Any]:
+    with open(os.path.join(ckpt_dir, f"step_{step:010d}", "meta.json")) as f:
+        return json.load(f)

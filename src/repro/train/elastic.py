@@ -1,0 +1,95 @@
+"""Elastic execution: failure -> recompose -> restore -> continue.
+
+This is the composable system's operational payoff (paper §II-C "devices
+can be allocated and re-allocated dynamically"): when devices fail, the
+pool is re-composed into a smaller (or re-fabric'd) system and training
+resumes from the latest atomic checkpoint — parameters reshard on restore,
+so no part of the job is tied to the dead composition.
+
+Straggler mitigation: the data pipeline re-issues a shard when a simulated
+host exceeds the straggler deadline (tail-latency duplication, the standard
+mitigation at pod scale); the cost model prices stragglers through the
+per-axis latency term.  Both are exercised by tests/test_elastic.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.compose import ComposedSystem, CompositionError, recompose, \
+    shrink_to_pool
+from repro.core.topology import DevicePool
+from repro.train import checkpoint
+
+
+@dataclasses.dataclass
+class ElasticEvent:
+    step: int
+    kind: str                      # "failure" | "recompose" | "restore"
+    detail: str = ""
+
+
+@dataclasses.dataclass
+class ElasticRun:
+    """Bookkeeping for one elastic training run."""
+    system: ComposedSystem
+    ckpt_dir: str
+    events: List[ElasticEvent] = dataclasses.field(default_factory=list)
+
+    def log(self, step: int, kind: str, detail: str = "") -> None:
+        self.events.append(ElasticEvent(step, kind, detail))
+
+
+def handle_failure(run: ElasticRun, pool: DevicePool,
+                   failed_uids: Sequence[int], *, step: int,
+                   shrink_axis: str = "data") -> ComposedSystem:
+    """Mark devices failed, recompose (shrinking ``shrink_axis`` if the
+    pool no longer covers the old shape), and return the new system.
+
+    The caller then rebuilds mesh + jitted step for the new system and
+    restores the latest checkpoint under the new sharding.
+    """
+    pool.mark_failed(failed_uids)
+    run.log(step, "failure", f"uids={list(failed_uids)}")
+    try:
+        new_sys = recompose(pool, run.system)
+        detail = "same-shape recompose (spare devices)"
+    except CompositionError:
+        new_sys = shrink_to_pool(pool, run.system, shrink_axis)
+        detail = (f"shrunk {shrink_axis}: "
+                  f"{dict(zip(new_sys.axis_names, new_sys.axis_sizes))}")
+    run.log(step, "recompose", detail)
+    run.system = new_sys
+    return new_sys
+
+
+def resume(run: ElasticRun, like_state: Any, mesh, specs) -> Tuple[Any, int]:
+    """Restore the latest checkpoint onto the (possibly new) mesh."""
+    state, step = checkpoint.restore(run.ckpt_dir, like_state, mesh=mesh,
+                                     specs=specs)
+    run.log(step, "restore", f"onto {dict(mesh.shape)}")
+    return state, step
+
+
+# ---------------------------------------------------------------------------
+# straggler mitigation (data-path duplication)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class StragglerPolicy:
+    """Duplicate a shard read when it exceeds ``deadline_factor`` x median.
+
+    At 1000+ nodes the slowest host dominates step time; issuing a backup
+    read after the deadline caps the tail at ~2x the median read.  The
+    pipeline consults ``should_duplicate`` per shard; see data/pipeline.py.
+    """
+    deadline_factor: float = 2.0
+    max_duplicates: int = 1
+
+    def should_duplicate(self, elapsed: float, median: float,
+                         already: int) -> bool:
+        return (already < self.max_duplicates
+                and elapsed > self.deadline_factor * max(median, 1e-9))
+
+    def expected_tail_time(self, median: float, p999: float) -> float:
+        """Tail-read completion bound under duplication."""
+        return min(p999, self.deadline_factor * median + median)

@@ -1,0 +1,72 @@
+"""Integrity gate over the shipped dry-run artifacts (results/).
+
+These are the §Dry-run / §Roofline deliverables; the suite fails if the
+artifact set regresses (missing cells, OOM cells, malformed reports).
+"""
+import glob
+import json
+import os
+
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, applicable_shapes, get_config
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results", "dryrun")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.isdir(RESULTS),
+    reason="dry-run artifacts not generated (run repro.launch.dryrun)")
+
+HBM = 16 * 2 ** 30
+
+
+def _cells():
+    out = []
+    for arch in ASSIGNED_ARCHS:
+        for s in applicable_shapes(get_config(arch)):
+            for mesh in ("single", "multi"):
+                out.append((arch, s.name, mesh))
+    return out
+
+
+def test_every_assigned_cell_has_an_artifact():
+    missing = [c for c in _cells()
+               if not os.path.exists(os.path.join(
+                   RESULTS, f"{c[0]}__{c[1]}__{c[2]}.json"))]
+    assert not missing, missing
+    assert len(_cells()) == 64
+
+
+@pytest.mark.parametrize("path", sorted(glob.glob(
+    os.path.join(RESULTS, "*.json"))))
+def test_artifact_well_formed_and_fits_hbm(path):
+    with open(path) as f:
+        js = json.load(f)
+    rl = js["roofline"]
+    for k in ("compute_s", "memory_s", "collective_s", "dominant",
+              "roofline_fraction", "useful_ratio", "step_time_s"):
+        assert k in rl, (path, k)
+    assert rl["step_time_s"] >= max(rl["compute_s"], rl["collective_s"]) \
+        - 1e-12
+    assert 0 <= rl["roofline_fraction"] <= 1.0 + 1e-9
+    # argument bytes per device must fit the 16 GiB HBM
+    args = js["memory_analysis"].get("argument_size_in_bytes", 0)
+    assert args <= HBM, (path, args / 2**30)
+    # mesh coherence
+    n = 1
+    for v in js["mesh"].values():
+        n *= v
+    assert n in (256, 512)
+
+
+def test_multi_pod_cells_exercise_the_pod_axis():
+    """At least the training cells must put traffic on the pod (DCN) axis
+    — that is what the multi-pod dry-run proves."""
+    hits = 0
+    for path in glob.glob(os.path.join(RESULTS, "*train_4k__multi.json")):
+        with open(path) as f:
+            js = json.load(f)
+        if js["per_axis_wire_bytes"].get("pod", 0) > 0:
+            hits += 1
+    assert hits >= 8, hits

@@ -1,0 +1,112 @@
+"""Checkpoint atomicity, GC, restore + elastic resume."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.configs.base import PolicyConfig, ShapeConfig
+from repro.core import compose
+from repro.core.topology import make_pool, LinkClass
+from repro.data import make_batch
+from repro.optim import AdamWConfig
+from repro.train import checkpoint, elastic, trainer
+
+
+def _tiny_state(rng):
+    cfg = reduced(get_config("qwen2-0.5b"))
+    policy = PolicyConfig(compute_dtype="float32", remat="none",
+                          attn_impl="full", zero_stage=0)
+    return cfg, policy, trainer.init_state(rng, cfg, policy,
+                                           AdamWConfig(lr=1e-3))
+
+
+def test_save_restore_roundtrip(tmp_path, rng):
+    cfg, policy, state = _tiny_state(rng)
+    d = str(tmp_path / "ck")
+    checkpoint.save(d, 7, state)
+    restored, step = checkpoint.restore(d, state)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_gc_keeps_latest_k(tmp_path, rng):
+    cfg, policy, state = _tiny_state(rng)
+    d = str(tmp_path / "ck")
+    for s in range(6):
+        checkpoint.save(d, s, state, keep=3)
+    assert checkpoint.all_steps(d) == [3, 4, 5]
+    assert checkpoint.latest_step(d) == 5
+
+
+def test_partial_write_is_invisible(tmp_path, rng):
+    """A crashed writer (tmp dir, no DONE) must not surface as a step."""
+    cfg, policy, state = _tiny_state(rng)
+    d = str(tmp_path / "ck")
+    checkpoint.save(d, 1, state)
+    # simulate a crash: step dir without DONE marker
+    os.makedirs(os.path.join(d, "step_0000000002"))
+    assert checkpoint.all_steps(d) == [1]
+    restored, step = checkpoint.restore(d, state)
+    assert step == 1
+
+
+def test_restore_shape_mismatch_raises(tmp_path, rng):
+    cfg, policy, state = _tiny_state(rng)
+    d = str(tmp_path / "ck")
+    checkpoint.save(d, 1, state)
+    bad = jax.tree.map(lambda x: jnp.zeros((3,) + x.shape, x.dtype), state)
+    with pytest.raises(ValueError):
+        checkpoint.restore(d, bad)
+
+
+def test_training_resume_bit_exact(tmp_path, rng):
+    """save at t, continue to t+2 == restore at t, replay to t+2."""
+    cfg, policy, state = _tiny_state(rng)
+    step_fn = jax.jit(trainer.make_train_step(cfg, policy,
+                                              AdamWConfig(lr=1e-3)))
+    shape = ShapeConfig("t", 32, 2, "train")
+    d = str(tmp_path / "ck")
+    for i in range(2):
+        state, _ = step_fn(state, make_batch(cfg, shape, step=i))
+    checkpoint.save(d, 2, state)
+    cont = state
+    for i in range(2, 4):
+        cont, _ = step_fn(cont, make_batch(cfg, shape, step=i))
+    replay, step = checkpoint.restore(d, state)
+    for i in range(step, 4):
+        replay, _ = step_fn(replay, make_batch(cfg, shape, step=i))
+    for a, b in zip(jax.tree.leaves(cont.params),
+                    jax.tree.leaves(replay.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6)
+
+
+def test_elastic_failure_recompose_restore(tmp_path, rng):
+    """Kill devices -> recompose (shrink) -> restore latest checkpoint."""
+    pool = make_pool(n_local=256, n_switch=0, pods=1)
+    sys_ = compose.compose(pool, "prod", ("data", "model"), (16, 16),
+                           {"data": LinkClass.LOCAL,
+                            "model": LinkClass.LOCAL})
+    run = elastic.ElasticRun(sys_, str(tmp_path / "ck"))
+    cfg, policy, state = _tiny_state(rng)
+    checkpoint.save(run.ckpt_dir, 5, state)
+    new_sys = elastic.handle_failure(run, pool,
+                                     failed_uids=list(range(20)), step=5)
+    assert new_sys.n_devices <= len(pool.healthy())
+    assert new_sys.shape["data"] < 16          # had to shrink
+    restored, step = checkpoint.restore(run.ckpt_dir, state)
+    assert step == 5
+    kinds = [e.kind for e in run.events]
+    assert kinds == ["failure", "recompose"]
+
+
+def test_straggler_policy():
+    p = elastic.StragglerPolicy(deadline_factor=2.0, max_duplicates=1)
+    assert not p.should_duplicate(elapsed=1.0, median=1.0, already=0)
+    assert p.should_duplicate(elapsed=2.5, median=1.0, already=0)
+    assert not p.should_duplicate(elapsed=2.5, median=1.0, already=1)
+    assert p.expected_tail_time(1.0, p999=10.0) == 3.0

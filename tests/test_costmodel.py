@@ -1,0 +1,148 @@
+"""Cost-model unit tests: HLO parsing, trip counts, roofline pricing."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, SHAPES
+from repro.configs.base import PolicyConfig, ShapeConfig
+from repro.core import costmodel, compose
+
+
+# ---------------------------------------------------------------------------
+# HLO text parsing
+# ---------------------------------------------------------------------------
+SAMPLE_HLO = """
+HloModule jit_step
+
+%region_0.10 (a: f32[], b: f32[]) -> f32[] {
+  ROOT %add = f32[] add(f32[] %a, f32[] %b)
+}
+
+%cond.5 (arg: (s32[], f32[128])) -> pred[] {
+  %c = s32[] constant(48)
+  ROOT %lt = pred[] compare(s32[] %x, s32[] %c), direction=LT
+}
+
+%body.7 (arg: (s32[], f32[128])) -> (s32[], f32[128]) {
+  %ar = f32[128]{0} all-reduce(f32[128]{0} %g), channel_id=2, replica_groups={{0,1,2,3},{4,5,6,7}}, use_global_device_ids=true, to_apply=%region_0.10
+  ROOT %t = (s32[], f32[128]) tuple(%i, %ar)
+}
+
+ENTRY %main (p: f32[512,256]) -> f32[512,256] {
+  %ag = f32[512,256]{1,0} all-gather(f32[32,256]{1,0} %p), channel_id=1, replica_groups=[16,16]<=[256], dimensions={0}, use_global_device_ids=true
+  %w = (s32[], f32[128]) while((s32[], f32[128]) %init), condition=%cond.5, body=%body.7
+  ROOT %r = f32[512,256]{1,0} copy(%ag)
+}
+"""
+
+
+def test_parse_collectives_and_trip_counts():
+    mesh_axes = {"data": 16, "model": 16}
+    ops = costmodel.parse_hlo_collectives(SAMPLE_HLO, mesh_axes)
+    kinds = {o.kind for o in ops}
+    assert kinds == {"all-gather", "all-reduce"}
+    ar = next(o for o in ops if o.kind == "all-reduce")
+    ag = next(o for o in ops if o.kind == "all-gather")
+    # the all-reduce sits in a while body with trip count 48
+    assert ar.trip_count == 48
+    assert ag.trip_count == 1
+    # group {0..3} varies only the model (innermost) axis
+    assert ar.axes == ("model",)
+    # iota groups [16,16]<=[256]: 16 consecutive ids -> model axis
+    assert ag.axes == ("model",)
+    # wire bytes: all-reduce 2(n-1)/n * payload * trips
+    assert math.isclose(ar.wire_bytes,
+                        2 * 3 / 4 * 128 * 4 * 48, rel_tol=1e-6)
+
+
+def test_iota_replica_group_transpose():
+    hlo = """
+ENTRY %main (p: f32[64]) -> f32[64] {
+  ROOT %ar = f32[64]{0} all-reduce(f32[64]{0} %p), replica_groups=[16,16]<=[16,16]T(1,0), to_apply=%add
+}
+"""
+    ops = costmodel.parse_hlo_collectives(hlo, {"data": 16, "model": 16})
+    assert len(ops) == 1
+    # transposed iota: groups stride 16 -> data (outer) axis
+    assert ops[0].axes == ("data",)
+
+
+def test_shape_bytes_tuple():
+    assert costmodel._shape_bytes("(f32[128], bf16[64,2])") == \
+        128 * 4 + 64 * 2 * 2
+
+
+# ---------------------------------------------------------------------------
+# analytic FLOPs vs XLA cost analysis (single device, no sharding)
+# ---------------------------------------------------------------------------
+def test_analytic_flops_close_to_hlo_on_dense_matmul():
+    """XLA's flops for a pure matmul == 2*M*N*K; our conventions match."""
+    M, N, K = 128, 256, 512
+    f = jax.jit(lambda a, b: a @ b)
+    lowered = f.lower(jax.ShapeDtypeStruct((M, K), jnp.float32),
+                      jax.ShapeDtypeStruct((K, N), jnp.float32))
+    ca = lowered.compile().cost_analysis()
+    ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+    assert math.isclose(float(ca["flops"]), 2 * M * N * K, rel_tol=0.01)
+
+
+def test_model_flops_6nd():
+    cfg = get_config("llama3.2-3b")
+    sh = SHAPES["train_4k"]
+    mf = costmodel.model_flops(cfg, sh)
+    assert math.isclose(mf, 6 * cfg.active_param_count() * sh.tokens,
+                        rel_tol=1e-9)
+
+
+def test_step_flops_remat_multiplier():
+    cfg = get_config("qwen2-0.5b")
+    sh = SHAPES["train_4k"]
+    p_none = PolicyConfig(remat="none")
+    p_blk = PolicyConfig(remat="block")
+    f0 = costmodel.step_flops(cfg, sh, p_none)
+    f1 = costmodel.step_flops(cfg, sh, p_blk)
+    assert math.isclose(f1 / f0, 4.0 / 3.0, rel_tol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# fabric pricing reproduces the paper's orderings
+# ---------------------------------------------------------------------------
+def _report_with_collectives(frac_collective: float) -> costmodel.CostReport:
+    r = costmodel.CostReport(
+        arch="x", shape="train_4k", mesh={"data": 16, "model": 16},
+        flops_hlo=1e12, flops_analytic=256e12, model_flops=200e12,
+        hbm_bytes=1e9, peak_memory=None)
+    wire = frac_collective * 1e9
+    r.collectives = [costmodel.CollectiveOp("all-reduce", wire, 16,
+                                            ("data",))]
+    return r
+
+
+def test_fabric_pricing_order_local_hybrid_falcon():
+    """Fig 11's ordering: localGPUs <= hybridGPUs <= falconGPUs, and the
+    overhead grows with communication fraction (model size proxy)."""
+    systems = {name: compose.preset(name)
+               for name in ("localGPUs", "hybridGPUs", "falconGPUs")}
+    small = costmodel.price_on_fabrics(_report_with_collectives(0.1),
+                                       systems, overlap=0.0)
+    large = costmodel.price_on_fabrics(_report_with_collectives(30.0),
+                                       systems, overlap=0.0)
+    assert small["localGPUs"] <= small["hybridGPUs"] + 1e-12
+    assert small["hybridGPUs"] <= small["falconGPUs"] + 1e-12
+    ovh_small = small["falconGPUs"] / small["localGPUs"]
+    ovh_large = large["falconGPUs"] / large["localGPUs"]
+    assert ovh_large > ovh_small          # overhead grows with comm volume
+
+
+def test_roofline_dominant_term():
+    sys_ = compose.preset("localGPUs")
+    r = _report_with_collectives(1e5)     # huge collective volume
+    rl = costmodel.roofline(r, sys_)
+    assert rl.dominant == "collective"
+    assert rl.collective_s > rl.compute_s
+    r2 = _report_with_collectives(0.0)
+    rl2 = costmodel.roofline(r2, sys_)
+    assert rl2.dominant in ("compute", "memory")

@@ -1,0 +1,91 @@
+"""Property tests for the analytic roofline terms and fabric pricing."""
+import dataclasses
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import PolicyConfig, ShapeConfig
+from repro.core import compose, costmodel
+
+
+MESHES = [{"data": 16, "model": 16}, {"data": 64, "model": 4},
+          {"pod": 2, "data": 16, "model": 16}]
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "mamba2-780m",
+                                  "moonshot-v1-16b-a3b"])
+@pytest.mark.parametrize("shape_name", ["train_4k", "prefill_32k",
+                                        "decode_32k"])
+def test_analytic_hbm_positive_and_scales_down_with_devices(arch,
+                                                            shape_name):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    policy = PolicyConfig()
+    small = costmodel.analytic_hbm_bytes(cfg, shape, policy,
+                                         {"data": 4, "model": 4})
+    big = costmodel.analytic_hbm_bytes(cfg, shape, policy,
+                                       {"data": 16, "model": 16})
+    assert small > 0 and big > 0
+    assert big <= small  # more devices -> less per-device traffic
+
+
+def test_forward_flops_ordering():
+    """prefill(32k x 32) > train fwd per token parity; decode << prefill."""
+    cfg = get_config("llama3.2-3b")
+    f_train = costmodel.forward_flops(cfg, SHAPES["train_4k"])
+    f_prefill = costmodel.forward_flops(cfg, SHAPES["prefill_32k"])
+    f_decode = costmodel.forward_flops(cfg, SHAPES["decode_32k"])
+    assert f_decode < f_prefill
+    # same token count (1M), prefill has more attention work (longer S)
+    assert f_prefill > f_train
+
+
+def test_remat_increases_step_flops_only_for_train():
+    cfg = get_config("qwen2-0.5b")
+    p0 = PolicyConfig(remat="none")
+    p1 = PolicyConfig(remat="block")
+    assert costmodel.step_flops(cfg, SHAPES["train_4k"], p1) > \
+        costmodel.step_flops(cfg, SHAPES["train_4k"], p0)
+    assert costmodel.step_flops(cfg, SHAPES["decode_32k"], p1) == \
+        costmodel.step_flops(cfg, SHAPES["decode_32k"], p0)
+
+
+@given(bw_scale=st.floats(0.05, 1.0))
+@settings(max_examples=30, deadline=None)
+def test_roofline_collective_term_inversely_scales_with_bandwidth(
+        bw_scale):
+    """Pricing the same program on a slower fabric raises exactly the
+    collective term (the paper's core experiment)."""
+    r = costmodel.CostReport(
+        arch="x", shape="train_4k", mesh={"data": 16, "model": 16},
+        flops_hlo=1e12, flops_analytic=256e12, model_flops=200e12,
+        hbm_bytes=1e9, peak_memory=None)
+    r.collectives = [costmodel.CollectiveOp("all-reduce", 1e9, 16,
+                                            ("data",))]
+    fast = compose.preset("localGPUs")
+    slow_links = dict(fast.fabric.links)
+    from repro.core.topology import LinkClass, LinkSpec
+    slow_links[LinkClass.LOCAL] = LinkSpec(
+        LinkClass.LOCAL,
+        fast.fabric.links[LinkClass.LOCAL].bandwidth * bw_scale, 2e-6)
+    slow = dataclasses.replace(
+        fast, fabric=dataclasses.replace(fast.fabric, links=slow_links))
+    rl_fast = costmodel.roofline(r, fast)
+    rl_slow = costmodel.roofline(r, slow)
+    assert rl_slow.collective_s == pytest.approx(
+        rl_fast.collective_s / bw_scale, rel=1e-6)
+    assert rl_slow.compute_s == rl_fast.compute_s
+    assert rl_slow.memory_s == rl_fast.memory_s
+
+
+def test_wire_bytes_ring_factors():
+    for kind, factor in (("all-reduce", 2 * 15 / 16),
+                         ("all-gather", 15 / 16),
+                         ("reduce-scatter", 15 / 16),
+                         ("collective-permute", 1.0)):
+        op = costmodel.CollectiveOp(kind, 1e6, 16, ("data",))
+        assert op.wire_bytes == pytest.approx(factor * 1e6)
+    op = costmodel.CollectiveOp("all-reduce", 1e6, 16, ("data",),
+                                trip_count=48)
+    assert op.wire_bytes == pytest.approx(48 * 2 * 15 / 16 * 1e6)

@@ -1,0 +1,82 @@
+"""Data pipeline: determinism, sharding, storage-tier pricing."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, reduced
+from repro.configs.base import ShapeConfig
+from repro.core.topology import (DEFAULT_LINKS, LOCAL_NVME, SWITCH_NVME,
+                                 LinkClass)
+from repro.data import (Prefetcher, StorageModel, SyntheticDataset,
+                        input_stall)
+
+CFG = reduced(get_config("qwen2-0.5b"))
+SHAPE = ShapeConfig("t", 64, 8, "train")
+
+
+def test_batches_deterministic():
+    ds = SyntheticDataset(CFG, SHAPE, seed=1)
+    a = ds.batch_at(3)
+    b = ds.batch_at(3)
+    np.testing.assert_array_equal(a["inputs"], b["inputs"])
+    c = ds.batch_at(4)
+    assert not np.array_equal(a["inputs"], c["inputs"])
+
+
+def test_shards_are_disjoint_and_deterministic():
+    """Hosts generate their shard without coordination: same (step, shard)
+    -> same data; different shards -> different data."""
+    ds = SyntheticDataset(CFG, SHAPE, seed=1)
+    s0 = ds.batch_at(5, shard=0, n_shards=4)
+    s0b = ds.batch_at(5, shard=0, n_shards=4)
+    s1 = ds.batch_at(5, shard=1, n_shards=4)
+    np.testing.assert_array_equal(s0["inputs"], s0b["inputs"])
+    assert not np.array_equal(s0["inputs"], s1["inputs"])
+    assert s0["inputs"].shape[0] == SHAPE.global_batch // 4
+
+
+def test_labels_are_shifted_inputs():
+    ds = SyntheticDataset(CFG, SHAPE, seed=0)
+    b = ds.batch_at(0)
+    np.testing.assert_array_equal(b["inputs"][:, 1:], b["labels"][:, :-1])
+
+
+def test_tokens_in_vocab():
+    ds = SyntheticDataset(CFG, SHAPE, seed=0)
+    b = ds.batch_at(0)
+    assert b["inputs"].min() >= 0
+    assert b["inputs"].max() < CFG.vocab_size
+
+
+# ---------------------------------------------------------------------------
+# storage tiers (Fig 15's instrument)
+# ---------------------------------------------------------------------------
+def test_switch_nvme_slower_than_local():
+    local = StorageModel(LOCAL_NVME)
+    falcon = StorageModel(SWITCH_NVME)
+    nbytes = 1e9
+    assert falcon.read_time(nbytes) > local.read_time(nbytes)
+
+
+def test_switch_nvme_capped_by_fabric():
+    bw = SWITCH_NVME.effective_read_bw(DEFAULT_LINKS)
+    assert bw <= DEFAULT_LINKS[LinkClass.SWITCH].bandwidth
+    assert bw <= SWITCH_NVME.read_bw
+
+
+@given(read=st.floats(1e-4, 10), step=st.floats(1e-4, 10))
+@settings(max_examples=50, deadline=None)
+def test_input_stall_overlap_law(read, step):
+    """Prefetch hides reads up to the step time; never negative."""
+    stall = input_stall(read, step, prefetch=2)
+    assert stall >= 0
+    assert stall == pytest.approx(max(0.0, read - step))
+    assert input_stall(read, step, prefetch=0) == read
+
+
+def test_prefetcher_iterates():
+    ds = SyntheticDataset(CFG, SHAPE, seed=0)
+    pf = Prefetcher(ds, StorageModel(LOCAL_NVME), shard=1, n_shards=4)
+    b = next(pf)
+    assert b["inputs"].shape[0] == SHAPE.global_batch // 4
+    assert pf.read_time_s > 0

@@ -1,0 +1,74 @@
+"""Paper-benchmark fidelity: Table II parameter counts + trainability."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.paper_bench import (BERT_BASE, BERT_LARGE, MOBILENETV2,
+                                       PAPER_WORKLOADS, RESNET50, YOLOV5L)
+from repro.models import bert, vision
+from repro.models.transformer import RunCtx
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("cfg,expected,tol", [
+    (MOBILENETV2, 3.4e6, 0.05), (RESNET50, 25.6e6, 0.01),
+    (YOLOV5L, 47e6, 0.02)])
+def test_vision_param_counts_table2(cfg, expected, tol):
+    params = vision.init_vision(KEY, cfg)
+    n = vision.param_count(params)
+    assert abs(n - expected) / expected < tol, (cfg.name, n)
+
+
+@pytest.mark.parametrize("cfg,expected", [
+    (BERT_BASE, 110e6), (BERT_LARGE, 340e6)])
+def test_bert_param_counts_table2(cfg, expected):
+    assert abs(cfg.param_count() - expected) / expected < 0.03
+
+
+@pytest.mark.parametrize("cfg", [MOBILENETV2, RESNET50])
+def test_vision_train_step(cfg):
+    params = vision.init_vision(KEY, cfg)
+    imgs = jax.random.normal(KEY, (2, 64, 64, 3))
+    labels = jnp.asarray([1, 2])
+    loss, grads = jax.value_and_grad(vision.vision_loss)(
+        params, {"images": imgs, "labels": labels}, cfg)
+    assert bool(jnp.isfinite(loss))
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert gn > 0
+
+
+def test_yolo_forward_scales():
+    params = vision.init_yolov5l(KEY, num_classes=80)
+    imgs = jax.random.normal(KEY, (1, 128, 128, 3))
+    outs = vision.apply_yolov5l(params, imgs)
+    assert len(outs) == 3
+    # strides 8, 16, 32
+    assert outs[0].shape[1] == 16 and outs[1].shape[1] == 8 \
+        and outs[2].shape[1] == 4
+    assert all(o.shape[-1] == 3 * 85 for o in outs)
+
+
+def test_bert_qa_loss():
+    import dataclasses
+    cfg = dataclasses.replace(BERT_BASE, n_layers=2, d_model=64, n_heads=4,
+                              n_kv_heads=4, d_ff=128, vocab_size=512,
+                              block_pattern=("attn",) * 2, max_seq=64)
+    params = bert.init_bert_qa(KEY, cfg)
+    ctx = RunCtx(compute_dtype=jnp.float32, attn_impl="full", remat="none")
+    B, S = 2, 32
+    batch = {
+        "tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size),
+        "start": jnp.asarray([3, 7]), "end": jnp.asarray([5, 9]),
+        "segments": jnp.zeros((B, S), jnp.int32),
+    }
+    loss, _ = bert.qa_loss(params, batch, cfg, ctx)
+    assert bool(jnp.isfinite(loss))
+    g = jax.grad(lambda p: bert.qa_loss(p, batch, cfg, ctx)[0])(params)
+    assert all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree.leaves(g))
+
+
+def test_workloads_table_complete():
+    names = {w.name for w in PAPER_WORKLOADS}
+    assert names == {"mobilenetv2", "resnet50", "yolov5l", "bert-base",
+                     "bert-large"}

@@ -1,0 +1,116 @@
+"""Property tests for the sharding-policy engine."""
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, get_config, reduced
+from repro.configs.base import PolicyConfig
+from repro.core import policy as pol
+from repro.models import lm
+
+MESHES = [{"data": 16, "model": 16}, {"pod": 2, "data": 16, "model": 16},
+          {"data": 8, "model": 4}]
+
+
+def _leaves_with_specs(params, specs):
+    ps = jax.tree_util.tree_flatten_with_path(params)[0]
+    ss = jax.tree.leaves(specs, is_leaf=lambda s: isinstance(s, P))
+    assert len(ps) == len(ss)
+    return [(p, leaf, spec) for (p, leaf), spec in zip(ps, ss)]
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+@pytest.mark.parametrize("mesh_axes", MESHES)
+def test_param_specs_always_divisible(arch, mesh_axes, rng):
+    """Every sharded dim divides by the product of its axis sizes — for
+    every arch x mesh (this is what makes one policy serve all 40 cells)."""
+    cfg = get_config(arch)
+    policy = PolicyConfig(zero_stage=3,
+                          dp_axes=tuple(a for a in ("pod", "data")
+                                        if a in mesh_axes))
+    params = jax.eval_shape(lambda: lm.init_lm(rng, cfg))
+    specs = pol.param_specs(params, cfg, policy, mesh_axes)
+    for path, leaf, spec in _leaves_with_specs(params, specs):
+        for d, entry in enumerate(spec):
+            if entry is None:
+                continue
+            size = pol.axis_entry_size(entry, mesh_axes)
+            assert leaf.shape[d] % size == 0, (path, leaf.shape, spec)
+
+
+def test_zero_stages_shard_progressively(rng):
+    """stage0: params+opt replicated-ish; stage1: opt sharded over fsdp;
+    stage3: params sharded over fsdp too."""
+    cfg = get_config("llama3.2-3b")
+    mesh_axes = {"data": 16, "model": 16}
+    params = jax.eval_shape(lambda: lm.init_lm(rng, cfg))
+
+    def frac_fsdp(specs):
+        total = hit = 0
+        for s in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)):
+            total += 1
+            if any(e == "data" or (isinstance(e, tuple) and "data" in e)
+                   for e in s):
+                hit += 1
+        return hit / max(total, 1)
+
+    p0 = pol.param_specs(params, cfg,
+                         PolicyConfig(zero_stage=0), mesh_axes)
+    p3 = pol.param_specs(params, cfg,
+                         PolicyConfig(zero_stage=3), mesh_axes)
+    o0 = pol.opt_state_specs(params, cfg,
+                             PolicyConfig(zero_stage=0), mesh_axes)
+    o1 = pol.opt_state_specs(params, cfg,
+                             PolicyConfig(zero_stage=1), mesh_axes)
+    assert frac_fsdp(p0) == 0.0
+    assert frac_fsdp(p3) > 0.5
+    assert frac_fsdp(o0) == 0.0
+    assert frac_fsdp(o1) > 0.5
+
+
+@given(batch=st.integers(1, 512))
+@settings(max_examples=50, deadline=None)
+def test_batch_spec_divisibility(batch):
+    """dp axes drop (outermost first) until the batch divides."""
+    mesh_axes = {"pod": 2, "data": 16, "model": 16}
+    policy = PolicyConfig(dp_axes=("pod", "data"))
+    entry = pol.dp_spec_for_batch(batch, policy, mesh_axes)
+    if entry is None:
+        assert batch % 16 or batch % 32
+    else:
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        n = 1
+        for a in axes:
+            n *= mesh_axes[a]
+        assert batch % n == 0
+
+
+def test_cache_specs_shard_length_not_heads(rng):
+    """32k decode caches shard the *length* dim over model (flash-decode
+    layout); kv-head counts (8, 2, 1...) rarely divide 16."""
+    cfg = get_config("command-r-35b")
+    from repro.models import transformer
+    caches = jax.eval_shape(
+        lambda: transformer.init_stack_cache(cfg, 128, 32768, jnp.bfloat16))
+    specs = pol.cache_specs(caches, PolicyConfig(), {"data": 16, "model": 16})
+    found_len_shard = False
+    for leaf, spec in zip(jax.tree.leaves(caches),
+                          jax.tree.leaves(specs,
+                                          is_leaf=lambda s: isinstance(s, P))):
+        for d, entry in enumerate(spec):
+            if entry == "model" and leaf.shape[d] == 32768:
+                found_len_shard = True
+            if entry is not None:
+                size = pol.axis_entry_size(entry, {"data": 16, "model": 16})
+                assert leaf.shape[d] % size == 0
+    assert found_len_shard
+
+
+def test_ladder_matches_paper_fig16():
+    ladder = pol.ladder(PolicyConfig())
+    assert list(ladder) == ["DP", "DDP", "DDP+mixed", "DDP+mixed+sharded"]
+    assert ladder["DP"].compute_dtype == "float32"
+    assert ladder["DDP+mixed"].compute_dtype == "bfloat16"
+    assert ladder["DDP+mixed+sharded"].zero_stage == 3

@@ -1,0 +1,123 @@
+"""Property tests (hypothesis) for the composable-system invariants."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compose, topology
+from repro.core.topology import DevicePool, LinkClass, make_pool
+
+
+# ---------------------------------------------------------------------------
+# pool invariants
+# ---------------------------------------------------------------------------
+@given(n_fail=st.integers(0, 64), n_attach=st.integers(0, 32))
+@settings(max_examples=50, deadline=None)
+def test_pool_mutation_conserves_devices(n_fail, n_attach):
+    pool = make_pool(n_local=128, n_switch=128, pods=2)
+    total = len(pool.devices)
+    uids = [d.uid for d in pool.devices[:n_fail]]
+    pool.mark_failed(uids)
+    assert len(pool.devices) == total                       # fail != detach
+    assert len(pool.healthy()) == total - len(set(uids))
+    new = pool.attach(n_attach, LinkClass.SWITCH, domain=1)
+    assert len(pool.healthy()) == total - len(set(uids)) + n_attach
+    pool.repair(uids)
+    assert len(pool.healthy()) == total + n_attach
+    pool.detach(new)
+    assert len(pool.devices) == total
+
+
+@given(st.integers(2, 6), st.integers(2, 6))
+@settings(max_examples=30, deadline=None)
+def test_compose_claims_exactly_mesh_size(a, b):
+    pool = make_pool(n_local=64, n_switch=64, pods=2)
+    sys_ = compose.compose(pool, "t", ("data", "model"), (a, b),
+                           {"data": LinkClass.LOCAL,
+                            "model": LinkClass.LOCAL})
+    assert len(sys_.device_uids) == a * b
+    assert len(set(sys_.device_uids)) == a * b              # no double-claim
+
+
+def test_compose_rejects_oversubscription():
+    pool = make_pool(n_local=8, n_switch=0, pods=1)
+    with pytest.raises(compose.CompositionError):
+        compose.compose(pool, "big", ("data",), (64,),
+                        {"data": LinkClass.LOCAL})
+
+
+@given(st.integers(1, 200))
+@settings(max_examples=30, deadline=None)
+def test_shrink_to_pool_always_fits(n_fail):
+    pool = make_pool(n_local=256, n_switch=0, pods=1)
+    sys_ = compose.compose(pool, "t", ("data", "model"), (16, 16),
+                           {"data": LinkClass.LOCAL,
+                            "model": LinkClass.LOCAL})
+    pool.mark_failed([d.uid for d in pool.devices[:n_fail]])
+    if len(pool.healthy()) < 1 * 16:
+        return
+    new = compose.shrink_to_pool(pool, sys_, "data")
+    assert new.n_devices <= len(pool.healthy())
+    assert new.axis_names == sys_.axis_names
+
+
+# ---------------------------------------------------------------------------
+# fabric pricing invariants
+# ---------------------------------------------------------------------------
+def test_link_table_matches_paper_ratios():
+    links = topology.DEFAULT_LINKS
+    ll = links[LinkClass.LOCAL].bandwidth
+    ff = links[LinkClass.SWITCH].bandwidth
+    fl = links[LinkClass.HOST].bandwidth
+    assert math.isclose(ff / ll, 24.47 / 72.37, rel_tol=1e-6)
+    assert math.isclose(fl / ll, 19.64 / 72.37, rel_tol=1e-6)
+    # ordering from the paper's Table IV
+    assert ll > ff > fl > 0
+
+
+@given(nbytes=st.floats(1e3, 1e12), n=st.integers(2, 512))
+@settings(max_examples=50, deadline=None)
+def test_collective_cost_ordering(nbytes, n):
+    """allreduce costs ~2x allgather; all presets price local <= switch."""
+    local = compose.preset("localGPUs")
+    falcon = compose.preset("falconGPUs")
+    t_local = local.collective_time("data", nbytes, "all-reduce")
+    t_falcon = falcon.collective_time("data", nbytes, "all-reduce")
+    assert t_falcon > t_local
+    ag = local.collective_time("data", nbytes, "all-gather")
+    ar = local.collective_time("data", nbytes, "all-reduce")
+    assert ar > ag
+
+
+def test_presets_cover_paper_table3():
+    for label in compose.PRESET_LABELS:
+        sys_ = compose.preset(label)
+        assert sys_.n_devices == 256
+        assert set(sys_.axis_names) == {"data", "model"}
+    hybrid = compose.preset("hybridGPUs")
+    assert hybrid.fabric.axis_links["model"] == LinkClass.LOCAL
+    assert hybrid.fabric.axis_links["data"] == LinkClass.SWITCH
+    fn = compose.preset("falconNVMe")
+    assert fn.fabric.storage.attach == LinkClass.SWITCH
+
+
+def test_multi_pod_production_system():
+    sys_ = compose.production_system(multi_pod=True)
+    assert sys_.shape == {"pod": 2, "data": 16, "model": 16}
+    assert sys_.fabric.axis_links["pod"] == LinkClass.DCN
+    assert sys_.axis_bandwidth("pod") < sys_.axis_bandwidth("data")
+
+
+# ---------------------------------------------------------------------------
+# recompose = the elastic path
+# ---------------------------------------------------------------------------
+def test_recompose_after_failure_excludes_dead_devices():
+    pool = make_pool(n_local=300, n_switch=0, pods=1)
+    sys_ = compose.compose(pool, "t", ("data", "model"), (16, 16),
+                           {"data": LinkClass.LOCAL,
+                            "model": LinkClass.LOCAL})
+    dead = list(sys_.device_uids[:10])
+    pool.mark_failed(dead)
+    new = compose.recompose(pool, sys_)
+    assert not set(dead) & set(new.device_uids)
+    assert new.n_devices == 256
