@@ -1,0 +1,57 @@
+"""Cluster-sim smoke benchmark: the paper's Figs 10-12 at cluster level.
+
+Runs a fixed-seed trace (mixed train/prefill/decode jobs, one injected
+failure wave) through ``repro.cluster`` and reports pool utilization,
+accelerator under-utilization (AUU), per-link-class traffic, and
+recomposition overhead — the perf-trajectory artifact for the control
+plane.  ``report()`` returns the JSON dict that ``run.py --bench
+cluster_sim`` writes to ``results/cluster_sim.json``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+from repro.cluster import TraceConfig, run_trace
+
+BENCH_CFG = TraceConfig(n_jobs=24, arrival_rate_hz=0.2, seed=7,
+                        failures=((120.0, 12),), repair_after_s=180.0)
+
+
+def report() -> Dict[str, object]:
+    rep = run_trace(BENCH_CFG)
+    rep["bench"] = "cluster_sim"
+    return rep
+
+
+def run() -> List[Tuple[str, float, str]]:
+    t0 = time.perf_counter()
+    rep = report()
+    us = (time.perf_counter() - t0) * 1e6
+    jobs = rep["jobs"]
+    rec = rep["recomposition"]
+    wait = rep["job_wait_s"]
+    lt = rep["link_traffic_gb"]
+    ok = (jobs["completed"] + jobs["rejected"] == jobs["submitted"]
+          and jobs["stranded"] == 0 and rep["lease_conflicts"] == 0)
+    return [
+        ("cluster_sim/jobs", us,
+         f"submitted={jobs['submitted']} completed={jobs['completed']} "
+         f"rejected={jobs['rejected']} preempted={jobs['preempted']} "
+         f"stranded={jobs['stranded']} "
+         f"conflicts={rep['lease_conflicts']} "
+         f"{'OK' if ok else 'FAIL'}"),
+        ("cluster_sim/utilization", us,
+         f"pool_util={rep['pool_utilization']*100:.1f}% "
+         f"AUU={rep['auu']*100:.1f}% "
+         f"(AU={rep['accelerator_utilization']*100:.1f}%)"),
+        ("cluster_sim/traffic", us,
+         "per-link GB: " + " ".join(
+             f"{k}={v:.0f}" for k, v in lt.items())),
+        ("cluster_sim/recompose", us,
+         f"count={rec['count']} overhead={rec['overhead_s']:.2f}s "
+         f"({rec['overhead_frac']*100:.2f}% of span)"),
+        ("cluster_sim/wait", us,
+         f"p50={wait['p50']:.1f}s p99={wait['p99']:.1f}s "
+         f"mean={wait['mean']:.1f}s makespan={rep['makespan_s']:.0f}s"),
+    ]

@@ -2,19 +2,28 @@
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only fig11]
 Prints ``name,us_per_call,derived`` CSV per row.
+
+``--bench <name>`` runs one module and, when it exposes ``report()``,
+emits the JSON artifact to stdout and ``results/<name>.json`` (the
+machine-readable perf trajectory; currently ``cluster_sim``).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--bench", default="",
+                    help="run one module; write its JSON report artifact")
+    ap.add_argument("--out-dir", default="results")
     args = ap.parse_args()
 
-    from benchmarks import (beyond_paper, fig10_utilization,
+    from benchmarks import (beyond_paper, cluster_sim, fig10_utilization,
                             fig11_switch_overhead, fig12_traffic,
                             fig15_storage, fig16_sw_opt, recompose,
                             roofline, table2_models, table4_links)
@@ -29,7 +38,29 @@ def main() -> int:
         "beyond": beyond_paper,
         "recompose": recompose,
         "roofline": roofline,
+        "cluster_sim": cluster_sim,
     }
+
+    if args.bench:
+        mod = modules.get(args.bench)
+        if mod is None:
+            print(f"unknown bench {args.bench!r}; known: {sorted(modules)}",
+                  file=sys.stderr)
+            return 2
+        if not hasattr(mod, "report"):
+            print(f"bench {args.bench!r} has no report(); use --only",
+                  file=sys.stderr)
+            return 2
+        rep = mod.report()
+        out = json.dumps(rep, indent=2, default=str)
+        print(out)
+        os.makedirs(args.out_dir, exist_ok=True)
+        path = os.path.join(args.out_dir, f"{args.bench}.json")
+        with open(path, "w") as f:
+            f.write(out + "\n")
+        print(f"wrote {path}", file=sys.stderr)
+        return 0
+
     print("name,us_per_call,derived")
     failed = 0
     for name, mod in modules.items():

@@ -1,0 +1,26 @@
+"""Composable-cluster control plane.
+
+The paper composes ONE system at a time by hand.  This package lifts that
+to the operating point the composable-infrastructure pitch actually
+targets (and that Takano & Suzaki's disaggregation manager automates for
+real clouds): many tenants sharing one device pool, each job leased an
+exclusive slice, composed on the fabric that matches its placement, and
+re-composed elastically when devices fail.
+
+  * ``lease``     — exclusive claim/release with domain-aware placement
+  * ``scheduler`` — multi-tenant job queue: admission, backfill,
+                    preempt-to-shrink on failure
+  * ``simulator`` — trace-driven discrete-event cluster simulation
+  * ``telemetry`` — per-link traffic, utilization/AUU, recompose overhead
+"""
+from repro.cluster.lease import LeaseManager, PlacementPlan, plan_placement
+from repro.cluster.scheduler import Job, Scheduler
+from repro.cluster.simulator import (ClusterSimulator, JobTemplate,
+                                     TraceConfig, run_trace)
+from repro.cluster.telemetry import ClusterEvent, Telemetry
+
+__all__ = [
+    "ClusterEvent", "ClusterSimulator", "Job", "JobTemplate", "LeaseManager",
+    "PlacementPlan", "Scheduler", "Telemetry", "TraceConfig",
+    "plan_placement", "run_trace",
+]

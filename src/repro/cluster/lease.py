@@ -1,0 +1,227 @@
+"""Pool leasing: exclusive device claims with domain-aware placement.
+
+``DevicePool`` enforces the raw invariant (no uid is leased twice);
+this module adds the *placement policy* on top: which devices a job
+should claim, and which link class each mesh axis consequently rides
+on.  The rule mirrors how ``compose()`` lays out axes — the innermost
+(model/tp) axis is kept inside a single locality clique whenever the
+pool allows it, so tensor-parallel collectives ride the fast fabric
+and only the data axis spans the composed switch:
+
+  * every tp-group inside one (domain, LOCAL) clique  -> model on LOCAL
+  * tp-groups intact but on switch-attached devices   -> model on SWITCH
+  * data axis within one clique                       -> data on LOCAL
+  * data axis spanning domains or fabrics             -> data on SWITCH
+
+This is the paper's Table III spectrum (localGPUs / hybridGPUs /
+falconGPUs) derived from *where the free devices actually are* instead
+of fixed by hand.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.compose import CompositionError, ComposedSystem
+from repro.core.topology import Device, DevicePool, LeaseError, LinkClass
+
+# bandwidth ordering used to pick the "worst" link a span needs
+_LINK_RANK = {LinkClass.LOCAL: 0, LinkClass.SWITCH: 1, LinkClass.HOST: 2,
+              LinkClass.DCN: 3}
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementPlan:
+    """A concrete device selection for a (dp, tp) mesh, plus the link
+    class each axis must be priced on given that selection."""
+    uids: Tuple[int, ...]
+    axis_links: Dict[str, LinkClass]
+    n_domains: int
+    fabrics: Tuple[LinkClass, ...]        # distinct device fabrics used
+    note: str = ""
+
+    @property
+    def label(self) -> str:
+        return "+".join(sorted(f.value for f in set(self.fabrics)))
+
+
+def derive_axis_links(pool: DevicePool, uids: Sequence[int], tp: int
+                      ) -> Dict[str, LinkClass]:
+    """Link class per mesh axis implied by an *actual* device selection.
+
+    ``compose()`` reshapes the claim row-major, so consecutive runs of
+    ``tp`` uids form the tensor-parallel groups.  Used both when planning
+    a placement and after an elastic recompose, whose spare devices may
+    sit on a different fabric than the original claim.
+    """
+    dev = {d.uid: d for d in pool.devices}
+    chosen = [dev[u] for u in uids]
+    chunks = [chosen[i:i + tp] for i in range(0, len(chosen), tp)]
+
+    def span_link(c: Sequence[Device]) -> LinkClass:
+        """Worst link a set of devices needs to talk (Table IV semantics):
+        one clique -> its own fabric; mixed fabrics -> host root complex;
+        same fabric across domains -> the composable switch spans drawers,
+        but local ICI does not, so cross-domain LOCAL rides the DCN."""
+        fabrics = {x.fabric for x in c}
+        if len(fabrics) > 1:
+            return LinkClass.HOST
+        f = next(iter(fabrics))
+        if len({x.domain for x in c}) == 1:
+            return f
+        return f if f == LinkClass.SWITCH else LinkClass.DCN
+
+    model_link = max((span_link(c) for c in chunks),
+                     key=lambda c: _LINK_RANK[c])
+    data_link = model_link if len(chunks) == 1 else span_link(chosen)
+    return {"data": data_link, "model": model_link}
+
+
+def _cliques(free: Sequence[Device]) -> List[List[Device]]:
+    """Free devices grouped into locality cliques (same domain + fabric),
+    LOCAL-fabric cliques first, largest first within a fabric class."""
+    by_key: Dict[Tuple[int, LinkClass], List[Device]] = {}
+    for d in free:
+        by_key.setdefault((d.domain, d.fabric), []).append(d)
+    groups = sorted(by_key.values(),
+                    key=lambda g: (_LINK_RANK[g[0].fabric], -len(g),
+                                   g[0].domain))
+    return groups
+
+
+def plan_placement(pool: DevicePool, dp: int, tp: int,
+                   prefer_fabric: Optional[LinkClass] = None
+                   ) -> PlacementPlan:
+    """Choose ``dp*tp`` available devices and derive per-axis link classes.
+
+    Selection is clique-major in whole tp-sized chunks: each tp-group is
+    carved from a single clique while any clique has room, so the model
+    axis stays on the clique's fabric; the data axis degrades to SWITCH
+    as soon as the selection spans cliques.  Raises ``CompositionError``
+    when the available pool cannot cover the request.
+    """
+    n = dp * tp
+    free = pool.available()
+    if len(free) < n:
+        raise CompositionError(
+            f"placement needs {n} devices; only {len(free)} available "
+            f"({len(pool.healthy())} healthy, "
+            f"{len(pool.leases)} leased)")
+    groups = _cliques(free)
+    if prefer_fabric is not None:
+        groups.sort(key=lambda g: (g[0].fabric != prefer_fabric,
+                                   _LINK_RANK[g[0].fabric], -len(g)))
+
+    picked: List[Device] = []
+    gi = 0
+    while len(picked) < n and gi < len(groups):
+        g = groups[gi]
+        # carve whole tp-groups out of this clique while it has room
+        while len(g) >= tp and len(picked) < n:
+            picked.extend(g[:tp])
+            g = g[tp:]
+        groups[gi] = g
+        gi += 1
+    if len(picked) < n:
+        # remainder: tp-groups must straddle cliques (model axis degrades)
+        rest = [d for g in groups for d in g]
+        picked.extend(rest[:n - len(picked)])
+
+    uids = tuple(d.uid for d in picked)
+    axis_links = derive_axis_links(pool, uids, tp)
+    domains = {d.domain for d in picked}
+    fabrics = {d.fabric for d in picked}
+    note = (f"{len(domains)} domain(s), "
+            f"{'+'.join(sorted(f.value for f in fabrics))}")
+    return PlacementPlan(uids, axis_links, len(domains),
+                         tuple(sorted(fabrics, key=_LINK_RANK.get)), note)
+
+
+# ---------------------------------------------------------------------------
+# lease lifecycle bookkeeping (job-facing view over DevicePool.leases)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Lease:
+    lease_id: int
+    holder: str
+    uids: Tuple[int, ...]
+    t_acquired: float
+
+
+class LeaseManager:
+    """Tracks the pool's active leases as first-class objects.
+
+    ``compose()`` performs the actual claim inside the pool; the manager
+    records who holds what since when, counts conflicts (claims that
+    raised), and answers utilization queries for telemetry.
+    """
+
+    def __init__(self, pool: DevicePool):
+        self.pool = pool
+        self._leases: Dict[int, Lease] = {}      # lease_id -> Lease; a
+        self._next_id = 0                        # holder may hold several
+        self.conflicts = 0
+
+    def _record(self, holder: str, uids: Tuple[int, ...],
+                now: float) -> Lease:
+        lease = Lease(self._next_id, holder, uids, now)
+        self._next_id += 1
+        self._leases[lease.lease_id] = lease
+        return lease
+
+    # ------------------------------------------------------------ claims --
+    def adopt(self, system: ComposedSystem, now: float = 0.0) -> Lease:
+        """Record a lease for a system ``compose()`` already claimed."""
+        for u in system.device_uids:
+            if self.pool.leases.get(u) != system.name:
+                raise LeaseError(
+                    f"device {u} is not leased to {system.name!r}; "
+                    "adopt() requires a composed (claimed) system")
+        return self._record(system.name, system.device_uids, now)
+
+    def acquire(self, holder: str, uids: Sequence[int],
+                now: float = 0.0) -> Lease:
+        """Directly claim explicit uids (storage tiers, spare tranches)."""
+        self.pool.lease(uids, holder)
+        return self._record(holder, tuple(uids), now)
+
+    def release(self, holder: str) -> List[int]:
+        self.forget(holder)
+        return self.pool.release_holder(holder)
+
+    def forget(self, holder: str) -> None:
+        """Drop the manager's records only — pool leases stay intact (used
+        when a recompose already re-leased under the same holder)."""
+        for lid in [l.lease_id for l in self._leases.values()
+                    if l.holder == holder]:
+            del self._leases[lid]
+
+    # ----------------------------------------------------------- queries --
+    def active(self) -> List[Lease]:
+        return sorted(self._leases.values(), key=lambda l: l.lease_id)
+
+    def holder_of(self, uid: int) -> Optional[str]:
+        return self.pool.leases.get(uid)
+
+    def n_leased(self) -> int:
+        return len(self.pool.leases)
+
+    def utilization(self) -> float:
+        """Leased fraction of the healthy pool (instantaneous)."""
+        healthy = len(self.pool.healthy())
+        if healthy == 0:
+            return 0.0
+        leased_healthy = sum(1 for d in self.pool.devices
+                             if d.healthy and d.uid in self.pool.leases)
+        return leased_healthy / healthy
+
+    def check_exclusive(self) -> None:
+        """Invariant: every lease's uids are disjoint and pool-backed."""
+        seen: Dict[int, str] = {}
+        for lease in self._leases.values():
+            for u in lease.uids:
+                if u in seen and self.pool.leases.get(u) is not None:
+                    raise LeaseError(
+                        f"uid {u} held by both {seen[u]!r} and "
+                        f"{lease.holder!r}")
+                seen[u] = lease.holder

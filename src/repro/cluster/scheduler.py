@@ -1,0 +1,377 @@
+"""Multi-tenant scheduler over the shared composable pool.
+
+Jobs (train / prefill / decode, drawn from the ``configs/`` registry)
+queue for slices of the device pool.  For each job the scheduler:
+
+  1. **admits** it only if the analytic model (``core.recommend``) finds a
+     feasible (dp, tp) factorization of the requested chip budget —
+     batch divisibility, MoE expert divisibility, and the per-device HBM
+     estimate are all checked, so a 35B train job asking for 2 chips is
+     rejected at submit time instead of OOMing at compose time;
+  2. **places** it with domain-aware leasing (``cluster.lease``): the tp
+     axis stays inside a locality clique when possible, and the per-axis
+     link classes of the composition follow from where the free devices
+     actually are (localGPUs / hybridGPUs / falconGPUs emerge from pool
+     state);
+  3. **starts** it via ``core.compose`` — which claims an exclusive lease
+     on the devices, so two jobs can never hold the same chip;
+  4. on device failure, **preempts-to-shrink** using ``train.elastic``
+     semantics: same-shape recompose from spares when they exist, halve
+     the data axis when they don't, re-queue the job when even a 1-wide
+     mesh no longer fits.
+
+Queue policy is priority FIFO with EASY backfill: the head job reserves
+the earliest time enough devices free up (running jobs expose analytic
+end-time estimates), and a later job may jump ahead only if it fits the
+free pool *and* its estimated finish does not push past the reservation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.cluster.lease import (LeaseManager, derive_axis_links,
+                                 plan_placement)
+from repro.cluster.telemetry import Telemetry
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+from repro.core import recommend
+from repro.core.compose import (ComposedSystem, CompositionError, compose,
+                                release)
+from repro.core.topology import DevicePool, LinkClass
+from repro.train import elastic
+
+QUEUED, RUNNING, DONE, REJECTED = "queued", "running", "done", "rejected"
+
+
+@dataclasses.dataclass
+class Job:
+    """One tenant workload: an (arch, shape) cell plus a chip budget."""
+    name: str
+    arch: str
+    shape_name: str                  # train_4k | prefill_32k | decode_32k
+    n_chips: int
+    steps: int = 10
+    priority: int = 0
+    # lifecycle (filled by the scheduler)
+    state: str = QUEUED
+    submit_t: float = 0.0
+    queued_t: float = 0.0            # last time the job entered the queue
+    start_t: float = 0.0
+    progress_t: float = 0.0          # last time steps_done was brought up
+    end_t: float = 0.0
+    plan: Optional[recommend.Candidate] = None
+    system: Optional[ComposedSystem] = None
+    run: Optional[elastic.ElasticRun] = None
+    steps_done: float = 0.0
+    recompositions: int = 0
+    epoch: int = 0                   # bumped on every shape change/preempt
+    why_rejected: str = ""
+
+    @property
+    def kind(self) -> str:
+        return SHAPES[self.shape_name].kind
+
+    @property
+    def dp_tp(self) -> Tuple[int, int]:
+        assert self.plan is not None
+        return self.plan.shape[-2], self.plan.shape[-1]
+
+    @property
+    def step_s(self) -> float:
+        assert self.plan is not None
+        return self.plan.step_s
+
+    def remaining_steps(self) -> float:
+        return max(0.0, self.steps - self.steps_done)
+
+    def est_duration_s(self) -> float:
+        return self.remaining_steps() * self.step_s
+
+    def est_restore_s(self) -> float:
+        """Checkpoint-restore cost a resumed job pays before stepping:
+        the fp32 parameters read back over the composition's storage tier
+        (NVMe-class estimate while queued, placement unknown)."""
+        if self.steps_done <= 0:
+            return 0.0
+        from repro.core.topology import LOCAL_NVME
+        pbytes = get_config(self.arch).param_count() * 4.0
+        if self.system is not None:
+            return pbytes / self.system.fabric.storage.effective_read_bw(
+                self.system.fabric.links)
+        return pbytes / LOCAL_NVME.read_bw
+
+    @property
+    def est_end_t(self) -> float:
+        # anchored at the last progress accrual, not start_t: remaining
+        # steps shrink as steps_done grows, so start_t-anchoring would
+        # drift the estimate earlier and earlier while the job runs
+        return max(self.progress_t, self.start_t) + self.est_duration_s()
+
+
+class Scheduler:
+    """Priority-FIFO + EASY-backfill scheduler with elastic failure handling."""
+
+    def __init__(self, pool: DevicePool, telemetry: Optional[Telemetry] = None,
+                 backfill: bool = True):
+        self.pool = pool
+        self.telemetry = telemetry or Telemetry(len(pool.devices))
+        self.backfill = backfill
+        self.manager = LeaseManager(pool)
+        self.queue: List[Job] = []
+        self.running: List[Job] = []
+        self.done: List[Job] = []
+        self.rejected: List[Job] = []
+
+    # ------------------------------------------------------------- admit --
+    def _candidates_for(self, job: Job, n_chips: Optional[int] = None
+                        ) -> List[recommend.Candidate]:
+        cfg = get_config(job.arch)
+        shape = SHAPES[job.shape_name]
+        n = n_chips or job.n_chips
+        return [recommend._estimate(cfg, shape, dp, tp)
+                for dp, tp in recommend.candidates(n)]
+
+    @staticmethod
+    def _best(cands: List[recommend.Candidate]
+              ) -> Optional[recommend.Candidate]:
+        feasible = sorted((c for c in cands if c.feasible),
+                          key=lambda c: c.step_s)
+        return feasible[0] if feasible else None
+
+    def plan_job(self, job: Job, n_chips: Optional[int] = None
+                 ) -> Optional[recommend.Candidate]:
+        """Best feasible (dp, tp) candidate at the given chip budget."""
+        return self._best(self._candidates_for(job, n_chips))
+
+    @staticmethod
+    def _repriced(plan: recommend.Candidate, system: ComposedSystem
+                  ) -> recommend.Candidate:
+        """Re-price the collective term on the fabric the job actually got.
+
+        The admission-time estimate assumes full-speed ICI on every axis;
+        once placed, each axis's wire bytes are divided by the real link
+        bandwidth — a switch- or DCN-spanning placement runs measurably
+        slower, which is the paper's local-vs-falcon gap at cluster level.
+        """
+        coll = 0.0
+        for axis, nbytes in plan.wire_bytes.items():
+            if nbytes <= 0:
+                continue
+            if axis in system.fabric.axis_links:
+                bw = system.fabric.bandwidth(axis)
+            else:
+                bw = system.fabric.slowest().bandwidth
+            coll += nbytes / bw
+        terms = dict(plan.terms)
+        terms["collective"] = coll
+        step = max(terms.get("compute", 0.0), terms.get("memory", 0.0), coll)
+        return dataclasses.replace(plan, step_s=step, terms=terms)
+
+    def submit(self, job: Job, now: float = 0.0) -> bool:
+        """Admission control; returns False (and records why) on rejection."""
+        self.telemetry.jobs_submitted += 1
+        job.submit_t = now
+        job.queued_t = now
+        if job.n_chips > len(self.pool.devices):
+            job.state = REJECTED
+            job.why_rejected = (f"requests {job.n_chips} chips; pool has "
+                                f"{len(self.pool.devices)}")
+        else:
+            cands = self._candidates_for(job)
+            plan = self._best(cands)
+            if plan is None:
+                job.state = REJECTED
+                job.why_rejected = ("no feasible (dp,tp) at "
+                                    f"{job.n_chips} chips: "
+                                    + "; ".join(c.why for c in cands[:3]))
+            else:
+                job.plan = plan
+        if job.state == REJECTED:
+            self.rejected.append(job)
+            self.telemetry.jobs_rejected += 1
+            self.telemetry.log(now, "reject", job.name, job.why_rejected)
+            return False
+        self.queue.append(job)
+        self.telemetry.log(now, "submit", job.name,
+                           f"{job.arch}/{job.shape_name} x{job.n_chips}")
+        return True
+
+    # ------------------------------------------------------------- start --
+    def _start(self, job: Job, now: float) -> bool:
+        dp, tp = job.dp_tp
+        try:
+            plan = plan_placement(self.pool, dp, tp)
+            job.system = compose(
+                self.pool, job.name, ("data", "model"), (dp, tp),
+                plan.axis_links, uids=plan.uids)
+        except CompositionError as e:
+            # capacity was checked before calling; reaching here means a
+            # genuine claim conflict — count it and leave the job queued
+            self.manager.conflicts += 1
+            self.telemetry.lease_conflicts += 1
+            self.telemetry.log(now, "conflict", job.name, str(e))
+            return False
+        self.manager.adopt(job.system, now)
+        job.plan = self._repriced(job.plan, job.system)
+        job.state = RUNNING
+        job.start_t = now
+        job.progress_t = now
+        job.run = elastic.ElasticRun(job.system, ckpt_dir="")
+        self.running.append(job)
+        # wait = time spent in the queue since the last (re)queueing; run
+        # time before a preemption is not wait
+        self.telemetry.job_waited(now - job.queued_t)
+        self.telemetry.log(
+            now, "start", job.name,
+            f"mesh={dp}x{tp} links=" +
+            ",".join(f"{a}:{c.value}"
+                     for a, c in job.system.fabric.axis_links.items()))
+        return True
+
+    # ---------------------------------------------------------- schedule --
+    def _sorted_queue(self) -> List[Job]:
+        return sorted(self.queue, key=lambda j: (-j.priority, j.submit_t))
+
+    def _reservation_t(self, need: int, now: float) -> float:
+        """Earliest time ``need`` devices can be free, from running jobs'
+        analytic end-time estimates (EASY reservation for the head job)."""
+        free = len(self.pool.available())
+        if free >= need:
+            return now
+        for job in sorted(self.running, key=lambda j: j.est_end_t):
+            free += job.system.n_devices if job.system else 0
+            if free >= need:
+                return max(now, job.est_end_t)
+        return float("inf")
+
+    def poll(self, now: float) -> List[Job]:
+        """Start every job the policy admits right now; returns them."""
+        started: List[Job] = []
+        while True:
+            order = self._sorted_queue()
+            if not order:
+                break
+            head = order[0]
+            free = len(self.pool.available())
+            picked: Optional[Job] = None
+            if head.n_chips <= free:
+                picked = head
+            elif self.backfill:
+                reserve_t = self._reservation_t(head.n_chips, now)
+                for job in order[1:]:
+                    if (job.n_chips <= free
+                            and now + job.est_restore_s()
+                            + job.est_duration_s() <= reserve_t):
+                        picked = job
+                        break
+            if picked is None or not self._start(picked, now):
+                break
+            self.queue.remove(picked)
+            started.append(picked)
+        return started
+
+    # ---------------------------------------------------------- complete --
+    def on_complete(self, job: Job, now: float) -> None:
+        assert job.state == RUNNING
+        job.steps_done = job.steps
+        job.state = DONE
+        job.end_t = now
+        self.running.remove(job)
+        self.done.append(job)
+        release(self.pool, job.system)
+        self.manager.release(job.name)
+        self.telemetry.jobs_completed += 1
+        self.telemetry.log(now, "complete", job.name,
+                           f"ran {now - job.start_t:.1f}s")
+
+    # ----------------------------------------------------------- failure --
+    def on_failure(self, failed_uids: Sequence[int], now: float
+                   ) -> List[Job]:
+        """Handle device failures; returns every job that was recomposed
+        or preempted (the caller must re-estimate completion times)."""
+        self.pool.mark_failed(failed_uids)
+        self.telemetry.log(now, "fail", "",
+                           f"{len(failed_uids)} device(s) down")
+        failed = set(failed_uids)
+        changed: List[Job] = []
+        for job in list(self.running):
+            hit = failed & set(job.system.device_uids)
+            if not hit:
+                continue
+            old_shape = job.system.axis_sizes
+            try:
+                new_sys = elastic.handle_failure(
+                    job.run, self.pool, sorted(hit),
+                    step=int(job.steps_done), shrink_axis="data")
+            except CompositionError:
+                self._preempt(job, now)
+                changed.append(job)
+                continue
+            if new_sys.axis_sizes != old_shape:
+                dp, tp = new_sys.axis_sizes[-2], new_sys.axis_sizes[-1]
+                new_plan = recommend._estimate(
+                    get_config(job.arch), SHAPES[job.shape_name], dp, tp)
+                if not new_plan.feasible:
+                    # fits the pool by count but not by memory (e.g. the
+                    # halved mesh can't hold the optimizer shards): the
+                    # job cannot run in this shape — give everything back
+                    job.run.system = new_sys
+                    self._preempt(job, now)
+                    changed.append(job)
+                    continue
+                job.plan = new_plan
+            # the spare devices may sit on a different fabric than the
+            # original claim: re-derive the per-axis link classes so
+            # pricing and traffic attribution follow the actual hardware
+            links = derive_axis_links(self.pool, new_sys.device_uids,
+                                      new_sys.axis_sizes[-1])
+            if dict(new_sys.fabric.axis_links) != links:
+                new_sys = dataclasses.replace(
+                    new_sys, fabric=dataclasses.replace(
+                        new_sys.fabric, axis_links=links))
+            job.system = new_sys
+            job.run.system = new_sys
+            job.plan = self._repriced(job.plan, new_sys)
+            self.manager.forget(job.name)
+            self.manager.adopt(new_sys, now)
+            job.recompositions += 1
+            job.epoch += 1               # invalidates scheduled completions
+            changed.append(job)
+            self.telemetry.log(
+                now, "recompose", job.name,
+                f"{old_shape}->{new_sys.axis_sizes} after {len(hit)} loss")
+        return changed
+
+    def _preempt(self, job: Job, now: float) -> None:
+        """Shrink impossible: release everything and requeue the job."""
+        elastic.preempt(job.run, self.pool, step=int(job.steps_done))
+        self.manager.release(job.name)
+        self.running.remove(job)
+        job.system = None
+        job.run = None
+        job.state = QUEUED
+        job.epoch += 1
+        # resume from last "checkpointed" step boundary, re-planned at the
+        # original budget (a stale shrunken plan would desync poll()'s
+        # n_chips gate from the mesh _start() actually composes)
+        job.steps_done = float(int(job.steps_done))
+        job.plan = self.plan_job(job) or job.plan
+        job.queued_t = now
+        self.queue.append(job)
+        self.telemetry.jobs_preempted += 1
+        self.telemetry.log(now, "preempt", job.name,
+                           "pool too small; requeued")
+
+    # ----------------------------------------------------------- queries --
+    def busy_equiv(self) -> float:
+        """Device-equivalents doing useful compute right now (for AUU)."""
+        total = 0.0
+        for job in self.running:
+            t = job.plan.terms
+            frac = t.get("compute", 0.0) / max(job.step_s, 1e-30)
+            total += job.system.n_devices * frac
+        return total
+
+    def all_done(self) -> bool:
+        return not self.queue and not self.running

@@ -1,0 +1,222 @@
+"""Trace-driven discrete-event simulation of the composable cluster.
+
+The paper measures one composed system at a time; the simulator runs the
+*cluster*: Poisson job arrivals drawn from a template mix over the
+``configs/`` registry, scheduled by ``cluster.scheduler`` onto a shared
+``DevicePool``, with injected device failures and repairs driving the
+elastic recompose path.  Everything is priced analytically (no jax
+device state), so a 512-chip, dozens-of-jobs trace simulates in well
+under a second and is fully deterministic for a given seed.
+
+Time accounting per event pop:
+
+  1. accrue progress for every running job since the last event —
+     steps completed and per-axis wire bytes (candidate ``wire_bytes``
+     x devices), attributed to the link class its composition actually
+     rides (this is Fig 12 per fabric, cluster-wide);
+  2. apply the event (arrival / completion / failure / repair);
+  3. let the scheduler start whatever now fits, pushing completion
+     events at ``now + restore_overhead + remaining_steps x step_s``;
+  4. integrate occupancy into telemetry (utilization + AUU).
+
+Recomposition overhead models the checkpoint round-trip: parameter
+bytes over the composition's storage tier, plus the compose latency —
+the operational cost of the paper's attach/detach knob.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import random
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.cluster.scheduler import RUNNING, Job, Scheduler
+from repro.cluster.telemetry import Telemetry
+from repro.core.topology import LinkClass, make_pool
+
+
+@dataclasses.dataclass(frozen=True)
+class JobTemplate:
+    """One row of the trace mix."""
+    arch: str
+    shape_name: str
+    n_chips: int
+    steps: int
+    weight: float = 1.0
+
+
+# A mixed train/serve diet over small-to-mid archs: feasible on modest
+# chip budgets, heterogeneous enough to exercise backfill.
+DEFAULT_TEMPLATES: Tuple[JobTemplate, ...] = (
+    JobTemplate("qwen2-0.5b", "train_4k", 16, 20, weight=3),
+    JobTemplate("mamba2-780m", "train_4k", 32, 12, weight=2),
+    JobTemplate("llama3.2-3b", "train_4k", 64, 8, weight=2),
+    JobTemplate("llama3.2-3b", "prefill_32k", 16, 40, weight=2),
+    JobTemplate("llama3.2-3b", "decode_32k", 64, 300, weight=2),   # mem-bound
+    JobTemplate("stablelm-12b", "prefill_32k", 32, 20, weight=1),
+    # collective-bound MoE train: spans locality cliques, stresses the
+    # composed fabric and shows up as accelerator under-utilization
+    JobTemplate("moonshot-v1-16b-a3b", "train_4k", 128, 6, weight=1),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceConfig:
+    n_jobs: int = 20
+    arrival_rate_hz: float = 0.05          # Poisson arrivals, jobs/second
+    seed: int = 0
+    n_local: int = 256
+    n_switch: int = 256
+    pods: int = 2
+    templates: Tuple[JobTemplate, ...] = DEFAULT_TEMPLATES
+    # (time_s, n_devices) injection points; repaired after repair_after_s
+    failures: Tuple[Tuple[float, int], ...] = ((120.0, 12),)
+    repair_after_s: float = 300.0
+    backfill: bool = True
+    compose_latency_s: float = 2.08e-6 * 64   # switch reprogram, Table IV
+
+
+def restore_overhead_s(job: Job) -> float:
+    """Checkpoint round-trip cost of (re)forming ``job``'s composition —
+    the same estimate the scheduler's backfill guard uses."""
+    return job.est_restore_s()
+
+
+class ClusterSimulator:
+    """Discrete-event loop over a shared pool; deterministic per seed."""
+
+    def __init__(self, cfg: TraceConfig):
+        self.cfg = cfg
+        self.pool = make_pool(n_local=cfg.n_local, n_switch=cfg.n_switch,
+                              pods=cfg.pods)
+        self.telemetry = Telemetry(len(self.pool.devices))
+        self.scheduler = Scheduler(self.pool, self.telemetry,
+                                   backfill=cfg.backfill)
+        self.rng = random.Random(cfg.seed)
+        self.jobs: Dict[str, Job] = {}
+        self._heap: List[Tuple[float, int, str, object]] = []
+        self._seq = 0
+        self._now = 0.0
+
+    # ------------------------------------------------------------- events --
+    def _push(self, t: float, kind: str, payload: object = None) -> None:
+        heapq.heappush(self._heap, (t, self._seq, kind, payload))
+        self._seq += 1
+
+    def _gen_trace(self) -> None:
+        t = 0.0
+        weights = [tpl.weight for tpl in self.cfg.templates]
+        for i in range(self.cfg.n_jobs):
+            t += self.rng.expovariate(self.cfg.arrival_rate_hz)
+            tpl = self.rng.choices(self.cfg.templates, weights=weights)[0]
+            job = Job(name=f"job-{i:03d}-{tpl.arch}-{tpl.shape_name}",
+                      arch=tpl.arch, shape_name=tpl.shape_name,
+                      n_chips=tpl.n_chips, steps=tpl.steps)
+            self.jobs[job.name] = job
+            self._push(t, "arrival", job.name)
+        for t_fail, n in self.cfg.failures:
+            self._push(t_fail, "fail", n)
+
+    # ------------------------------------------------------------ accrual --
+    def _accrue(self, now: float) -> None:
+        """Credit steps + link traffic to every running job up to ``now``."""
+        for job in self.scheduler.running:
+            t0 = max(job.progress_t, job.start_t)
+            if now <= t0:
+                continue
+            d_steps = min((now - t0) / max(job.step_s, 1e-30),
+                          job.remaining_steps())
+            job.steps_done += d_steps
+            job.progress_t = now
+            if job.system is None or job.plan is None:
+                continue
+            for axis, nbytes in job.plan.wire_bytes.items():
+                if nbytes <= 0 or axis not in job.system.fabric.axis_links:
+                    continue
+                link = job.system.fabric.axis_links[axis]
+                self.telemetry.add_link_traffic(
+                    link, nbytes * job.system.n_devices * d_steps)
+
+    def _observe(self, now: float) -> None:
+        self.telemetry.observe(
+            now, n_leased=len(self.pool.leases),
+            busy_equiv=self.scheduler.busy_equiv(),
+            n_healthy=len(self.pool.healthy()))
+
+    def _schedule_completion(self, job: Job, now: float,
+                             overhead: float = 0.0) -> None:
+        if overhead > 0:
+            self.telemetry.add_recomposition(overhead)
+        start = now + overhead + self.cfg.compose_latency_s
+        job.progress_t = start          # stepping resumes after the restore
+        self._push(start + job.est_duration_s(), "complete",
+                   (job.name, job.epoch))
+
+    def _start_newly_scheduled(self, now: float) -> None:
+        for job in self.scheduler.poll(now):
+            # a preempted job resuming from a checkpoint pays the restore
+            overhead = restore_overhead_s(job)
+            self._schedule_completion(job, now, overhead)
+
+    # ---------------------------------------------------------------- run --
+    def run(self) -> Dict[str, object]:
+        self._gen_trace()
+        self._observe(0.0)
+        while self._heap:
+            now, _, kind, payload = heapq.heappop(self._heap)
+            self._now = now
+            self._accrue(now)
+            if kind == "arrival":
+                job = self.jobs[payload]
+                self.scheduler.submit(job, now)
+                self._start_newly_scheduled(now)
+            elif kind == "complete":
+                name, epoch = payload
+                job = self.jobs[name]
+                if job.state == RUNNING and job.epoch == epoch:
+                    self.scheduler.on_complete(job, now)
+                    self._start_newly_scheduled(now)
+            elif kind == "fail":
+                healthy = [d.uid for d in self.pool.healthy()]
+                n = min(int(payload), len(healthy))
+                down = self.rng.sample(healthy, n)
+                changed = self.scheduler.on_failure(down, now)
+                for job in changed:
+                    if job.state == RUNNING:      # shrunk in place
+                        self._schedule_completion(
+                            job, now, restore_overhead_s(job))
+                self._push(now + self.cfg.repair_after_s, "repair", down)
+                self._start_newly_scheduled(now)
+            elif kind == "repair":
+                self.pool.repair(list(payload))
+                self.telemetry.log(now, "repair", "",
+                                   f"{len(payload)} device(s) back")
+                self._start_newly_scheduled(now)
+            self.scheduler.manager.check_exclusive()
+            self._observe(now)
+        # jobs can legitimately remain queued when the heap drains (e.g.
+        # permanent capacity loss); report() surfaces them as "stranded"
+        return self.report()
+
+    # ------------------------------------------------------------- report --
+    def report(self) -> Dict[str, object]:
+        rep = self.telemetry.report()
+        sched = self.scheduler
+        rep["jobs"]["stranded"] = len(sched.queue) + len(sched.running)
+        rep["makespan_s"] = self._now
+        rep["recompositions_per_job"] = {
+            j.name: j.recompositions for j in sched.done
+            if j.recompositions}
+        rep["config"] = {
+            "n_jobs": self.cfg.n_jobs,
+            "pool_devices": len(self.pool.devices),
+            "arrival_rate_hz": self.cfg.arrival_rate_hz,
+            "failures": list(self.cfg.failures),
+            "seed": self.cfg.seed,
+        }
+        return rep
+
+
+def run_trace(cfg: Optional[TraceConfig] = None) -> Dict[str, object]:
+    """One-call entry point used by benchmarks and examples."""
+    return ClusterSimulator(cfg or TraceConfig()).run()

@@ -1,0 +1,167 @@
+"""Cluster telemetry: the paper's Figs 10-12 lifted to cluster level.
+
+Every control-plane action emits a ``ClusterEvent``; between events the
+``Telemetry`` object integrates time-weighted occupancy, so the report
+can state:
+
+  * **pool utilization** — leased device-seconds / healthy device-seconds
+    (Fig 10's GPU-util bar, aggregated over tenants);
+  * **AUU** — accelerator under-utilization: the fraction of *leased*
+    device-time not spent in useful compute (1 - AU in MLPerf-Storage
+    terms; each job's compute fraction comes from its analytic roofline
+    terms, so fabric-bound jobs show up as under-utilization exactly as
+    the paper's falcon configs do);
+  * **per-link-class traffic** — bytes moved over LOCAL / SWITCH / HOST /
+    DCN links (Fig 12's sustained-traffic measurement, by fabric);
+  * **recomposition overhead** — count and seconds spent re-forming
+    systems after failures (Fig 11's switch-overhead, made operational).
+
+Event schema (``ClusterEvent``): ``t`` (simulated seconds), ``kind`` (one
+of submit / reject / start / complete / fail / repair / recompose /
+preempt / conflict), ``job`` (job name or "" for pool-level events), and
+``detail`` (human-readable payload).  ``Telemetry.report()`` returns a
+JSON-serializable dict with the schema used by ``benchmarks/cluster_sim``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional
+
+from repro.core.topology import LinkClass
+
+EVENT_KINDS = ("submit", "reject", "start", "complete", "fail", "repair",
+               "recompose", "preempt", "conflict")
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterEvent:
+    t: float
+    kind: str
+    job: str = ""
+    detail: str = ""
+
+
+def _percentile(sorted_xs: List[float], q: float) -> float:
+    """Nearest-rank percentile on a pre-sorted list (0 <= q <= 100)."""
+    if not sorted_xs:
+        return 0.0
+    k = max(0, min(len(sorted_xs) - 1,
+                   math.ceil(q / 100.0 * len(sorted_xs)) - 1))
+    return sorted_xs[k]
+
+
+class Telemetry:
+    """Integrates occupancy over simulated time and accumulates counters."""
+
+    def __init__(self, n_devices_total: int):
+        self.n_devices_total = n_devices_total
+        self.events: List[ClusterEvent] = []
+        self.link_traffic_bytes: Dict[str, float] = {
+            c.value: 0.0 for c in LinkClass}
+        self.waits_s: List[float] = []
+        self.recompositions = 0
+        self.recompose_overhead_s = 0.0
+        self.lease_conflicts = 0
+        self.jobs_submitted = 0
+        self.jobs_completed = 0
+        self.jobs_rejected = 0
+        self.jobs_preempted = 0
+        # time-weighted integrals
+        self._t: Optional[float] = None
+        self._t0: Optional[float] = None
+        self._n_leased = 0
+        self._busy_equiv = 0.0          # sum over jobs: n_dev * compute_frac
+        self._n_healthy = n_devices_total
+        self._leased_area = 0.0         # device-seconds under lease
+        self._busy_area = 0.0           # device-seconds of useful compute
+        self._healthy_area = 0.0        # device-seconds of healthy capacity
+
+    # -------------------------------------------------------------- events --
+    def log(self, t: float, kind: str, job: str = "",
+            detail: str = "") -> None:
+        assert kind in EVENT_KINDS, kind
+        self.events.append(ClusterEvent(t, kind, job, detail))
+
+    # ----------------------------------------------------------- occupancy --
+    def observe(self, t: float, *, n_leased: int, busy_equiv: float,
+                n_healthy: int) -> None:
+        """Advance the clock to ``t`` and record the new occupancy.
+
+        The *previous* occupancy is integrated over [last_t, t]; call this
+        after every state change with the post-change values.
+        """
+        if self._t is None:
+            self._t = self._t0 = t
+        dt = t - self._t
+        if dt > 0:
+            self._leased_area += dt * self._n_leased
+            self._busy_area += dt * self._busy_equiv
+            self._healthy_area += dt * self._n_healthy
+            self._t = t
+        self._n_leased = n_leased
+        self._busy_equiv = busy_equiv
+        self._n_healthy = n_healthy
+
+    # ------------------------------------------------------------ counters --
+    def add_link_traffic(self, link: LinkClass, nbytes: float) -> None:
+        self.link_traffic_bytes[link.value] += nbytes
+
+    def job_waited(self, seconds: float) -> None:
+        self.waits_s.append(seconds)
+
+    def add_recomposition(self, overhead_s: float) -> None:
+        self.recompositions += 1
+        self.recompose_overhead_s += overhead_s
+
+    # -------------------------------------------------------------- report --
+    @property
+    def span_s(self) -> float:
+        if self._t is None or self._t0 is None:
+            return 0.0
+        return self._t - self._t0
+
+    def pool_utilization(self) -> float:
+        """Leased device-seconds over healthy device-seconds."""
+        if self._healthy_area <= 0:
+            return 0.0
+        return self._leased_area / self._healthy_area
+
+    def auu(self) -> float:
+        """Accelerator under-utilization among leased device-time."""
+        if self._leased_area <= 0:
+            return 0.0
+        return max(0.0, 1.0 - self._busy_area / self._leased_area)
+
+    def report(self) -> Dict[str, object]:
+        waits = sorted(self.waits_s)
+        span = max(self.span_s, 1e-12)
+        return {
+            "span_s": self.span_s,
+            "pool_utilization": self.pool_utilization(),
+            "auu": self.auu(),
+            "accelerator_utilization": 1.0 - self.auu(),
+            "link_traffic_gb": {
+                k: v / 1e9 for k, v in self.link_traffic_bytes.items()},
+            "link_traffic_gbps": {
+                k: v / 1e9 / span
+                for k, v in self.link_traffic_bytes.items()},
+            "recomposition": {
+                "count": self.recompositions,
+                "overhead_s": self.recompose_overhead_s,
+                "overhead_frac": self.recompose_overhead_s / span,
+            },
+            "job_wait_s": {
+                "p50": _percentile(waits, 50.0),
+                "p99": _percentile(waits, 99.0),
+                "mean": sum(waits) / len(waits) if waits else 0.0,
+            },
+            "jobs": {
+                "submitted": self.jobs_submitted,
+                "completed": self.jobs_completed,
+                "rejected": self.jobs_rejected,
+                "preempted": self.jobs_preempted,
+            },
+            "lease_conflicts": self.lease_conflicts,
+            "n_events": len(self.events),
+        }

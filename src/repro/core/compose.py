@@ -24,7 +24,7 @@ import numpy as np
 
 from repro.core.topology import (
     DEFAULT_LINKS, LOCAL_NVME, SWITCH_NVME, ChipSpec, DevicePool, FabricSpec,
-    LinkClass, LinkSpec, StorageSpec, make_pool)
+    LeaseError, LinkClass, LinkSpec, StorageSpec, make_pool)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,30 +106,65 @@ def compose(pool: DevicePool, name: str,
             axis_names: Sequence[str], axis_sizes: Sequence[int],
             axis_links: Mapping[str, LinkClass],
             storage: StorageSpec = LOCAL_NVME,
-            prefer_fabric: Optional[LinkClass] = None) -> ComposedSystem:
+            prefer_fabric: Optional[LinkClass] = None,
+            uids: Optional[Sequence[int]] = None) -> ComposedSystem:
     """Claim devices from the pool and build a ComposedSystem.
 
     Devices are taken domain-major so that the *innermost* (fastest-varying)
     axes land inside a single locality domain — mirroring how the paper
     keeps NVLink cliques intact and spans the falcon switch only on the
     outer axis.
+
+    Claims are *exclusive*: the chosen devices are leased in the pool under
+    the composition's name, so an overlapping ``compose()`` raises
+    ``CompositionError`` instead of silently double-claiming chips.  Free
+    them with ``release()`` (or ``recompose()``, which re-leases).
+
+    ``uids``: explicit device selection (e.g. from
+    ``repro.cluster.lease.plan_placement``) — claimed verbatim, so the
+    caller's placement decision is exactly what the lease records.
     """
     n = int(np.prod(list(axis_sizes)))
-    healthy = pool.healthy()
-    if prefer_fabric is not None:
-        ordered = ([d for d in healthy if d.fabric == prefer_fabric]
-                   + [d for d in healthy if d.fabric != prefer_fabric])
+    free = pool.available()
+    if uids is not None:
+        if len(uids) != n:
+            raise CompositionError(
+                f"explicit selection has {len(uids)} uids; composition "
+                f"{name!r} needs {n}")
+        free_uids = {d.uid for d in free}
+        missing = [u for u in uids if u not in free_uids]
+        if missing:
+            raise CompositionError(
+                f"{len(missing)} of the selected devices are failed, "
+                f"leased, or absent: {sorted(missing)[:8]}")
+        ordered = list(uids)
+        claimed = tuple(uids)
     else:
-        ordered = sorted(healthy, key=lambda d: (d.domain, d.fabric.value,
-                                                 d.uid))
-    if len(ordered) < n:
-        raise CompositionError(
-            f"pool has {len(ordered)} healthy devices; composition "
-            f"{name!r} needs {n}")
-    claimed = tuple(d.uid for d in ordered[:n])
+        if prefer_fabric is not None:
+            ordered = ([d for d in free if d.fabric == prefer_fabric]
+                       + [d for d in free if d.fabric != prefer_fabric])
+        else:
+            ordered = sorted(free, key=lambda d: (d.domain, d.fabric.value,
+                                                  d.uid))
+        if len(ordered) < n:
+            n_leased = sum(1 for d in pool.healthy() if d.uid in pool.leases)
+            raise CompositionError(
+                f"pool has {len(ordered)} available devices "
+                f"({n_leased} healthy but leased); composition "
+                f"{name!r} needs {n}")
+        claimed = tuple(d.uid for d in ordered[:n])
+    try:
+        pool.lease(claimed, name)
+    except LeaseError as e:              # e.g. duplicate uids in `uids`
+        raise CompositionError(str(e)) from e
     fabric = FabricSpec(dict(axis_links), dict(pool.links), storage)
     return ComposedSystem(name, tuple(axis_names), tuple(axis_sizes),
                           fabric, claimed)
+
+
+def release(pool: DevicePool, system: ComposedSystem) -> None:
+    """Return ``system``'s devices to the pool (job finished / preempted)."""
+    pool.release(system.device_uids)
 
 
 def recompose(pool: DevicePool, system: ComposedSystem, *,
@@ -145,16 +180,30 @@ def recompose(pool: DevicePool, system: ComposedSystem, *,
     sizes = tuple(axis_sizes or system.axis_sizes)
     links = dict(axis_links or system.fabric.axis_links)
     st = storage or system.fabric.storage
-    return compose(pool, system.name, system.axis_names, sizes, links, st)
+    # release the old claim first (the new composition may reuse surviving
+    # devices); restore it if the re-compose fails, so a failed recompose
+    # leaves the pool exactly as it was.
+    old = [u for u in system.device_uids if pool.leases.get(u) == system.name]
+    pool.release(old)
+    try:
+        return compose(pool, system.name, system.axis_names, sizes, links, st)
+    except CompositionError:
+        present = {d.uid for d in pool.devices}
+        pool.lease([u for u in old if u in present], system.name)
+        raise
 
 
 def shrink_to_pool(pool: DevicePool, system: ComposedSystem,
                    shrink_axis: str) -> ComposedSystem:
     """Elastic downsize: halve ``shrink_axis`` until the composition fits
-    the healthy pool (node-failure recovery policy)."""
+    the devices this system can draw on — the unleased healthy pool plus
+    its own surviving claim (other tenants' leases are off-limits)."""
     sizes = dict(zip(system.axis_names, system.axis_sizes))
-    n_healthy = len(pool.healthy())
-    while int(np.prod(list(sizes.values()))) > n_healthy:
+    own = set(system.device_uids)
+    n_capacity = len(pool.available()) + sum(
+        1 for d in pool.devices
+        if d.healthy and d.uid in own and pool.leases.get(d.uid) == system.name)
+    while int(np.prod(list(sizes.values()))) > n_capacity:
         if sizes[shrink_axis] <= 1:
             raise CompositionError("cannot shrink further")
         sizes[shrink_axis] //= 2

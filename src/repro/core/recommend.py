@@ -43,6 +43,9 @@ class Candidate:
     terms: Dict[str, float]
     feasible: bool
     why: str = ""
+    # bytes crossing one device's link per step, per mesh axis — the input
+    # to cluster-level per-link traffic accounting (repro.cluster.telemetry)
+    wire_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def label(self) -> str:
@@ -97,24 +100,27 @@ def _estimate(cfg: ModelConfig, shape: ShapeConfig, dp: int, tp: int,
                  ("data", "model"), mesh_shape))) / chip.hbm_bw
 
     passes = 3 if shape.kind == "train" else 1
-    wire = 0.0
+    wire_dp = wire_tp = pod_wire = 0.0
     if shape.kind == "train":
         # ZeRO-3 param gathers (bf16 on the wire) + grad reduce
-        wire += passes * (n - 1) / n * P * 2
-        wire += 2 * (dp - 1) / dp * P * 2
+        wire_dp += passes * (n - 1) / n * P * 2
+        wire_dp += 2 * (dp - 1) / dp * P * 2
     # row-parallel / EP activation reductions over tp per layer
     if tp > 1:
         n_red = 2 * cfg.n_layers * (3 if shape.kind == "train" else 1)
-        wire += n_red * 2 * (tp - 1) / tp * T_loc * cfg.d_model * 2
-    coll = wire / ICI_BW
+        wire_tp += n_red * 2 * (tp - 1) / tp * T_loc * cfg.d_model * 2
+    coll = (wire_dp + wire_tp) / ICI_BW
     if pods > 1 and shape.kind == "train":
         pod_wire = 2 * (pods - 1) / pods * P * 2 / dp   # hierarchical
         coll += pod_wire / dcn_bw
 
     step = max(compute, memory, coll)
+    wire = {"data": wire_dp, "model": wire_tp}
+    if pods > 1:
+        wire["pod"] = pod_wire
     return Candidate(mesh_shape, step,
                      {"compute": compute, "memory": memory,
-                      "collective": coll}, True)
+                      "collective": coll}, True, wire_bytes=wire)
 
 
 def candidates(n_chips: int = 256, pods: int = 1

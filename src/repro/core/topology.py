@@ -110,6 +110,10 @@ SWITCH_NVME = StorageSpec("falcon-nvme", 3.2e9, LinkClass.SWITCH)
 # ---------------------------------------------------------------------------
 # Device pool (what the management plane owns)
 # ---------------------------------------------------------------------------
+class LeaseError(RuntimeError):
+    """A device was claimed while already leased (exclusive-claim violation)."""
+
+
 @dataclasses.dataclass(frozen=True)
 class Device:
     """One poolable accelerator.
@@ -133,16 +137,64 @@ class DevicePool:
     The pool is mutable: devices can fail (``mark_failed``), be repaired,
     attached or detached — ``compose.py`` snapshots the healthy set when
     building a ``ComposedSystem``.
+
+    Leases make composition *exclusive*: ``compose()`` claims its devices
+    under the composition's name, so two concurrent systems can never hold
+    the same chip (the control plane's invariant; see ``repro.cluster``).
+    ``leases`` maps device uid -> holder name.
     """
     devices: List[Device]
     storage: List[StorageSpec] = dataclasses.field(
         default_factory=lambda: [LOCAL_NVME, SWITCH_NVME])
     links: Dict[LinkClass, LinkSpec] = dataclasses.field(
         default_factory=lambda: dict(DEFAULT_LINKS))
+    leases: Dict[int, str] = dataclasses.field(default_factory=dict)
 
     # ------------------------------------------------------------- query --
     def healthy(self) -> List[Device]:
         return [d for d in self.devices if d.healthy]
+
+    def available(self) -> List[Device]:
+        """Healthy devices not claimed by any lease (composable right now)."""
+        return [d for d in self.devices
+                if d.healthy and d.uid not in self.leases]
+
+    # ------------------------------------------------------------- lease --
+    def lease(self, uids: Sequence[int], holder: str) -> None:
+        """Exclusively claim ``uids`` for ``holder``.
+
+        Atomic: either every uid is claimed or none is.  A uid already held
+        (by anyone, including ``holder`` itself — leases don't stack) raises
+        ``LeaseError``, as does a duplicated uid within the claim (one chip
+        cannot back two mesh slots).
+        """
+        if len(set(uids)) != len(uids):
+            dups = sorted({u for u in uids if list(uids).count(u) > 1})
+            raise LeaseError(
+                f"holder {holder!r} claims duplicate uid(s) {dups[:8]}")
+        taken = [u for u in uids if u in self.leases]
+        if taken:
+            owners = sorted({self.leases[u] for u in taken})
+            raise LeaseError(
+                f"{len(taken)} device(s) already leased (by {owners}); "
+                f"holder {holder!r} cannot claim {sorted(taken)[:8]}...")
+        for u in uids:
+            self.leases[u] = holder
+
+    def release(self, uids: Sequence[int]) -> None:
+        """Release leases on ``uids`` (idempotent)."""
+        for u in uids:
+            self.leases.pop(u, None)
+
+    def release_holder(self, holder: str) -> List[int]:
+        """Release every lease held by ``holder``; returns the freed uids."""
+        freed = [u for u, h in self.leases.items() if h == holder]
+        for u in freed:
+            del self.leases[u]
+        return freed
+
+    def leased_by(self, holder: str) -> List[int]:
+        return [u for u, h in self.leases.items() if h == holder]
 
     def by_fabric(self, cls: LinkClass) -> List[Device]:
         return [d for d in self.healthy() if d.fabric == cls]
@@ -176,6 +228,8 @@ class DevicePool:
     def detach(self, uids: Sequence[int]) -> None:
         drop = set(uids)
         self.devices = [d for d in self.devices if d.uid not in drop]
+        for u in drop:
+            self.leases.pop(u, None)
 
     # ------------------------------------------------------------ fabric --
     def link_between(self, a: Device, b: Device) -> LinkSpec:

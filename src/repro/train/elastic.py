@@ -63,6 +63,19 @@ def handle_failure(run: ElasticRun, pool: DevicePool,
     return new_sys
 
 
+def preempt(run: ElasticRun, pool: DevicePool, *, step: int,
+            detail: str = "") -> None:
+    """Give the composition back to the pool (job preempted / unschedulable).
+
+    When even a 1-wide mesh no longer fits the pool, the job's devices
+    must return to the shared inventory so other tenants can claim them;
+    the job itself re-queues and later resumes from its checkpoint via
+    the normal ``recompose -> restore`` path.
+    """
+    pool.release(run.system.device_uids)
+    run.log(step, "preempt", detail or "released composition to pool")
+
+
 def resume(run: ElasticRun, like_state: Any, mesh, specs) -> Tuple[Any, int]:
     """Restore the latest checkpoint onto the (possibly new) mesh."""
     state, step = checkpoint.restore(run.ckpt_dir, like_state, mesh=mesh,

@@ -1,0 +1,318 @@
+"""Scheduler + simulator coverage: exclusivity, backfill, admission,
+failure -> shrink -> resume, and end-to-end trace invariants."""
+import json
+
+import pytest
+
+from repro.cluster import (ClusterSimulator, Job, JobTemplate, Scheduler,
+                           TraceConfig, run_trace)
+from repro.cluster.scheduler import DONE, QUEUED, REJECTED, RUNNING
+from repro.core.topology import make_pool
+
+
+def _job(name, n_chips, steps=20, arch="qwen2-0.5b", shape="train_4k"):
+    return Job(name=name, arch=arch, shape_name=shape, n_chips=n_chips,
+               steps=steps)
+
+
+# ---------------------------------------------------------------------------
+# lease exclusivity under concurrency
+# ---------------------------------------------------------------------------
+def test_concurrent_jobs_hold_disjoint_leases():
+    pool = make_pool(n_local=64, n_switch=0, pods=1)
+    sched = Scheduler(pool)
+    for i in range(3):
+        assert sched.submit(_job(f"j{i}", 32), now=0.0)
+    started = sched.poll(0.0)
+    assert [j.name for j in started] == ["j0", "j1"]   # 64 chips -> 2 fit
+    assert len(pool.leases) == 64
+    uids0 = set(started[0].system.device_uids)
+    uids1 = set(started[1].system.device_uids)
+    assert not uids0 & uids1
+    sched.manager.check_exclusive()
+    # completing one frees exactly its slice; the queued job then starts
+    sched.on_complete(started[0], now=10.0)
+    assert len(pool.leases) == 32
+    started2 = sched.poll(10.0)
+    assert [j.name for j in started2] == ["j2"]
+    assert not set(started2[0].system.device_uids) & uids1
+
+
+# ---------------------------------------------------------------------------
+# backfill ordering (EASY: don't delay the head's reservation)
+# ---------------------------------------------------------------------------
+def test_backfill_lets_short_job_jump_but_not_long():
+    pool = make_pool(n_local=32, n_switch=0, pods=1)
+    sched = Scheduler(pool)
+    a = _job("a", 16, steps=20)              # occupies half the pool ~31s
+    sched.submit(a, 0.0)
+    assert sched.poll(0.0) == [a]
+    head = _job("head", 32, steps=10)        # needs the whole pool: blocked
+    short = _job("short", 16, steps=10)      # fits & finishes before a does
+    long_ = _job("long", 16, steps=40)       # fits but would delay head
+    for j in (head, short, long_):
+        sched.submit(j, 1.0)
+    started = sched.poll(1.0)
+    assert [j.name for j in started] == ["short"]
+    assert head.state == QUEUED and long_.state == QUEUED
+    # with backfill disabled nothing may jump the head
+    pool2 = make_pool(n_local=32, n_switch=0, pods=1)
+    sched2 = Scheduler(pool2, backfill=False)
+    a2 = _job("a", 16, steps=20)
+    sched2.submit(a2, 0.0)
+    sched2.poll(0.0)
+    sched2.submit(_job("head", 32, steps=10), 1.0)
+    sched2.submit(_job("short", 16, steps=10), 1.0)
+    assert sched2.poll(1.0) == []
+
+
+def test_est_end_anchors_at_progress_not_start():
+    """Backfill reservations must not drift earlier as a running job's
+    steps_done accrues (est_end was start_t + remaining, shrinking with
+    progress)."""
+    pool = make_pool(n_local=16, n_switch=0, pods=1)
+    sched = Scheduler(pool)
+    job = _job("j", 16, steps=100)
+    sched.submit(job, 0.0)
+    sched.poll(0.0)
+    end0 = job.est_end_t
+    # half the work done, clock at the halfway point: estimate unchanged
+    job.steps_done = 50.0
+    job.progress_t = 50.0 * job.step_s
+    assert job.est_end_t == pytest.approx(end0, rel=1e-6)
+
+
+def test_priority_orders_queue():
+    pool = make_pool(n_local=16, n_switch=0, pods=1)
+    sched = Scheduler(pool)
+    lo = _job("lo", 16)
+    hi = _job("hi", 16)
+    hi.priority = 5
+    blocker = _job("blocker", 16)
+    sched.submit(blocker, 0.0)
+    sched.poll(0.0)
+    sched.submit(lo, 1.0)
+    sched.submit(hi, 2.0)                    # later but higher priority
+    sched.on_complete(blocker, 3.0)
+    assert [j.name for j in sched.poll(3.0)] == ["hi"]
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+def test_infeasible_job_rejected_on_memory():
+    pool = make_pool(n_local=256, n_switch=0, pods=1)
+    sched = Scheduler(pool)
+    job = _job("oom", 2, arch="command-r-35b")   # 35B params on 2 chips
+    assert not sched.submit(job, 0.0)
+    assert job.state == REJECTED
+    assert "HBM" in job.why_rejected or "memory" in job.why_rejected
+
+
+def test_infeasible_job_rejected_on_kv_cache():
+    pool = make_pool(n_local=256, n_switch=0, pods=1)
+    sched = Scheduler(pool)
+    # decode_32k batch 128 with 16 chips: every (dp, tp) split blows HBM
+    job = _job("kv", 16, arch="llama3.2-3b", shape="decode_32k")
+    assert not sched.submit(job, 0.0)
+    assert job.state == REJECTED
+
+
+def test_divisibility_infeasibility_is_surfaced():
+    """The analytic model's divisibility constraints flow into admission:
+    candidates that don't divide the batch (or MoE experts) are marked
+    infeasible with the reason, and planning picks around them."""
+    pool = make_pool(n_local=256, n_switch=0, pods=1)
+    sched = Scheduler(pool)
+    from repro.configs import get_config
+    from repro.configs.base import SHAPES
+    from repro.core import recommend
+    cfg = get_config("moonshot-v1-16b-a3b")          # 64 experts
+    bad = recommend._estimate(cfg, SHAPES["train_4k"], dp=2, tp=96)
+    assert not bad.feasible and "% tp" in bad.why
+    odd = recommend._estimate(get_config("qwen2-0.5b"),
+                              SHAPES["prefill_32k"], dp=3, tp=1)
+    assert not odd.feasible and "% dp" in odd.why
+    plan = sched.plan_job(_job("m", 64, arch="moonshot-v1-16b-a3b"))
+    assert plan is not None and plan.feasible
+
+
+def test_oversized_request_rejected():
+    pool = make_pool(n_local=16, n_switch=0, pods=1)
+    sched = Scheduler(pool)
+    job = _job("big", 64)
+    assert not sched.submit(job, 0.0)
+    assert "pool has" in job.why_rejected
+
+
+# ---------------------------------------------------------------------------
+# failure -> shrink_to_pool -> resume, end-to-end on a small pool
+# ---------------------------------------------------------------------------
+def test_failure_shrinks_running_job_and_it_completes():
+    pool = make_pool(n_local=32, n_switch=0, pods=1)
+    sched = Scheduler(pool)
+    a = _job("a", 16, steps=10)
+    b = _job("b", 16, steps=10)
+    sched.submit(a, 0.0)
+    sched.submit(b, 0.0)
+    sched.poll(0.0)
+    assert a.state == RUNNING and b.state == RUNNING
+    old_epoch = a.epoch
+    changed = sched.on_failure(list(a.system.device_uids[:4]), now=5.0)
+    # no spares (b holds the rest): a must shrink its data axis
+    assert changed == [a]
+    assert a.state == RUNNING
+    assert a.system.shape["data"] == 8
+    assert a.epoch == old_epoch + 1
+    assert a.plan.shape == (8, 1)            # plan re-estimated for the
+    assert a.plan.feasible                   # shrunken mesh
+    assert a.recompositions == 1
+    assert [e.kind for e in a.run.events] == ["failure", "recompose"]
+    # b untouched, leases still exclusive, dead devices unleased
+    assert b.system.shape["data"] == 16
+    sched.manager.check_exclusive()
+    assert not set(a.system.device_uids) & set(b.system.device_uids)
+    sched.on_complete(a, 20.0)
+    sched.on_complete(b, 20.0)
+    assert a.state == DONE and b.state == DONE
+    assert not pool.leases
+
+
+def test_total_loss_preempts_then_repair_resumes():
+    pool = make_pool(n_local=8, n_switch=0, pods=1)
+    sched = Scheduler(pool)
+    job = _job("j", 8, steps=10)
+    sched.submit(job, 0.0)
+    sched.poll(0.0)
+    job.steps_done = 4.5
+    uids = list(job.system.device_uids)
+    sched.on_failure(uids, now=5.0)
+    assert job.state == QUEUED
+    assert not pool.leases                   # everything returned
+    assert sched.telemetry.jobs_preempted == 1
+    assert job.steps_done == 4.0             # back to checkpoint boundary
+    assert sched.poll(5.0) == []             # nothing healthy to run on
+    pool.repair(uids)
+    assert sched.poll(6.0) == [job]
+    assert job.state == RUNNING
+
+
+def test_infeasible_shrink_preempts_instead_of_running_at_inf():
+    """A halved mesh that fits the pool by count but not by HBM must not
+    be installed (its step_s is inf); the job is preempted instead."""
+    pool = make_pool(n_local=16, n_switch=0, pods=1)
+    sched = Scheduler(pool)
+    job = _job("s", 16, steps=10, arch="stablelm-12b")
+    sched.submit(job, 0.0)
+    sched.poll(0.0)
+    assert job.state == RUNNING
+    changed = sched.on_failure(list(job.system.device_uids[:8]), now=5.0)
+    assert changed == [job]
+    assert job.state == QUEUED               # not running at step_s = inf
+    assert not pool.leases
+    assert job.plan.feasible and job.plan.step_s != float("inf")
+
+
+def test_recompose_onto_other_fabric_rederives_links():
+    """Spare devices on the switch fabric must show up in the rebuilt
+    composition's axis link classes (pricing + traffic attribution)."""
+    from repro.core.topology import LinkClass
+    pool = make_pool(n_local=16, n_switch=16, pods=1)
+    sched = Scheduler(pool)
+    job = _job("j", 16, steps=10)
+    sched.submit(job, 0.0)
+    sched.poll(0.0)
+    assert job.system.fabric.axis_links["data"] == LinkClass.LOCAL
+    sched.on_failure(list(job.system.device_uids[:8]), now=1.0)
+    assert job.state == RUNNING
+    assert job.system.shape["data"] == 16    # same-shape, switch spares
+    fabrics = {d.fabric for d in pool.devices
+               if d.uid in job.system.device_uids}
+    assert LinkClass.SWITCH in fabrics
+    # mixed local+switch claim crosses fabrics through the host complex
+    assert job.system.fabric.axis_links["data"] == LinkClass.HOST
+    # ... and the re-priced plan reflects the slower fabric
+    assert job.plan.terms["collective"] > 0
+
+
+def test_placement_fabric_reprices_step_time():
+    """The same collective-bound job must simulate slower on the composed
+    switch fabric than inside a LOCAL clique (the paper's Fig-11 gap)."""
+    job_l = _job("l", 128, arch="moonshot-v1-16b-a3b", steps=5)
+    job_s = _job("s", 128, arch="moonshot-v1-16b-a3b", steps=5)
+    sl = Scheduler(make_pool(n_local=128, n_switch=0, pods=1))
+    ss = Scheduler(make_pool(n_local=0, n_switch=128, pods=1))
+    sl.submit(job_l, 0.0)
+    ss.submit(job_s, 0.0)
+    sl.poll(0.0)
+    ss.poll(0.0)
+    assert job_l.system.fabric.axis_links["data"].value == "local"
+    assert job_s.system.fabric.axis_links["data"].value == "switch"
+    assert job_s.step_s > job_l.step_s * 2
+
+
+def test_preempted_shrunk_job_is_replanned_at_full_budget():
+    """A job shrunk to (8,1) then preempted must requeue with a plan
+    matching its requested 16 chips, or poll()'s gate strands it."""
+    pool = make_pool(n_local=32, n_switch=0, pods=1)
+    sched = Scheduler(pool)
+    a = _job("a", 16, steps=10)
+    b = _job("b", 16, steps=10)
+    sched.submit(a, 0.0)
+    sched.submit(b, 0.0)
+    sched.poll(0.0)
+    sched.on_failure(list(a.system.device_uids[:4]), now=1.0)
+    assert a.system.shape["data"] == 8       # first wave: shrink
+    dead = list(a.system.device_uids) + [d.uid for d in pool.available()]
+    sched.on_failure(dead, now=2.0)
+    assert a.state == QUEUED                 # second wave: preempt
+    assert a.plan.shape == (16, 1)           # re-planned at full budget
+    pool.repair([d.uid for d in pool.devices if not d.healthy])
+    assert sched.poll(3.0) == [a]
+    assert a.system.n_devices == 16
+
+
+# ---------------------------------------------------------------------------
+# simulator end-to-end
+# ---------------------------------------------------------------------------
+def test_trace_completes_with_zero_conflicts():
+    rep = run_trace(TraceConfig(n_jobs=12, arrival_rate_hz=0.2, seed=3))
+    jobs = rep["jobs"]
+    assert jobs["submitted"] == 12
+    assert jobs["completed"] + jobs["rejected"] == 12
+    assert jobs["stranded"] == 0
+    assert rep["lease_conflicts"] == 0
+    assert 0.0 < rep["pool_utilization"] <= 1.0
+    assert 0.0 <= rep["auu"] < 1.0
+    assert sum(rep["link_traffic_gb"].values()) > 0
+    json.dumps(rep)                          # must be JSON-serializable
+
+
+def test_trace_is_deterministic_per_seed():
+    cfg = TraceConfig(n_jobs=10, arrival_rate_hz=0.3, seed=11)
+    assert json.dumps(run_trace(cfg)) == json.dumps(run_trace(cfg))
+    other = TraceConfig(n_jobs=10, arrival_rate_hz=0.3, seed=12)
+    assert json.dumps(run_trace(other)) != json.dumps(run_trace(cfg))
+
+
+def test_trace_failure_wave_drives_recomposition():
+    cfg = TraceConfig(n_jobs=24, arrival_rate_hz=0.2, seed=7,
+                      failures=((120.0, 12),), repair_after_s=180.0)
+    rep = run_trace(cfg)
+    assert rep["recomposition"]["count"] >= 1
+    assert rep["recomposition"]["overhead_s"] > 0
+    assert rep["jobs"]["completed"] == 24
+    assert rep["lease_conflicts"] == 0
+
+
+def test_trace_heavy_contention_queues_jobs():
+    """Tiny pool + bursty arrivals: jobs must wait, none may strand."""
+    tmpl = (JobTemplate("qwen2-0.5b", "train_4k", 16, 10),)
+    cfg = TraceConfig(n_jobs=8, arrival_rate_hz=2.0, seed=5,
+                      n_local=32, n_switch=0, pods=1, templates=tmpl,
+                      failures=())
+    rep = run_trace(cfg)
+    assert rep["jobs"]["completed"] == 8
+    assert rep["jobs"]["stranded"] == 0
+    assert rep["job_wait_s"]["p99"] > 0
+    assert rep["lease_conflicts"] == 0

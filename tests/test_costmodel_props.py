@@ -2,6 +2,7 @@
 import dataclasses
 
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import SHAPES, get_config

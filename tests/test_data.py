@@ -1,6 +1,7 @@
 """Data pipeline: determinism, sharding, storage-tier pricing."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config, reduced

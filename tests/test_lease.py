@@ -1,0 +1,208 @@
+"""Lease bookkeeping: exclusive claims, double-claim regression, placement.
+
+These are the control-plane invariants of ``repro.cluster``: no uid is
+ever held by two compositions, compose/recompose move leases atomically,
+and domain-aware placement derives each axis's link class from where the
+free devices actually are.  (No hypothesis dependency — this file must
+collect everywhere.)
+"""
+import pytest
+
+from repro.cluster.lease import LeaseManager, plan_placement
+from repro.core import compose
+from repro.core.compose import CompositionError
+from repro.core.topology import LeaseError, LinkClass, make_pool
+
+
+# ---------------------------------------------------------------------------
+# DevicePool lease bookkeeping
+# ---------------------------------------------------------------------------
+def test_lease_and_release_accounting():
+    pool = make_pool(n_local=16, n_switch=0, pods=1)
+    assert len(pool.available()) == 16
+    pool.lease([0, 1, 2], "a")
+    assert len(pool.available()) == 13
+    assert sorted(pool.leased_by("a")) == [0, 1, 2]
+    pool.release([1])
+    assert len(pool.available()) == 14
+    assert pool.release_holder("a") and not pool.leases
+    pool.release([0, 1])                     # idempotent
+
+
+def test_lease_conflict_is_atomic():
+    pool = make_pool(n_local=8, n_switch=0, pods=1)
+    pool.lease([0, 1], "a")
+    with pytest.raises(LeaseError):
+        pool.lease([2, 1], "b")              # 1 is taken
+    # nothing from the failed claim may stick
+    assert pool.leases == {0: "a", 1: "a"}
+
+
+def test_duplicate_uids_in_claim_rejected():
+    """One chip can't back two mesh slots: duplicates raise, both via the
+    raw pool API and via compose(uids=...)."""
+    pool = make_pool(n_local=8, n_switch=0, pods=1)
+    with pytest.raises(LeaseError):
+        pool.lease([5, 5], "a")
+    assert not pool.leases
+    with pytest.raises(CompositionError):
+        compose.compose(pool, "a", ("data",), (2,),
+                        {"data": LinkClass.LOCAL}, uids=[5, 5])
+    assert not pool.leases
+
+
+def test_failed_devices_stay_leased_but_detach_clears():
+    pool = make_pool(n_local=8, n_switch=0, pods=1)
+    pool.lease([0, 1], "a")
+    pool.mark_failed([0])
+    assert pool.leases.get(0) == "a"         # failure != release
+    assert all(d.uid != 0 for d in pool.available())
+    pool.detach([0])
+    assert 0 not in pool.leases
+
+
+# ---------------------------------------------------------------------------
+# compose() exclusivity — the silent double-claim regression
+# ---------------------------------------------------------------------------
+def test_overlapping_compositions_raise():
+    """Seed bug: two compose() calls could silently claim the same chips."""
+    pool = make_pool(n_local=256, n_switch=0, pods=1)
+    links = {"data": LinkClass.LOCAL, "model": LinkClass.LOCAL}
+    a = compose.compose(pool, "a", ("data", "model"), (16, 16), links)
+    with pytest.raises(CompositionError):
+        compose.compose(pool, "b", ("data", "model"), (16, 16), links)
+    compose.release(pool, a)
+    b = compose.compose(pool, "b", ("data", "model"), (16, 16), links)
+    assert set(b.device_uids) == set(a.device_uids) or len(b.device_uids) == 256
+
+
+def test_concurrent_compositions_are_disjoint():
+    pool = make_pool(n_local=64, n_switch=64, pods=2)
+    links = {"data": LinkClass.LOCAL}
+    systems = [compose.compose(pool, f"t{i}", ("data",), (16,), links)
+               for i in range(8)]            # exactly fills the pool
+    seen = set()
+    for s in systems:
+        assert not seen & set(s.device_uids)
+        seen |= set(s.device_uids)
+    assert len(seen) == 128
+
+
+def test_compose_explicit_uids_rejects_unavailable():
+    pool = make_pool(n_local=8, n_switch=0, pods=1)
+    links = {"data": LinkClass.LOCAL}
+    compose.compose(pool, "a", ("data",), (2,), links, uids=[4, 5])
+    with pytest.raises(CompositionError):
+        compose.compose(pool, "b", ("data",), (2,), links, uids=[5, 6])
+    pool.mark_failed([7])
+    with pytest.raises(CompositionError):
+        compose.compose(pool, "b", ("data",), (2,), links, uids=[6, 7])
+    b = compose.compose(pool, "b", ("data",), (2,), links, uids=[6, 0])
+    assert b.device_uids == (6, 0)
+
+
+def test_recompose_moves_lease_and_restores_on_failure():
+    pool = make_pool(n_local=40, n_switch=0, pods=1)
+    links = {"data": LinkClass.LOCAL}
+    sys_ = compose.compose(pool, "t", ("data",), (32,), links)
+    pool.mark_failed(list(sys_.device_uids[:8]))
+    new = compose.recompose(pool, sys_)      # 8 spares cover the loss
+    assert len(pool.leases) == 32
+    assert all(pool.leases[u] == "t" for u in new.device_uids)
+    # now make recompose impossible (no spares remain, so losing more of
+    # the claim leaves < 32 healthy): the claim must be restored untouched
+    before = dict(pool.leases)
+    pool.mark_failed(list(new.device_uids[:4]))
+    with pytest.raises(CompositionError):
+        compose.recompose(pool, new)
+    assert pool.leases == before
+
+
+def test_shrink_does_not_steal_other_tenants_devices():
+    pool = make_pool(n_local=64, n_switch=0, pods=1)
+    links = {"data": LinkClass.LOCAL}
+    a = compose.compose(pool, "a", ("data",), (32,), links)
+    b = compose.compose(pool, "b", ("data",), (16,), links)
+    pool.mark_failed(list(a.device_uids[:20]))
+    shrunk = compose.shrink_to_pool(pool, a, "data")
+    # capacity for a: 16 unleased + 12 surviving own = 28 -> data halves to 16
+    assert shrunk.axis_sizes == (16,)
+    assert not set(shrunk.device_uids) & set(b.device_uids)
+    assert all(pool.leases[u] == "b" for u in b.device_uids)
+
+
+# ---------------------------------------------------------------------------
+# domain-aware placement
+# ---------------------------------------------------------------------------
+def test_placement_single_local_clique_rides_local():
+    pool = make_pool(n_local=32, n_switch=0, pods=1)
+    plan = plan_placement(pool, dp=4, tp=8)
+    assert plan.axis_links == {"data": LinkClass.LOCAL,
+                               "model": LinkClass.LOCAL}
+    assert plan.n_domains == 1
+
+
+def test_placement_spanning_domains_degrades_data_axis():
+    pool = make_pool(n_local=16, n_switch=0, pods=2)   # two 8-wide cliques
+    plan = plan_placement(pool, dp=4, tp=4)
+    assert plan.axis_links["model"] == LinkClass.LOCAL  # tp fits one clique
+    # local ICI does not span pods: the dp axis rides the DCN
+    assert plan.axis_links["data"] == LinkClass.DCN
+
+
+def test_placement_tp_straddling_cliques_degrades_model_axis():
+    pool = make_pool(n_local=16, n_switch=0, pods=2)   # cliques of 8
+    plan = plan_placement(pool, dp=1, tp=16)           # tp can't fit either
+    assert plan.axis_links["model"] == LinkClass.DCN
+
+
+def test_placement_mixed_fabrics_ride_host_and_switch_spans_domains():
+    pool = make_pool(n_local=4, n_switch=4, pods=2)    # whole pool needed
+    plan = plan_placement(pool, dp=4, tp=2)            # must mix fabrics
+    assert plan.axis_links["model"] == LinkClass.SWITCH
+    assert plan.axis_links["data"] == LinkClass.HOST   # crossing fabrics
+    pool2 = make_pool(n_local=0, n_switch=16, pods=2)
+    plan2 = plan_placement(pool2, dp=4, tp=4)          # all switch-attached
+    assert plan2.axis_links["data"] == LinkClass.SWITCH
+
+
+def test_placement_insufficient_pool_raises():
+    pool = make_pool(n_local=8, n_switch=0, pods=1)
+    pool.lease([0, 1, 2, 3], "other")
+    with pytest.raises(CompositionError):
+        plan_placement(pool, dp=8, tp=1)
+
+
+def test_lease_manager_adopt_and_invariant():
+    pool = make_pool(n_local=32, n_switch=0, pods=1)
+    mgr = LeaseManager(pool)
+    links = {"data": LinkClass.LOCAL}
+    s1 = compose.compose(pool, "j1", ("data",), (8,), links)
+    s2 = compose.compose(pool, "j2", ("data",), (8,), links)
+    mgr.adopt(s1, now=1.0)
+    mgr.adopt(s2, now=2.0)
+    mgr.check_exclusive()
+    assert mgr.n_leased() == 16
+    assert 0.49 < mgr.utilization() < 0.51
+    freed = mgr.release("j1")
+    assert sorted(freed) == sorted(s1.device_uids)
+    assert mgr.n_leased() == 8
+    with pytest.raises(LeaseError):
+        mgr.adopt(s1)                        # no longer claimed in the pool
+
+
+def test_lease_manager_tracks_multiple_leases_per_holder():
+    """adopt() + acquire() for the same holder must both stay visible
+    (a job's compute claim plus its storage tranche)."""
+    pool = make_pool(n_local=16, n_switch=0, pods=1)
+    mgr = LeaseManager(pool)
+    sys_ = compose.compose(pool, "j", ("data",), (4,),
+                           {"data": LinkClass.LOCAL})
+    mgr.adopt(sys_, now=1.0)
+    mgr.acquire("j", [10, 11], now=2.0)      # e.g. an NVMe tranche
+    held = [l for l in mgr.active() if l.holder == "j"]
+    assert len(held) == 2
+    mgr.check_exclusive()
+    assert sorted(mgr.release("j")) == sorted(list(sys_.device_uids)
+                                              + [10, 11])
+    assert not mgr.active() and not pool.leases
