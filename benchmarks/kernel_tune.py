@@ -1,0 +1,81 @@
+"""Kernel-autotune smoke sweep: the perf-trajectory artifact for kernels.
+
+Runs the tiny CI shape grid through ``repro.kernels.autotune``, persists
+the winners to ``results/tuned_configs.json``, and reports per-cell
+best-config + measured us/call.  The report also demonstrates the
+measured-cost feedback edge: a ``CalibratedCost`` built from the fresh
+sweep re-prices a ``recommend()`` ranking, so the artifact shows the
+analytic-vs-calibrated step times side by side.
+
+``run.py --bench kernel_tune`` writes the JSON to
+``results/kernel_tune.json``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import jax
+
+from repro.core import recommend
+from repro.core.costmodel import CalibratedCost
+from repro.kernels import autotune
+from repro.kernels import registry as kreg
+
+ITERS = 2
+DEMO_ARCH, DEMO_SHAPE, DEMO_CHIPS = "qwen2-0.5b", "train_4k", 64
+
+
+def _recommend_demo(cal: CalibratedCost) -> Dict[str, object]:
+    """Analytic vs calibrated top-3 for one cell (the feedback loop)."""
+    plain = recommend.recommend(DEMO_ARCH, DEMO_SHAPE, n_chips=DEMO_CHIPS,
+                                top=3, calibration=CalibratedCost())
+    cald = recommend.recommend(DEMO_ARCH, DEMO_SHAPE, n_chips=DEMO_CHIPS,
+                               top=3, calibration=cal)
+    return {
+        "arch": DEMO_ARCH, "shape": DEMO_SHAPE, "n_chips": DEMO_CHIPS,
+        "analytic": [{"mesh": c.label, "step_s": c.step_s} for c in plain],
+        "calibrated": [{"mesh": c.label, "step_s": c.step_s}
+                       for c in cald],
+    }
+
+
+def report() -> Dict[str, object]:
+    t0 = time.perf_counter()
+    registry, results = autotune.sweep(autotune.SMOKE_CASES, iters=ITERS,
+                                       path=kreg.DEFAULT_PATH)
+    sweep_s = time.perf_counter() - t0
+    cal = CalibratedCost.from_registry(registry)
+    cells = [r.to_json() for r in results]
+    n_non_default = sum(
+        1 for r in results
+        if r.entry.blocks != autotune.default_blocks(r.case))
+    return {
+        "bench": "kernel_tune",
+        "backend": jax.default_backend(),
+        "iters": ITERS,
+        "sweep_wall_s": sweep_s,
+        "n_cases": len(results),
+        "n_non_default": n_non_default,
+        "registry_path": registry.path,
+        "registry_size": len(registry),
+        "kernel_speedup": cal.kernel_speedup,
+        "cells": cells,
+        "recommend_demo": _recommend_demo(cal),
+    }
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rep = report()
+    rows = []
+    for cell in rep["cells"]:
+        rows.append((f"kernel_tune/{cell['kernel']}", cell["us"],
+                     f"best={cell['best']} default={cell['default']} "
+                     f"x{cell['speedup']:.2f}"))
+    demo = rep["recommend_demo"]
+    rows.append((
+        "kernel_tune/summary", rep["sweep_wall_s"] * 1e6,
+        f"cases={rep['n_cases']} non_default={rep['n_non_default']} "
+        f"calibrated_top={demo['calibrated'][0]['mesh']} "
+        f"analytic_top={demo['analytic'][0]['mesh']}"))
+    return rows

@@ -25,8 +25,9 @@ def main() -> int:
 
     from benchmarks import (beyond_paper, cluster_sim, fig10_utilization,
                             fig11_switch_overhead, fig12_traffic,
-                            fig15_storage, fig16_sw_opt, recompose,
-                            roofline, table2_models, table4_links)
+                            fig15_storage, fig16_sw_opt, kernel_tune,
+                            recompose, roofline, table2_models,
+                            table4_links)
     modules = {
         "table2": table2_models,
         "table4": table4_links,
@@ -39,6 +40,7 @@ def main() -> int:
         "recompose": recompose,
         "roofline": roofline,
         "cluster_sim": cluster_sim,
+        "kernel_tune": kernel_tune,
     }
 
     if args.bench:

@@ -113,15 +113,25 @@ class Scheduler:
     """Priority-FIFO + EASY-backfill scheduler with elastic failure handling."""
 
     def __init__(self, pool: DevicePool, telemetry: Optional[Telemetry] = None,
-                 backfill: bool = True):
+                 backfill: bool = True, calibration=None):
         self.pool = pool
         self.telemetry = telemetry or Telemetry(len(pool.devices))
         self.backfill = backfill
+        # measured-cost layer (core.costmodel.CalibratedCost): admission
+        # and pricing use calibrated step times when measurements exist.
+        # None defers to recommend.get_calibration() at use time, so a
+        # later set_calibration() reaches already-built schedulers.
+        self._calibration = calibration
         self.manager = LeaseManager(pool)
         self.queue: List[Job] = []
         self.running: List[Job] = []
         self.done: List[Job] = []
         self.rejected: List[Job] = []
+
+    @property
+    def calibration(self):
+        return self._calibration if self._calibration is not None \
+            else recommend.get_calibration()
 
     # ------------------------------------------------------------- admit --
     def _candidates_for(self, job: Job, n_chips: Optional[int] = None
@@ -129,7 +139,9 @@ class Scheduler:
         cfg = get_config(job.arch)
         shape = SHAPES[job.shape_name]
         n = n_chips or job.n_chips
-        return [recommend._estimate(cfg, shape, dp, tp)
+        return [recommend.calibrate_candidate(
+                    recommend._estimate(cfg, shape, dp, tp), cfg, job.arch,
+                    job.shape_name, shape, self.calibration)
                 for dp, tp in recommend.candidates(n)]
 
     @staticmethod
@@ -166,6 +178,10 @@ class Scheduler:
         terms = dict(plan.terms)
         terms["collective"] = coll
         step = max(terms.get("compute", 0.0), terms.get("memory", 0.0), coll)
+        if "measured" in terms:
+            # a measured cell step already includes compute+memory; only a
+            # slower-than-assumed fabric can push it higher
+            step = max(terms["measured"], coll)
         return dataclasses.replace(plan, step_s=step, terms=terms)
 
     def submit(self, job: Job, now: float = 0.0) -> bool:
@@ -310,8 +326,11 @@ class Scheduler:
                 continue
             if new_sys.axis_sizes != old_shape:
                 dp, tp = new_sys.axis_sizes[-2], new_sys.axis_sizes[-1]
-                new_plan = recommend._estimate(
-                    get_config(job.arch), SHAPES[job.shape_name], dp, tp)
+                cfg = get_config(job.arch)
+                new_plan = recommend.calibrate_candidate(
+                    recommend._estimate(cfg, SHAPES[job.shape_name], dp, tp),
+                    cfg, job.arch, job.shape_name,
+                    SHAPES[job.shape_name], self.calibration)
                 if not new_plan.feasible:
                     # fits the pool by count but not by memory (e.g. the
                     # halved mesh can't hold the optimizer shards): the
@@ -369,7 +388,9 @@ class Scheduler:
         total = 0.0
         for job in self.running:
             t = job.plan.terms
-            frac = t.get("compute", 0.0) / max(job.step_s, 1e-30)
+            # cap at 1: a measured step faster than the analytic compute
+            # bound means the chips are saturated, not >100% busy
+            frac = min(1.0, t.get("compute", 0.0) / max(job.step_s, 1e-30))
             total += job.system.n_devices * frac
         return total
 

@@ -28,6 +28,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import random
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.cluster.scheduler import RUNNING, Job, Scheduler
@@ -74,6 +75,9 @@ class TraceConfig:
     repair_after_s: float = 300.0
     backfill: bool = True
     compose_latency_s: float = 2.08e-6 * 64   # switch reprogram, Table IV
+    # optional measured-cost layer (core.costmodel.CalibratedCost): jobs
+    # are admitted and priced from measurements instead of pure analytics
+    calibration: Optional[object] = None
 
 
 def restore_overhead_s(job: Job) -> float:
@@ -91,12 +95,23 @@ class ClusterSimulator:
                               pods=cfg.pods)
         self.telemetry = Telemetry(len(self.pool.devices))
         self.scheduler = Scheduler(self.pool, self.telemetry,
-                                   backfill=cfg.backfill)
+                                   backfill=cfg.backfill,
+                                   calibration=cfg.calibration)
         self.rng = random.Random(cfg.seed)
         self.jobs: Dict[str, Job] = {}
         self._heap: List[Tuple[float, int, str, object]] = []
         self._seq = 0
         self._now = 0.0
+        # incremental per-link traffic accounting: instead of scanning
+        # every running job's wire_bytes dict at every event, each job's
+        # bytes/sec contribution is folded into ``_link_rate`` when it
+        # starts stepping and removed when it stops/recomposes; accrual
+        # is then O(#link classes) per event
+        self._link_rate: Dict[LinkClass, float] = {}
+        self._job_rate: Dict[str, Dict[LinkClass, float]] = {}
+        self._accrue_t = 0.0
+        self.wall_s = 0.0           # wall-clock of the last run() call
+        self.events_per_s = 0.0
 
     # ------------------------------------------------------------- events --
     def _push(self, t: float, kind: str, payload: object = None) -> None:
@@ -118,24 +133,52 @@ class ClusterSimulator:
             self._push(t_fail, "fail", n)
 
     # ------------------------------------------------------------ accrual --
+    def _job_link_rate(self, job: Job) -> Dict[LinkClass, float]:
+        """bytes/sec this job puts on each link class while stepping."""
+        rates: Dict[LinkClass, float] = {}
+        if job.system is None or job.plan is None:
+            return rates
+        per_step = job.system.n_devices / max(job.step_s, 1e-30)
+        for axis, nbytes in job.plan.wire_bytes.items():
+            if nbytes <= 0 or axis not in job.system.fabric.axis_links:
+                continue
+            link = job.system.fabric.axis_links[axis]
+            rates[link] = rates.get(link, 0.0) + nbytes * per_step
+        return rates
+
+    def _rate_on(self, job: Job) -> None:
+        self._rate_off(job.name)
+        rates = self._job_link_rate(job)
+        if not rates:
+            return
+        self._job_rate[job.name] = rates
+        for link, r in rates.items():
+            self._link_rate[link] = self._link_rate.get(link, 0.0) + r
+
+    def _rate_off(self, name: str) -> None:
+        for link, r in self._job_rate.pop(name, {}).items():
+            self._link_rate[link] -= r
+
     def _accrue(self, now: float) -> None:
-        """Credit steps + link traffic to every running job up to ``now``."""
-        for job in self.scheduler.running:
-            t0 = max(job.progress_t, job.start_t)
-            if now <= t0:
-                continue
-            d_steps = min((now - t0) / max(job.step_s, 1e-30),
-                          job.remaining_steps())
-            job.steps_done += d_steps
-            job.progress_t = now
-            if job.system is None or job.plan is None:
-                continue
-            for axis, nbytes in job.plan.wire_bytes.items():
-                if nbytes <= 0 or axis not in job.system.fabric.axis_links:
-                    continue
-                link = job.system.fabric.axis_links[axis]
-                self.telemetry.add_link_traffic(
-                    link, nbytes * job.system.n_devices * d_steps)
+        """Integrate link traffic up to ``now`` (O(#links), not O(jobs))."""
+        dt = now - self._accrue_t
+        if dt > 0:
+            for link, rate in self._link_rate.items():
+                if rate > 0:
+                    self.telemetry.add_link_traffic(link, rate * dt)
+        self._accrue_t = max(self._accrue_t, now)
+
+    def _sync_steps(self, job: Job, now: float) -> None:
+        """Bring one job's ``steps_done`` up to ``now`` (lazy: called only
+        when an event actually needs the figure — checkpoint on failure,
+        preemption, shrink re-planning)."""
+        t0 = max(job.progress_t, job.start_t)
+        if now <= t0:
+            return
+        d_steps = min((now - t0) / max(job.step_s, 1e-30),
+                      job.remaining_steps())
+        job.steps_done += d_steps
+        job.progress_t = now
 
     def _observe(self, now: float) -> None:
         self.telemetry.observe(
@@ -149,6 +192,9 @@ class ClusterSimulator:
             self.telemetry.add_recomposition(overhead)
         start = now + overhead + self.cfg.compose_latency_s
         job.progress_t = start          # stepping resumes after the restore
+        # link traffic begins when stepping does, not at lease time: the
+        # rate event folds the job's bytes/sec into the accumulators then
+        self._push(start, "rate", (job.name, job.epoch))
         self._push(start + job.est_duration_s(), "complete",
                    (job.name, job.epoch))
 
@@ -160,6 +206,7 @@ class ClusterSimulator:
 
     # ---------------------------------------------------------------- run --
     def run(self) -> Dict[str, object]:
+        wall0 = time.perf_counter()
         self._gen_trace()
         self._observe(0.0)
         while self._heap:
@@ -170,18 +217,31 @@ class ClusterSimulator:
                 job = self.jobs[payload]
                 self.scheduler.submit(job, now)
                 self._start_newly_scheduled(now)
+            elif kind == "rate":
+                name, epoch = payload
+                job = self.jobs[name]
+                if job.state == RUNNING and job.epoch == epoch:
+                    self._rate_on(job)
             elif kind == "complete":
                 name, epoch = payload
                 job = self.jobs[name]
                 if job.state == RUNNING and job.epoch == epoch:
+                    self._rate_off(name)
                     self.scheduler.on_complete(job, now)
                     self._start_newly_scheduled(now)
             elif kind == "fail":
+                # failure handling needs exact steps_done (checkpoint
+                # boundaries, shrink re-planning): sync every running job
+                # before the scheduler mutates them — failures are rare,
+                # so this scan is off the per-event hot path
+                for job in self.scheduler.running:
+                    self._sync_steps(job, now)
                 healthy = [d.uid for d in self.pool.healthy()]
                 n = min(int(payload), len(healthy))
                 down = self.rng.sample(healthy, n)
                 changed = self.scheduler.on_failure(down, now)
                 for job in changed:
+                    self._rate_off(job.name)      # re-enabled at restart
                     if job.state == RUNNING:      # shrunk in place
                         self._schedule_completion(
                             job, now, restore_overhead_s(job))
@@ -196,6 +256,9 @@ class ClusterSimulator:
             self._observe(now)
         # jobs can legitimately remain queued when the heap drains (e.g.
         # permanent capacity loss); report() surfaces them as "stranded"
+        self.wall_s = time.perf_counter() - wall0
+        self.events_per_s = (len(self.telemetry.events) / self.wall_s
+                             if self.wall_s > 0 else 0.0)
         return self.report()
 
     # ------------------------------------------------------------- report --
@@ -204,6 +267,10 @@ class ClusterSimulator:
         sched = self.scheduler
         rep["jobs"]["stranded"] = len(sched.queue) + len(sched.running)
         rep["makespan_s"] = self._now
+        rep["calibrated"] = bool(self.scheduler.calibration)
+        # NOTE: wall_s / events_per_s are deliberately NOT in this dict —
+        # report() must be bit-deterministic per seed; the bench layer
+        # (benchmarks/cluster_sim) attaches the wall-time telemetry.
         rep["recompositions_per_job"] = {
             j.name: j.recompositions for j in sched.done
             if j.recompositions}

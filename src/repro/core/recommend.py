@@ -33,6 +33,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.configs import get_config
 from repro.configs.base import ModelConfig, PolicyConfig, ShapeConfig, SHAPES
 from repro.core import costmodel
+from repro.core.costmodel import CalibratedCost
 from repro.core.topology import ChipSpec, ICI_BW
 
 
@@ -123,6 +124,45 @@ def _estimate(cfg: ModelConfig, shape: ShapeConfig, dp: int, tp: int,
                       "collective": coll}, True, wire_bytes=wire)
 
 
+# ---------------------------------------------------------------------------
+# measured-cost calibration hook
+# ---------------------------------------------------------------------------
+_calibration: Optional[CalibratedCost] = None
+
+
+def set_calibration(cal: Optional[CalibratedCost]) -> None:
+    """Install a process-wide CalibratedCost; every ranking that is not
+    handed an explicit one (recommend, scheduler admission, cluster
+    simulator pricing) will layer it over the analytic terms."""
+    global _calibration
+    _calibration = cal
+
+
+def get_calibration() -> Optional[CalibratedCost]:
+    return _calibration
+
+
+def calibrate_candidate(cand: Candidate, cfg: ModelConfig, arch: str,
+                        shape_name: str, shape: ShapeConfig,
+                        cal: Optional[CalibratedCost]) -> Candidate:
+    """Re-price one analytic candidate from measurements (no-op without
+    a calibration layer or for infeasible candidates)."""
+    if cal is None or not cal or not cand.feasible:
+        return cand
+    measured = cal.step_override(arch, shape_name, cand.label)
+    terms = dict(cand.terms)
+    if measured is not None:
+        terms["measured"] = measured
+        return dataclasses.replace(cand, step_s=measured, terms=terms)
+    scale = cal.compute_scale(cfg, shape)
+    if scale == 1.0:
+        return cand
+    terms["compute"] = terms.get("compute", 0.0) * scale
+    step = max(terms.get("compute", 0.0), terms.get("memory", 0.0),
+               terms.get("collective", 0.0))
+    return dataclasses.replace(cand, step_s=step, terms=terms)
+
+
 def candidates(n_chips: int = 256, pods: int = 1
                ) -> List[Tuple[int, int]]:
     out = []
@@ -135,11 +175,22 @@ def candidates(n_chips: int = 256, pods: int = 1
 
 
 def recommend(arch: str, shape_name: str, *, n_chips: int = 256,
-              pods: int = 1, top: int = 3) -> List[Candidate]:
-    """Analytic ranking of compositions for one workload."""
+              pods: int = 1, top: int = 3,
+              calibration: Optional[CalibratedCost] = None
+              ) -> List[Candidate]:
+    """Analytic ranking of compositions for one workload.
+
+    When a ``calibration`` layer is supplied (or installed process-wide
+    via ``set_calibration``) the analytic terms are re-priced from
+    measurements before ranking — measured cells override the whole step,
+    tuned-kernel speedups scale the compute term.
+    """
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
-    cands = [_estimate(cfg, shape, dp, tp, pods)
+    cal = calibration if calibration is not None else get_calibration()
+    cands = [calibrate_candidate(
+                 _estimate(cfg, shape, dp, tp, pods), cfg, arch,
+                 shape_name, shape, cal)
              for dp, tp in candidates(n_chips, pods)]
     cands.sort(key=lambda c: c.step_s)
     return cands[:top]

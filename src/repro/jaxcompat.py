@@ -1,0 +1,40 @@
+"""Version compatibility shims for the jax API surface.
+
+The model/trainer code targets the modern ``jax.shard_map`` entry point
+(``mesh=None`` for the ambient mesh, ``axis_names`` for the manual set,
+``check_vma``).  Older jax releases only ship
+``jax.experimental.shard_map.shard_map(f, mesh, in_specs, out_specs,
+check_rep, auto)``; this module bridges the two so the same source runs
+on both.
+"""
+from __future__ import annotations
+
+import jax
+
+_HAS_NEW = hasattr(jax, "shard_map")
+if not _HAS_NEW:
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+
+def shard_map(f, mesh=None, *, in_specs, out_specs,
+              axis_names=frozenset(), check_vma=True):
+    """``jax.shard_map`` with graceful fallback to the experimental API.
+
+    On the legacy API ``axis_names`` maps to its complement (``auto``)
+    and ``check_vma`` to ``check_rep``.  The ``mesh=None`` ambient-mesh
+    form requires the modern API (callers only use it when re-entering
+    an already-manual region, which the legacy API cannot express).
+    """
+    if _HAS_NEW:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=axis_names,
+                             check_vma=check_vma)
+    if mesh is None:
+        raise NotImplementedError(
+            "ambient-mesh shard_map (mesh=None) requires jax.shard_map; "
+            "this jax only has the experimental API")
+    auto = frozenset(mesh.axis_names) - frozenset(axis_names) \
+        if axis_names else frozenset()
+    return _legacy_shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=check_vma,
+                             auto=auto)

@@ -1,0 +1,372 @@
+"""Kernel autotuner: sweep block-size candidates, persist measured winners.
+
+The paper's method is *measure before you commit*: a composable system
+lets you benchmark each configuration instead of modeling it.  This
+module applies the same discipline to the kernel layer — for each
+(kernel, shape-bucket, dtype, variant) cell it times every legal
+(block_q, block_k) / chunk / block_seq candidate and writes the winner to
+the tuned-config registry (``repro.kernels.registry``), which the
+dispatch layer and step builders then resolve at call time.
+
+Timing is interpret-mode-safe: on CPU the Pallas kernels run under the
+interpreter (grid overhead dominates, so the sweep ranks configs by the
+same per-tile/grid tradeoff the TPU sees at much larger scale); on TPU
+the same harness wall-clocks the compiled kernels.  Every candidate is
+compiled/warmed once, then timed ``iters`` times; the median is recorded.
+
+CLI::
+
+    PYTHONPATH=src python -m repro.kernels.autotune --smoke \
+        --out results/tuned_configs.json
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import statistics
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels import registry as reg
+
+KERNELS = ("flash_attention", "flash_attention_bwd", "flash_attention_xla",
+           "ssd", "rglru")
+
+_ATTN_BLOCK_OPTS = (32, 64, 128, 256)
+_SSD_CHUNK_OPTS = (32, 64, 128, 256)
+_RGLRU_BLOCK_OPTS = (16, 32, 64, 128, 256)
+
+
+@dataclasses.dataclass(frozen=True)
+class Case:
+    """One tuning cell: a kernel at a concrete shape/dtype/variant.
+
+    ``dims`` is the kernel-specific dimension dict (sorted tuple so the
+    case is hashable); it must carry exactly the names the registry
+    resolvers key on (attention: s,t,d,g — ssd: s,h,p,g,n — rglru: s,w).
+    Batch size is an input-construction detail, not part of the key.
+    """
+    kernel: str
+    dims: Tuple[Tuple[str, int], ...]
+    dtype: str = "float32"
+    causal: bool = True
+    window: int = 0
+    batch: int = 1
+
+    def dim(self, name: str) -> int:
+        return dict(self.dims)[name]
+
+    @property
+    def variant(self) -> str:
+        if not self.kernel.startswith("flash_attention"):
+            return ""
+        return reg.attention_variant(self.causal, self.window)
+
+    @property
+    def key(self) -> str:
+        return reg.make_key(self.kernel, dtype=self.dtype,
+                            variant=self.variant, **dict(self.dims))
+
+    def label(self) -> str:
+        d = ",".join(f"{k}{v}" for k, v in self.dims)
+        return f"{self.kernel}[{d},{self.dtype},{self.variant or 'na'}]"
+
+
+def attn_case(kernel: str = "flash_attention", *, S: int, T: int = 0,
+              D: int = 32, G: int = 2, dtype: str = "float32",
+              causal: bool = True, window: int = 0, batch: int = 1) -> Case:
+    T = T or S
+    return Case(kernel, (("d", D), ("g", G), ("s", S), ("t", T)),
+                dtype=dtype, causal=causal, window=window, batch=batch)
+
+
+def ssd_case(*, S: int, H: int = 4, P: int = 16, G: int = 1, N: int = 32,
+             dtype: str = "float32", batch: int = 1) -> Case:
+    return Case("ssd", (("g", G), ("h", H), ("n", N), ("p", P), ("s", S)),
+                dtype=dtype, batch=batch)
+
+
+def rglru_case(*, S: int, W: int = 64, dtype: str = "float32",
+               batch: int = 1) -> Case:
+    return Case("rglru", (("s", S), ("w", W)), dtype=dtype, batch=batch)
+
+
+# ---------------------------------------------------------------------------
+# deterministic candidate enumeration
+# ---------------------------------------------------------------------------
+def candidates_for(case: Case) -> List[Dict[str, int]]:
+    """Every legal block config for ``case``, deduped after clamping to
+    the sequence length, in sorted (deterministic) order."""
+    seen = []
+    if case.kernel.startswith("flash_attention"):
+        S, T = case.dim("s"), case.dim("t")
+        for bq in _ATTN_BLOCK_OPTS:
+            cq = min(bq, S)
+            if S % cq:
+                continue
+            for bk in _ATTN_BLOCK_OPTS:
+                ck = min(bk, T)
+                if T % ck:
+                    continue
+                cand = {"block_q": cq, "block_k": ck}
+                if cand not in seen:
+                    seen.append(cand)
+        seen.sort(key=lambda c: (c["block_q"], c["block_k"]))
+    elif case.kernel == "ssd":
+        S = case.dim("s")
+        for ch in _SSD_CHUNK_OPTS:
+            cc = min(ch, S)
+            if S % cc:
+                continue
+            cand = {"chunk": cc}
+            if cand not in seen:
+                seen.append(cand)
+        seen.sort(key=lambda c: c["chunk"])
+    elif case.kernel == "rglru":
+        S = case.dim("s")
+        for bs in _RGLRU_BLOCK_OPTS:
+            cb = min(bs, S)
+            if S % cb:
+                continue
+            cand = {"block_seq": cb}
+            if cand not in seen:
+                seen.append(cand)
+        seen.sort(key=lambda c: c["block_seq"])
+    else:
+        raise ValueError(f"unknown kernel {case.kernel!r}")
+    return seen
+
+
+def default_blocks(case: Case) -> Dict[str, int]:
+    """The pre-registry hardcoded config, fitted the way dispatch does
+    (largest size <= the default that divides the sequence — a plain
+    min() clamp could hand the kernels a non-dividing tile on non-pow2
+    sequences and crash the sweep's baseline measurement)."""
+    if case.kernel.startswith("flash_attention"):
+        dq, dk = ops.DEFAULT_ATTN_BLOCKS
+        if case.kernel == "flash_attention_xla":
+            dq = dk = 512                      # models/attention.py default
+        return {"block_q": reg.fit_block(dq, case.dim("s")),
+                "block_k": reg.fit_block(dk, case.dim("t"))}
+    if case.kernel == "ssd":
+        return {"chunk": reg.fit_block(ops.DEFAULT_SSD_CHUNK,
+                                       case.dim("s"))}
+    return {"block_seq": reg.fit_block(ops.DEFAULT_RGLRU_BLOCK,
+                                       case.dim("s"))}
+
+
+# ---------------------------------------------------------------------------
+# input + callable construction
+# ---------------------------------------------------------------------------
+def _np_dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[name]
+
+
+def build_call(case: Case, blocks: Dict[str, int]
+               ) -> Tuple[Callable, tuple]:
+    """(fn, args) for one candidate; fn(*args) runs the kernel once."""
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    dt_ = _np_dtype(case.dtype)
+    B = case.batch
+    if case.kernel.startswith("flash_attention"):
+        S, T = case.dim("s"), case.dim("t")
+        D, G = case.dim("d"), case.dim("g")
+        K = 2                                  # kv heads; H = K*G
+        H = K * G
+        q = jax.random.normal(k1, (B, S, H, D), jnp.float32).astype(dt_)
+        k = jax.random.normal(k2, (B, T, K, D), jnp.float32).astype(dt_)
+        v = jax.random.normal(k3, (B, T, K, D), jnp.float32).astype(dt_)
+        impl = {"flash_attention": "pallas",
+                "flash_attention_bwd": "pallas_vjp",
+                "flash_attention_xla": "xla"}[case.kernel]
+        kwargs = dict(causal=case.causal, window=case.window, impl=impl,
+                      block_q=blocks["block_q"], block_k=blocks["block_k"])
+        if case.kernel == "flash_attention_bwd":
+            def loss(q_, k_, v_):
+                return jnp.sum(ops.attention(q_, k_, v_, **kwargs))
+            return jax.jit(jax.grad(loss, argnums=(0, 1, 2))), (q, k, v)
+
+        def fwd(q_, k_, v_):
+            return ops.attention(q_, k_, v_, **kwargs)
+        return fwd, (q, k, v)
+
+    if case.kernel == "ssd":
+        S, H = case.dim("s"), case.dim("h")
+        P, G, N = case.dim("p"), case.dim("g"), case.dim("n")
+        x = jax.random.normal(k1, (B, S, H, P), jnp.float32).astype(dt_)
+        dt = jax.nn.softplus(jax.random.normal(k2, (B, S, H))).astype(dt_)
+        A = -jnp.exp(jax.random.normal(k3, (H,)))
+        Bm = (jax.random.normal(k4, (B, S, G, N)) * 0.5).astype(dt_)
+        Cm = (jax.random.normal(k5, (B, S, G, N)) * 0.5).astype(dt_)
+
+        def run_ssd(*args):
+            return ops.ssd(*args, chunk=blocks["chunk"], impl="pallas")
+        return run_ssd, (x, dt, A, Bm, Cm)
+
+    if case.kernel == "rglru":
+        S, W = case.dim("s"), case.dim("w")
+        log_a = -jax.nn.softplus(
+            jax.random.normal(k1, (B, S, W))).astype(dt_)
+        gated = jax.random.normal(k2, (B, S, W)).astype(dt_)
+
+        def run_rglru(*args):
+            return ops.rglru(*args, block_seq=blocks["block_seq"],
+                             impl="pallas")
+        return run_rglru, (log_a, gated)
+
+    raise ValueError(f"unknown kernel {case.kernel!r}")
+
+
+# ---------------------------------------------------------------------------
+# timing
+# ---------------------------------------------------------------------------
+def time_call(fn: Callable, args: tuple, *, iters: int = 3) -> float:
+    """Median wall-clock us/call; the first (untimed) call compiles."""
+    out = fn(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(max(1, iters)):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return statistics.median(ts) * 1e6
+
+
+# ---------------------------------------------------------------------------
+# the sweep
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class CaseResult:
+    case: Case
+    entry: reg.TunedEntry
+    timings: List[Tuple[Dict[str, int], float]]   # (blocks, us) per cand
+
+    def to_json(self) -> Dict[str, object]:
+        return {
+            "key": self.case.key,
+            "kernel": self.case.kernel,
+            "best": self.entry.blocks,
+            "us": self.entry.us,
+            "default": default_blocks(self.case),
+            "default_us": self.entry.default_us,
+            "speedup": self.entry.speedup,
+            "candidates": [{"blocks": b, "us": us}
+                           for b, us in self.timings],
+        }
+
+
+def tune_case(case: Case, *, iters: int = 3) -> CaseResult:
+    """Time every candidate for one cell; return the measured winner."""
+    cands = candidates_for(case)
+    default = default_blocks(case)
+    timings: List[Tuple[Dict[str, int], float]] = []
+    best: Optional[Dict[str, int]] = None
+    best_us = float("inf")
+    default_us = 0.0
+    for blocks in cands:
+        fn, args = build_call(case, blocks)
+        us = time_call(fn, args, iters=iters)
+        timings.append((blocks, us))
+        if blocks == default:
+            default_us = us
+        if us < best_us:
+            best, best_us = blocks, us
+    if default_us == 0.0 and default not in cands:
+        # default config not in the legal candidate grid (e.g. it does
+        # not divide the sequence): measure it anyway for the speedup
+        fn, args = build_call(case, default)
+        default_us = time_call(fn, args, iters=iters)
+    entry = reg.TunedEntry(blocks=dict(best or default), us=best_us,
+                           default_us=default_us,
+                           n_candidates=len(cands),
+                           backend=jax.default_backend())
+    return CaseResult(case, entry, timings)
+
+
+def tune(cases: Sequence[Case], *, iters: int = 3,
+         registry: Optional[reg.Registry] = None,
+         verbose: bool = False) -> Tuple[reg.Registry, List[CaseResult]]:
+    """Sweep every case into ``registry`` (a new one when None)."""
+    registry = registry if registry is not None else reg.Registry()
+    results: List[CaseResult] = []
+    for case in cases:
+        res = tune_case(case, iters=iters)
+        registry.put(case.key, res.entry)
+        results.append(res)
+        if verbose:
+            print(f"{case.label():60s} best={res.entry.blocks} "
+                  f"{res.entry.us:9.1f}us (default "
+                  f"{res.entry.default_us:9.1f}us, "
+                  f"x{res.entry.speedup:.2f})")
+    return registry, results
+
+
+def sweep(cases: Optional[Sequence[Case]] = None, *, iters: int = 3,
+          path: Optional[str] = None, merge: bool = True,
+          verbose: bool = False) -> Tuple[reg.Registry, List[CaseResult]]:
+    """tune() + persist: merge into the registry at ``path`` and save."""
+    cases = list(cases if cases is not None else DEFAULT_CASES)
+    path = path or reg.DEFAULT_PATH
+    registry = None
+    if merge:
+        try:
+            registry = reg.Registry.load(path)
+        except (OSError, ValueError, KeyError):
+            registry = None
+    registry, results = tune(cases, iters=iters, registry=registry,
+                             verbose=verbose)
+    registry.save(path)
+    # fresh winners take effect in THIS process too, not just after a
+    # restart (get_registry caches its first disk read)
+    reg.set_registry(registry)
+    return registry, results
+
+
+# The standing grids.  SMOKE is the CI sweep: small shapes, every kernel,
+# seconds-not-minutes under the CPU interpreter.  DEFAULT adds the
+# larger buckets the model zoo actually hits (4k train / 32k serve tiles
+# are covered by the pow2 bucketing of s/t).
+SMOKE_CASES: Tuple[Case, ...] = (
+    attn_case("flash_attention", S=128, D=32, G=2),
+    attn_case("flash_attention", S=128, D=32, G=2, window=64),
+    attn_case("flash_attention_bwd", S=128, D=32, G=2),
+    attn_case("flash_attention_xla", S=256, D=64, G=4),
+    ssd_case(S=128, H=4, P=16, G=1, N=32),
+    rglru_case(S=128, W=64),
+)
+
+DEFAULT_CASES: Tuple[Case, ...] = SMOKE_CASES + (
+    attn_case("flash_attention", S=256, D=64, G=4),
+    attn_case("flash_attention", S=256, D=64, G=4, dtype="bfloat16"),
+    attn_case("flash_attention", S=512, D=64, G=1, causal=False),
+    attn_case("flash_attention_bwd", S=256, D=64, G=2),
+    attn_case("flash_attention_xla", S=512, D=64, G=4),
+    ssd_case(S=256, H=8, P=32, G=1, N=64),
+    rglru_case(S=256, W=128),
+)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI grid instead of the default sweep")
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--out", default=reg.DEFAULT_PATH)
+    ap.add_argument("--no-merge", action="store_true",
+                    help="overwrite instead of merging into --out")
+    args = ap.parse_args(argv)
+    cases = SMOKE_CASES if args.smoke else DEFAULT_CASES
+    registry, _ = sweep(cases, iters=args.iters, path=args.out,
+                        merge=not args.no_merge, verbose=True)
+    print(f"wrote {len(registry)} tuned config(s) to {registry.path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

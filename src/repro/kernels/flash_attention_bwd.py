@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -256,7 +258,7 @@ def _fwd(q, k, v, *, causal, window, softcap, bq, bk, interpret):
             pltpu.VMEM((G * bq,), jnp.float32),
             pltpu.VMEM((G * bq, D), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
@@ -301,7 +303,7 @@ def _bwd(q, k, v, o_blk, m, l, dout, *, causal, window, softcap, bq, bk,
             pltpu.VMEM((bk, D), jnp.float32),
             pltpu.VMEM((bk, D), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
@@ -326,7 +328,7 @@ def _bwd(q, k, v, o_blk, m, l, dout, *, causal, window, softcap, bq, bk,
                                lambda b, h, i, j: (b, h, 0, i, 0)),
         out_shape=jax.ShapeDtypeStruct((B, K, G, S, D), jnp.float32),
         scratch_shapes=[pltpu.VMEM((G * bq, D), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

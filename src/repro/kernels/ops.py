@@ -3,29 +3,48 @@
 The XLA path is the lowering used on CPU (dry-run) and the differentiable
 training path; the Pallas path is the TPU-target hot-spot implementation,
 validated in interpret mode (tests/test_kernels.py).
+
+Block sizes default to *tuned* configs when a registry is active
+(``repro.kernels.registry``, populated by ``repro.kernels.autotune``):
+pass ``block_q=None`` etc. (the default) to resolve per shape bucket, or
+an explicit int to pin.  ``interpret`` defaults from the backend — real
+compilation on TPU, interpreter everywhere else — derived once here
+instead of per call site.
 """
 from __future__ import annotations
 
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import registry as _reg
 from repro.kernels import rglru as _rg
-from repro.kernels import ssd as _ssd
+from repro.kernels import ssd as _sd
 from repro.models.attention import flash_attention_xla
 from repro.models.rglru import rglru_scan
 from repro.models.ssm import ssd_chunked
+
+# pre-registry defaults; registry misses and explicit None resolve here
+DEFAULT_ATTN_BLOCKS = (256, 256)
+DEFAULT_SSD_CHUNK = 256
+DEFAULT_RGLRU_BLOCK = 128
+
+
+@functools.lru_cache(maxsize=1)
+def default_interpret() -> bool:
+    """Pallas kernels compile for real only on TPU; interpret elsewhere.
+
+    Cached: the default backend cannot change within a process, and the
+    answer gates jit cache keys (a flapping default would re-jit)."""
+    return jax.default_backend() != "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=(
     "causal", "window", "softcap", "impl", "block_q", "block_k",
     "interpret"))
-def attention(q, k, v, *, causal=True, window=0, softcap=0.0,
-              impl="pallas", block_q=256, block_k=256, interpret=True):
-    """impl: "pallas" (fwd kernel), "pallas_vjp" (fwd+bwd kernels,
-    differentiable — the TPU training path), "xla" (pure-JAX)."""
+def _attention(q, k, v, *, causal, window, softcap, impl, block_q, block_k,
+               interpret):
     if impl == "pallas":
         return _fa.flash_attention(q, k, v, causal=causal, window=window,
                                    softcap=softcap, block_q=block_q,
@@ -39,17 +58,64 @@ def attention(q, k, v, *, causal=True, window=0, softcap=0.0,
                                kv_block=block_k)
 
 
+def attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+              impl="pallas", block_q=None, block_k=None, interpret=None):
+    """impl: "pallas" (fwd kernel), "pallas_vjp" (fwd+bwd kernels,
+    differentiable — the TPU training path), "xla" (pure-JAX).
+
+    ``block_q``/``block_k``=None resolve from the tuned-config registry
+    (falling back to 256/256); ``interpret``=None resolves from backend.
+    """
+    if block_q is None or block_k is None:
+        kernel = {"pallas": "flash_attention",
+                  "pallas_vjp": "flash_attention_bwd",
+                  "xla": "flash_attention_xla"}.get(impl, "flash_attention")
+        bq, bk = _reg.attention_blocks(
+            q.shape[1], k.shape[1], q.shape[3], q.shape[2] // k.shape[2],
+            q.dtype, causal, window, defaults=DEFAULT_ATTN_BLOCKS,
+            kernel=kernel)
+        block_q = block_q if block_q is not None else bq
+        block_k = block_k if block_k is not None else bk
+    if interpret is None:
+        interpret = default_interpret()
+    return _attention(q, k, v, causal=causal, window=window,
+                      softcap=softcap, impl=impl, block_q=block_q,
+                      block_k=block_k, interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("chunk", "impl", "interpret"))
-def ssd(x, dt, A, Bm, Cm, *, chunk=256, impl="pallas", interpret=True):
+def _ssd(x, dt, A, Bm, Cm, *, chunk, impl, interpret):
     if impl == "pallas":
-        return _ssd.ssd(x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)
+        return _sd.ssd(x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)
     return ssd_chunked(x, dt, A, Bm, Cm, chunk=chunk)
+
+
+def ssd(x, dt, A, Bm, Cm, *, chunk=None, impl="pallas", interpret=None):
+    if chunk is None:
+        chunk = _reg.ssd_chunk(x.shape[1], x.shape[2], x.shape[3],
+                               Bm.shape[2], Bm.shape[3], x.dtype,
+                               default=DEFAULT_SSD_CHUNK)
+    if interpret is None:
+        interpret = default_interpret()
+    return _ssd(x, dt, A, Bm, Cm, chunk=chunk, impl=impl,
+                interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("block_seq", "impl",
                                              "interpret"))
-def rglru(log_a, gated, *, block_seq=128, impl="pallas", interpret=True):
+def _rglru(log_a, gated, *, block_seq, impl, interpret):
     if impl == "pallas":
         return _rg.rglru(log_a, gated, block_seq=block_seq,
                          interpret=interpret)
     return rglru_scan(log_a, gated)
+
+
+def rglru(log_a, gated, *, block_seq=None, impl="pallas", interpret=None):
+    if block_seq is None:
+        block_seq = _reg.rglru_block(log_a.shape[1], log_a.shape[2],
+                                     log_a.dtype,
+                                     default=DEFAULT_RGLRU_BLOCK)
+    if interpret is None:
+        interpret = default_interpret()
+    return _rglru(log_a, gated, block_seq=block_seq, impl=impl,
+                  interpret=interpret)

@@ -82,7 +82,7 @@ def lower_cell(arch: str, shape_name: str, mesh, policy: PolicyConfig,
     ins = specs_lib.input_specs(arch, shape_name, policy, n_pods=n_pods)
 
     if ins["kind"] == "train":
-        step = trainer.make_train_step(cfg, policy, mesh=mesh)
+        step = trainer.make_train_step(cfg, policy, mesh=mesh, shape=shape)
         sspec = trainer.state_specs(ins["state"], cfg, policy, mesh_axes)
         bspec = pol.batch_specs(ins["batch"], policy, mesh_axes)
         jf = jax.jit(step,
@@ -110,7 +110,8 @@ def lower_cell(arch: str, shape_name: str, mesh, policy: PolicyConfig,
         flops = (costmodel.forward_flops(cfg, shape, with_logits=False)
                  + 2 * shape.global_batch * cfg.d_model * cfg.padded_vocab)
     else:  # decode
-        step = engine.make_decode_step(cfg, policy, mesh=mesh)
+        step = engine.make_decode_step(cfg, policy, mesh=mesh,
+                                       max_seq=shape.seq_len)
         pspec = pol.param_specs(ins["params"], cfg, policy, mesh_axes)
         cspec = pol.cache_specs(ins["caches"], policy, mesh_axes)
         tspec = pol.batch_specs(

@@ -88,7 +88,7 @@ def main() -> int:
         print(f"resumed from step {start}")
 
     step_fn = jax.jit(trainer.make_train_step(cfg, policy, optcfg,
-                                              schedcfg))
+                                              schedcfg, shape=shape))
     ds = SyntheticDataset(cfg, shape)
     t0 = time.time()
     for step in range(start, args.steps):

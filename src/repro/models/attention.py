@@ -23,9 +23,20 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import layers
+from repro.jaxcompat import shard_map
 
 
 NEG_INF = -1e30
+
+
+def _fit_block(block: int, dim: int) -> int:
+    """Largest tile <= ``block`` that divides ``dim`` (bounded: at most
+    ``block`` decrements).  Mirrors kernels.registry.fit_block without a
+    cross-layer import."""
+    b = max(1, min(int(block), int(dim)))
+    while dim % b:
+        b -= 1
+    return b
 
 
 # ---------------------------------------------------------------------------
@@ -105,9 +116,10 @@ def flash_attention_xla(q, k, v, *, causal=True, window=0, q_offset=0,
     B, S, H, D = q.shape
     T, K = k.shape[1], k.shape[2]
     G = H // K
-    q_block = min(q_block, S)
-    kv_block = min(kv_block, T)
-    assert S % q_block == 0 and T % kv_block == 0, (S, T, q_block, kv_block)
+    # fit, don't assert: tuned/default tiles come from the step builder's
+    # build-time shape, but a served prompt can be any length <= capacity
+    q_block = _fit_block(q_block, S)
+    kv_block = _fit_block(kv_block, T)
     nq, nk = S // q_block, T // kv_block
     scale = 1.0 / math.sqrt(D)
 
@@ -409,7 +421,7 @@ def sharded_decode(q, k_new, v_new, cache, positions, *, mesh, dp_axes,
             if "Manual" in str(t))
     except Exception:
         already = frozenset()
-    out, ck, cv, cp = jax.shard_map(
+    out, ck, cv, cp = shard_map(
         body, mesh=None if already else mesh,
         axis_names=manual - already if already else manual,
         in_specs=(s_q, s_q, s_q, s_kv, s_kv, s_pos, s_cur),
@@ -481,7 +493,7 @@ def sharded_flash(q, k, v, *, mesh, dp_axes, tp_axis, causal=True,
             if "Manual" in str(t))
     except Exception:
         already = frozenset()
-    out = jax.shard_map(body, mesh=None if already else mesh,
+    out = shard_map(body, mesh=None if already else mesh,
                         axis_names=manual - already if already else manual,
                         in_specs=(spec, spec, spec), out_specs=spec,
                         check_vma=False)(q, kr, vr)

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import layers
+from repro.jaxcompat import shard_map
 
 
 def init_moe(key, cfg: ModelConfig, dtype=jnp.float32):
@@ -249,5 +250,5 @@ def _moe_ep(params, x2d, cfg, compute_dtype, pctx, capacity):
         own = frozenset(dp + (tp,)) - frozenset(
             a for a, t in zip(am.axis_names, am.axis_types)
             if "Manual" in str(t))
-        return jax.shard_map(body, axis_names=own, **kwargs)(eparams, x2d)
-    return jax.shard_map(body, mesh=mesh, **kwargs)(eparams, x2d)
+        return shard_map(body, axis_names=own, **kwargs)(eparams, x2d)
+    return shard_map(body, mesh=mesh, **kwargs)(eparams, x2d)

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import layers
+from repro.jaxcompat import shard_map
 
 
 # ---------------------------------------------------------------------------
@@ -141,7 +142,7 @@ def ssd_sharded(x, dt, A, Bm, Cm, *, chunk: int, mesh, dp_axes, tp_axis):
             if "Manual" in str(t))
     except Exception:
         already = frozenset()
-    return jax.shard_map(
+    return shard_map(
         body, mesh=None if already else mesh,
         axis_names=manual - already if already else manual,
         in_specs=(sx, sdt, sA, sBC, sBC),

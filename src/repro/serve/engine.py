@@ -36,9 +36,13 @@ from repro.train.trainer import make_run_ctx
 # ---------------------------------------------------------------------------
 def make_prefill_step(cfg: ModelConfig, policy: PolicyConfig, *,
                       cache_capacity: int, mesh=None) -> Callable:
-    """prefill(params, tokens) -> (last-token logits, caches)."""
-    ctx = dataclasses.replace(make_run_ctx(cfg, policy, mesh),
-                              cache_capacity=cache_capacity)
+    """prefill(params, tokens) -> (last-token logits, caches).
+
+    The attention tiles come from the tuned-config registry keyed by the
+    prefill length (= cache capacity); defaults on a registry miss."""
+    ctx = dataclasses.replace(
+        make_run_ctx(cfg, policy, mesh, seq_len=cache_capacity),
+        cache_capacity=cache_capacity)
 
     def prefill(params, tokens):
         hidden, caches, _ = lm.forward(params, tokens, cfg, ctx,
@@ -52,13 +56,14 @@ def make_prefill_step(cfg: ModelConfig, policy: PolicyConfig, *,
     return prefill
 
 
-def make_decode_step(cfg: ModelConfig, policy: PolicyConfig, mesh=None
-                     ) -> Callable:
+def make_decode_step(cfg: ModelConfig, policy: PolicyConfig, mesh=None,
+                     max_seq: Optional[int] = None) -> Callable:
     """decode(params, caches, tokens, positions) -> (logits, caches).
 
     tokens (B, 1) int32 (or (B, 1, d) embeddings); positions (B, 1) int32.
+    ``max_seq`` (the cache length) keys the tuned-config lookup.
     """
-    ctx = make_run_ctx(cfg, policy, mesh)
+    ctx = make_run_ctx(cfg, policy, mesh, seq_len=max_seq)
 
     def decode(params, caches, tokens, positions):
         logits, new_caches, _ = lm.forward(params, tokens, cfg, ctx,
@@ -107,7 +112,8 @@ class ServeEngine:
         self.max_seq = max_seq
         self.ctx_dtype = jnp.bfloat16 \
             if policy.compute_dtype == "bfloat16" else jnp.float32
-        self.decode = jax.jit(make_decode_step(cfg, policy, mesh))
+        self.decode = jax.jit(make_decode_step(cfg, policy, mesh,
+                                               max_seq=max_seq))
         self.prefill = jax.jit(
             make_prefill_step(cfg, policy, cache_capacity=max_seq,
                               mesh=mesh))

@@ -30,6 +30,7 @@ from repro.core import hierarchy, policy as pol
 from repro.models import lm
 from repro.models.transformer import ParallelCtx, RunCtx
 from repro.optim import adamw, schedule
+from repro.jaxcompat import shard_map
 
 
 # ---------------------------------------------------------------------------
@@ -60,8 +61,23 @@ def _dt(name: str):
             "float16": jnp.float16}[name]
 
 
+def resolve_attn_blocks(cfg: ModelConfig, policy: PolicyConfig,
+                        seq_len: Optional[int]) -> Tuple[int, int]:
+    """Shape-keyed tuned-config lookup for the step builders' attention
+    tiles (the XLA flash path): measured (q_block, kv_block) when the
+    registry has the bucket, the historical (512, 512) otherwise."""
+    from repro.kernels import registry as kreg
+    if not seq_len:
+        return RunCtx.attn_blocks        # class default — no shape known
+    return kreg.attention_blocks(
+        seq_len, seq_len, cfg.head_dim,
+        max(1, cfg.n_heads // max(cfg.n_kv_heads, 1)),
+        _dt(policy.compute_dtype), cfg.causal, 0,
+        defaults=RunCtx.attn_blocks, kernel="flash_attention_xla")
+
+
 def make_run_ctx(cfg: ModelConfig, policy: PolicyConfig,
-                 mesh=None) -> RunCtx:
+                 mesh=None, *, seq_len: Optional[int] = None) -> RunCtx:
     moe_impl = "sorted"
     if (cfg.moe is not None and policy.ep and mesh is not None
             and policy.tp_axis in getattr(mesh, "shape", {})
@@ -71,6 +87,7 @@ def make_run_ctx(cfg: ModelConfig, policy: PolicyConfig,
     return RunCtx(
         compute_dtype=_dt(policy.compute_dtype),
         attn_impl=policy.attn_impl,
+        attn_blocks=resolve_attn_blocks(cfg, policy, seq_len),
         moe_impl=moe_impl,
         remat=policy.remat,
         pctx=ParallelCtx(mesh=mesh, dp_axes=policy.dp_axes,
@@ -109,9 +126,9 @@ def state_specs(state: TrainState, cfg: ModelConfig, policy: PolicyConfig,
 # ---------------------------------------------------------------------------
 # loss / grads
 # ---------------------------------------------------------------------------
-def make_loss_fn(cfg: ModelConfig, policy: PolicyConfig, mesh=None
-                 ) -> Callable:
-    ctx = make_run_ctx(cfg, policy, mesh)
+def make_loss_fn(cfg: ModelConfig, policy: PolicyConfig, mesh=None,
+                 seq_len: Optional[int] = None) -> Callable:
+    ctx = make_run_ctx(cfg, policy, mesh, seq_len=seq_len)
     big_vocab = cfg.padded_vocab >= 32_768
 
     def loss_fn(params, batch):
@@ -159,13 +176,16 @@ def _accum_grads(loss_fn, params, batch, n_accum: int):
 def make_train_step(cfg: ModelConfig, policy: PolicyConfig,
                     optcfg: adamw.AdamWConfig = adamw.AdamWConfig(),
                     schedcfg: Optional[schedule.ScheduleConfig] = None,
-                    mesh=None) -> Callable:
+                    mesh=None,
+                    shape: Optional[ShapeConfig] = None) -> Callable:
     """Returns train_step(state, batch) -> (state, metrics).
 
     Lowers/compiles under any mesh; all sharding comes from in/out specs
-    (see ``launch.dryrun`` / ``launch.train``).
+    (see ``launch.dryrun`` / ``launch.train``).  ``shape`` keys the
+    tuned-config lookup for the attention tiles; None keeps defaults.
     """
-    loss_fn = make_loss_fn(cfg, policy, mesh)
+    seq_len = shape.seq_len if shape is not None else None
+    loss_fn = make_loss_fn(cfg, policy, mesh, seq_len=seq_len)
     mesh_axes = dict(getattr(mesh, "shape", {})) if mesh is not None else {}
     use_pod_exchange = (
         "pod" in mesh_axes and mesh_axes["pod"] > 1
@@ -197,7 +217,7 @@ def make_train_step(cfg: ModelConfig, policy: PolicyConfig,
     pod_policy = dataclasses.replace(
         policy, dp_axes=tuple(a for a in policy.dp_axes if a != "pod"),
         ep=False)
-    pod_loss_fn = make_loss_fn(cfg, pod_policy, mesh)
+    pod_loss_fn = make_loss_fn(cfg, pod_policy, mesh, seq_len=seq_len)
 
     def train_step(state: TrainState, batch):
 
@@ -218,7 +238,7 @@ def make_train_step(cfg: ModelConfig, policy: PolicyConfig,
             lambda x: P(*(("pod",) + (None,) * (x.ndim - 1))), batch)
         ef_spec = jax.tree.map(lambda r: P("pod"), state.ef_residual)
         gspec = jax.tree.map(lambda p: P(), state.params)
-        grads, ef_new, loss, metrics = jax.shard_map(
+        grads, ef_new, loss, metrics = shard_map(
             pod_body, mesh=mesh,
             in_specs=(gspec, ef_spec, bspec),
             out_specs=(gspec, ef_spec, P(), jax.tree.map(
