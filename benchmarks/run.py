@@ -26,7 +26,7 @@ def main() -> int:
     from benchmarks import (beyond_paper, cluster_sim, fig10_utilization,
                             fig11_switch_overhead, fig12_traffic,
                             fig15_storage, fig16_sw_opt, kernel_tune,
-                            recompose, roofline, table2_models,
+                            recompose, roofline, serve_bench, table2_models,
                             table4_links)
     modules = {
         "table2": table2_models,
@@ -41,6 +41,7 @@ def main() -> int:
         "roofline": roofline,
         "cluster_sim": cluster_sim,
         "kernel_tune": kernel_tune,
+        "serve_bench": serve_bench,
     }
 
     if args.bench:

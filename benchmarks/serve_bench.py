@@ -1,0 +1,145 @@
+"""Serving-stack benchmark: engine smoke + cluster serving trace.
+
+Two layers, two request-arrival scenarios each:
+
+  * **engine** — a real (reduced-config) ``AsyncServeEngine`` run on this
+    host: paged KV cache, chunked prefill, prefix-hash reuse, greedy
+    decode.  ``burst`` submits every request up front; ``paced`` trickles
+    them in while the engine steps.  TTFT/TPOT/throughput are wall-clock
+    (so they vary by machine); cache-hit rate and token counts are exact.
+  * **cluster** — the deterministic serving-trace mode of the cluster
+    simulator: a 2-replica ``ServeJob`` service admitted *alongside* the
+    default training-job mix, ``poisson`` vs ``burst`` request arrivals,
+    per-replica prefix caches and per-link KV-traffic accounting.
+
+``report()`` returns the JSON artifact ``run.py --bench serve_bench``
+writes to ``results/serve_bench.json``; schema asserted by
+``tests/test_artifacts.py``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import numpy as np
+
+from repro.cluster.simulator import (ClusterSimulator, ServiceConfig,
+                                     TraceConfig)
+from repro.configs import get_config, reduced
+from repro.configs.base import PolicyConfig
+from repro.models import lm
+from repro.serve import AsyncServeEngine, ServeRequest
+
+ARCH = "qwen2-0.5b"
+N_REQUESTS = 10
+PROMPT_LEN = 40
+PREFIX_LEN = 24
+MAX_NEW = 8
+
+
+def _requests(vocab: int) -> List[ServeRequest]:
+    """Shared-prefix request mix: two system prompts, per-request tails."""
+    rng = np.random.RandomState(0)
+    prefixes = [list(rng.randint(0, vocab, PREFIX_LEN)) for _ in range(2)]
+    out = []
+    for i in range(N_REQUESTS):
+        tail = list(np.random.RandomState(100 + i).randint(
+            0, vocab, PROMPT_LEN - PREFIX_LEN))
+        out.append(ServeRequest(i, prefixes[i % 2] + tail, max_new=MAX_NEW))
+    return out
+
+
+def _engine(params, cfg) -> AsyncServeEngine:
+    policy = PolicyConfig(compute_dtype="float32", remat="none",
+                          attn_impl="full")
+    return AsyncServeEngine(cfg, params, policy, n_slots=4, max_seq=96,
+                            page_size=8, prefill_chunk=16, prefill_batch=2)
+
+
+def engine_scenarios() -> Dict[str, Dict[str, object]]:
+    cfg = reduced(get_config(ARCH))
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    out: Dict[str, Dict[str, object]] = {}
+
+    eng = _engine(params, cfg)
+    for r in _requests(cfg.vocab_size):
+        eng.submit(r)
+    eng.run()
+    out["burst"] = eng.report()
+
+    eng = _engine(params, cfg)
+    pending = _requests(cfg.vocab_size)
+    while pending or not eng.sched.all_done():
+        if pending:                      # one new arrival per iteration
+            eng.submit(pending.pop(0))
+        if eng.step() == 0 and not pending and not eng.sched.active:
+            break
+        eng.stats.mark(eng.now())
+    out["paced"] = eng.report()
+    return out
+
+
+def _cluster_cfg(arrival: str) -> TraceConfig:
+    return TraceConfig(
+        n_jobs=12, arrival_rate_hz=0.2, seed=7,
+        failures=((300.0, 8),), repair_after_s=180.0,
+        services=(ServiceConfig(
+            name="chat", arch="llama3.2-3b", shape_name="decode_32k",
+            n_replicas=2, chips_per_replica=64, n_requests=160,
+            arrival_rate_hz=2.0, arrival=arrival, prompt_len=2048,
+            max_new=128, n_prefixes=6, prefix_len=1024,
+            prefill_chunk=512),))
+
+
+def cluster_scenarios() -> Dict[str, Dict[str, object]]:
+    out: Dict[str, Dict[str, object]] = {}
+    for arrival in ("poisson", "burst"):
+        rep = ClusterSimulator(_cluster_cfg(arrival)).run()
+        out[arrival] = {
+            "jobs": rep["jobs"],
+            "serving": rep["serving"],
+            "link_traffic_gb": rep["link_traffic_gb"],
+            "pool_utilization": rep["pool_utilization"],
+            "makespan_s": rep["makespan_s"],
+        }
+    return out
+
+
+def report() -> Dict[str, object]:
+    return {
+        "bench": "serve_bench",
+        "config": {"arch": ARCH, "n_requests": N_REQUESTS,
+                   "prompt_len": PROMPT_LEN, "prefix_len": PREFIX_LEN,
+                   "max_new": MAX_NEW},
+        "engine": engine_scenarios(),
+        "cluster": cluster_scenarios(),
+    }
+
+
+def run() -> List[Tuple[str, float, str]]:
+    t0 = time.perf_counter()
+    rep = report()
+    us = (time.perf_counter() - t0) * 1e6
+    rows = []
+    for name, sc in rep["engine"].items():
+        rows.append((
+            f"serve_bench/engine_{name}", us,
+            f"reqs={sc['requests']['completed']}/"
+            f"{sc['requests']['submitted']} "
+            f"ttft_p50={sc['ttft_s']['p50']*1e3:.0f}ms "
+            f"tpot_p50={sc['tpot_s']['p50']*1e3:.0f}ms "
+            f"tput={sc['throughput_tok_s']:.1f}tok/s "
+            f"hit={sc['kv_pages']['hit_rate']*100:.0f}%"))
+    for name, sc in rep["cluster"].items():
+        svc = sc["serving"]["chat"]
+        hits = " ".join(
+            f"{r.split('/')[-1]}={v['cache_hit_rate']*100:.0f}%"
+            for r, v in svc["replicas"].items())
+        rows.append((
+            f"serve_bench/cluster_{name}", us,
+            f"reqs={svc['requests']['completed']} "
+            f"ttft_p99={svc['ttft_s']['p99']:.2f}s "
+            f"tpot_p50={svc['tpot_s']['p50']*1e3:.0f}ms "
+            f"slo={svc['slo_attainment']*100:.0f}% hit[{hits}]"))
+    return rows

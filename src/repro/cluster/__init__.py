@@ -14,13 +14,14 @@ re-composed elastically when devices fail.
   * ``telemetry`` — per-link traffic, utilization/AUU, recompose overhead
 """
 from repro.cluster.lease import LeaseManager, PlacementPlan, plan_placement
-from repro.cluster.scheduler import Job, Scheduler
+from repro.cluster.scheduler import Job, Scheduler, ServeJob
 from repro.cluster.simulator import (ClusterSimulator, JobTemplate,
-                                     TraceConfig, run_trace)
-from repro.cluster.telemetry import ClusterEvent, Telemetry
+                                     ServiceConfig, TraceConfig, run_trace)
+from repro.cluster.telemetry import ClusterEvent, ServingStats, Telemetry
 
 __all__ = [
     "ClusterEvent", "ClusterSimulator", "Job", "JobTemplate", "LeaseManager",
-    "PlacementPlan", "Scheduler", "Telemetry", "TraceConfig",
-    "plan_placement", "run_trace",
+    "PlacementPlan", "Scheduler", "ServeJob", "ServiceConfig",
+    "ServingStats", "Telemetry", "TraceConfig", "plan_placement",
+    "run_trace",
 ]

@@ -109,6 +109,42 @@ class Job:
         return max(self.progress_t, self.start_t) + self.est_duration_s()
 
 
+@dataclasses.dataclass
+class ServeJob(Job):
+    """One serving *replica*: a long-lived inference tenant.
+
+    A logical service runs ``n_replicas`` of these, each leasing its own
+    pool slice through the ordinary admission path (the shape cell —
+    ``decode_32k`` by default — prices the replica analytically, and
+    ``calibrate_candidate`` folds measured step times / tuned-kernel
+    speedups in, so token throughput is CalibratedCost-priced).  Unlike a
+    training job, a replica does not finish after ``steps`` — the
+    simulator completes it when its service's request trace drains;
+    ``steps`` only feeds the scheduler's EASY-backfill end-time estimate.
+    """
+    service: str = ""                # logical service this replica serves
+    replica: int = 0
+    ttft_slo_s: float = 2.0
+    tpot_slo_s: float = 0.5
+    prefill_chunk: int = 512         # chunked-prefill tokens per step
+
+    @property
+    def capacity(self) -> int:
+        """Concurrent sequences in the decode batch."""
+        return SHAPES[self.shape_name].global_batch
+
+    def throughput(self) -> Dict[str, float]:
+        """CalibratedCost-priced serving rates on the replica's actual
+        placement (``plan.step_s`` is re-priced at start time)."""
+        from repro.core import costmodel
+        return costmodel.serving_throughput(
+            get_config(self.arch), SHAPES[self.shape_name], self.step_s)
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.throughput()["tokens_per_s"]
+
+
 class Scheduler:
     """Priority-FIFO + EASY-backfill scheduler with elastic failure handling."""
 
@@ -238,11 +274,12 @@ class Scheduler:
         # wait = time spent in the queue since the last (re)queueing; run
         # time before a preemption is not wait
         self.telemetry.job_waited(now - job.queued_t)
-        self.telemetry.log(
-            now, "start", job.name,
-            f"mesh={dp}x{tp} links=" +
-            ",".join(f"{a}:{c.value}"
-                     for a, c in job.system.fabric.axis_links.items()))
+        detail = (f"mesh={dp}x{tp} links=" +
+                  ",".join(f"{a}:{c.value}"
+                           for a, c in job.system.fabric.axis_links.items()))
+        if isinstance(job, ServeJob):
+            detail += f" serve={job.tokens_per_s:.0f}tok/s"
+        self.telemetry.log(now, "start", job.name, detail)
         return True
 
     # ---------------------------------------------------------- schedule --
@@ -300,6 +337,20 @@ class Scheduler:
         self.telemetry.jobs_completed += 1
         self.telemetry.log(now, "complete", job.name,
                            f"ran {now - job.start_t:.1f}s")
+
+    def complete_queued(self, job: Job, now: float, why: str = "") -> None:
+        """Complete a job straight from the queue (it holds no devices) —
+        e.g. a preempted serve replica whose service drained before it
+        could restart.  Keeps the bookkeeping identical to on_complete."""
+        assert job.state == QUEUED
+        self.queue.remove(job)
+        job.steps_done = job.steps
+        job.state = DONE
+        job.end_t = now
+        self.done.append(job)
+        self.telemetry.jobs_completed += 1
+        self.telemetry.log(now, "complete", job.name,
+                           why or "completed from queue")
 
     # ----------------------------------------------------------- failure --
     def on_failure(self, failed_uids: Sequence[int], now: float

@@ -29,10 +29,15 @@ import dataclasses
 import heapq
 import random
 import time
+from collections import deque
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.cluster.scheduler import RUNNING, Job, Scheduler
-from repro.cluster.telemetry import Telemetry
+from repro.cluster.scheduler import (DONE, QUEUED, RUNNING, Job, Scheduler,
+                                     ServeJob)
+from repro.cluster.telemetry import ServingStats, Telemetry
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+from repro.core import costmodel
 from repro.core.topology import LinkClass, make_pool
 
 
@@ -62,6 +67,69 @@ DEFAULT_TEMPLATES: Tuple[JobTemplate, ...] = (
 
 
 @dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """One logical inference service in the serving-trace mode.
+
+    ``n_replicas`` ``ServeJob`` tenants are submitted at ``start_t`` and
+    lease ``chips_per_replica`` each through the ordinary admission path;
+    ``n_requests`` request arrivals (``poisson`` paced at
+    ``arrival_rate_hz`` or one ``burst``) are routed to the least-loaded
+    running replica.  Requests draw one of ``n_prefixes`` shared prompt
+    prefixes, so per-replica prefix caches warm up over the trace — the
+    cluster-level analogue of the engine's prefix-hash reuse.
+    """
+    name: str = "chat"
+    arch: str = "llama3.2-3b"
+    shape_name: str = "decode_32k"
+    n_replicas: int = 2
+    chips_per_replica: int = 16
+    n_requests: int = 200
+    arrival_rate_hz: float = 2.0
+    arrival: str = "poisson"           # poisson | burst
+    prompt_len: int = 2048
+    max_new: int = 128
+    n_prefixes: int = 8
+    prefix_len: int = 1024             # shared tokens within prompt_len
+    prefill_chunk: int = 512
+    start_t: float = 0.0
+    priority: int = 10                 # serve replicas outrank batch jobs
+    ttft_slo_s: float = 5.0
+    tpot_slo_s: float = 0.5
+
+
+class _Replica:
+    """Runtime state of one running ServeJob replica."""
+
+    __slots__ = ("job", "active", "queue", "prefixes", "hit_tokens",
+                 "miss_tokens", "served", "out_tokens")
+
+    def __init__(self, job: ServeJob):
+        self.job = job
+        self.active: set = set()
+        self.queue: deque = deque()
+        self.prefixes: Dict[int, float] = {}    # prefix -> cached-from time
+        self.hit_tokens = 0
+        self.miss_tokens = 0
+        self.served = 0
+        self.out_tokens = 0
+
+    def load(self) -> int:
+        return len(self.active) + len(self.queue)
+
+
+class _Service:
+    """Runtime state of one ServiceConfig across its replicas."""
+
+    def __init__(self, cfg: ServiceConfig):
+        self.cfg = cfg
+        self.stats = ServingStats()
+        self.replicas: List[ServeJob] = []
+        self.backlog: deque = deque()
+        self.requests: Dict[int, Dict[str, object]] = {}
+        self.remaining = cfg.n_requests
+
+
+@dataclasses.dataclass(frozen=True)
 class TraceConfig:
     n_jobs: int = 20
     arrival_rate_hz: float = 0.05          # Poisson arrivals, jobs/second
@@ -78,6 +146,9 @@ class TraceConfig:
     # optional measured-cost layer (core.costmodel.CalibratedCost): jobs
     # are admitted and priced from measurements instead of pure analytics
     calibration: Optional[object] = None
+    # serving-trace mode: long-lived ServeJob tenants + request arrivals
+    # alongside the batch-job trace (empty tuple = batch-only, unchanged)
+    services: Tuple[ServiceConfig, ...] = ()
 
 
 def restore_overhead_s(job: Job) -> float:
@@ -99,6 +170,9 @@ class ClusterSimulator:
                                    calibration=cfg.calibration)
         self.rng = random.Random(cfg.seed)
         self.jobs: Dict[str, Job] = {}
+        self.services: Dict[str, _Service] = {}
+        self.replicas: Dict[str, _Replica] = {}     # running ServeJobs only
+        self._done_reps: Dict[str, Dict[str, object]] = {}
         self._heap: List[Tuple[float, int, str, object]] = []
         self._seq = 0
         self._now = 0.0
@@ -131,6 +205,39 @@ class ClusterSimulator:
             self._push(t, "arrival", job.name)
         for t_fail, n in self.cfg.failures:
             self._push(t_fail, "fail", n)
+        # serving trace: replicas arrive as jobs, requests as events.
+        # Generated after the batch trace so batch-only configs consume
+        # the rng identically to pre-serving versions (stable seeds).
+        for svc_cfg in self.cfg.services:
+            svc = _Service(svc_cfg)
+            self.services[svc_cfg.name] = svc
+            steps_est = -(-svc_cfg.n_requests * (
+                svc_cfg.max_new
+                + svc_cfg.prompt_len // max(svc_cfg.prefill_chunk, 1))
+                // max(svc_cfg.n_replicas
+                       * SHAPES[svc_cfg.shape_name].global_batch, 1))
+            for i in range(svc_cfg.n_replicas):
+                job = ServeJob(
+                    name=f"{svc_cfg.name}/r{i}", arch=svc_cfg.arch,
+                    shape_name=svc_cfg.shape_name,
+                    n_chips=svc_cfg.chips_per_replica, steps=steps_est,
+                    priority=svc_cfg.priority, service=svc_cfg.name,
+                    replica=i, ttft_slo_s=svc_cfg.ttft_slo_s,
+                    tpot_slo_s=svc_cfg.tpot_slo_s,
+                    prefill_chunk=svc_cfg.prefill_chunk)
+                svc.replicas.append(job)
+                self.jobs[job.name] = job
+                self._push(svc_cfg.start_t, "arrival", job.name)
+            t = svc_cfg.start_t
+            for rid in range(svc_cfg.n_requests):
+                if svc_cfg.arrival == "poisson":
+                    t += self.rng.expovariate(svc_cfg.arrival_rate_hz)
+                svc.requests[rid] = {
+                    "submit_t": t,
+                    "prefix": self.rng.randrange(svc_cfg.n_prefixes),
+                    "attempt": 0,
+                }
+                self._push(t, "req", (svc_cfg.name, rid))
 
     # ------------------------------------------------------------ accrual --
     def _job_link_rate(self, job: Job) -> Dict[LinkClass, float]:
@@ -200,9 +307,128 @@ class ClusterSimulator:
 
     def _start_newly_scheduled(self, now: float) -> None:
         for job in self.scheduler.poll(now):
+            if isinstance(job, ServeJob):
+                self._replica_started(job, now)
+                continue
             # a preempted job resuming from a checkpoint pays the restore
             overhead = restore_overhead_s(job)
             self._schedule_completion(job, now, overhead)
+
+    # ------------------------------------------------------------- serving --
+    def _replica_started(self, job: ServeJob, now: float) -> None:
+        """A serve replica came up: open its runtime state, start its
+        collective traffic, and drain the service backlog onto it.  No
+        completion event — replicas run until their request trace drains."""
+        job.progress_t = now
+        self.replicas[job.name] = _Replica(job)
+        self._push(now + self.cfg.compose_latency_s, "rate",
+                   (job.name, job.epoch))
+        svc = self.services[job.service]
+        for _ in range(len(svc.backlog)):       # overflow re-queues on reps
+            self._route_request(svc, svc.backlog.popleft(), now)
+
+    def _route_request(self, svc: _Service, rid: int, now: float) -> None:
+        """Least-loaded routing over the service's running replicas."""
+        live = [self.replicas[j.name] for j in svc.replicas
+                if j.state == RUNNING and j.name in self.replicas]
+        if not live:
+            svc.backlog.append(rid)
+            return
+        rep = min(live, key=lambda r: (r.load(), r.job.replica))
+        if len(rep.active) < rep.job.capacity:
+            self._begin_request(rep, svc, rid, now)
+        else:
+            rep.queue.append(rid)
+            svc.requests[rid]["replica"] = rep.job.name
+
+    def _begin_request(self, rep: _Replica, svc: _Service, rid: int,
+                       now: float) -> None:
+        """Price one request on the replica: chunked prefill (cheaper on
+        a prefix-cache hit) then ``max_new`` decode steps at the
+        replica's calibrated step time."""
+        req = svc.requests[rid]
+        scfg = svc.cfg
+        step_s = rep.job.step_s
+        # a prefix is reusable only once some request's prefill of it has
+        # FINISHED (mirrors the engine registering pages after prefill) —
+        # concurrent burst arrivals on a cold prefix all miss
+        ready = rep.prefixes.get(req["prefix"])
+        hit = ready is not None and ready <= now
+        cached = scfg.prefix_len if hit else 0
+        rep.hit_tokens += cached
+        rep.miss_tokens += scfg.prompt_len - cached
+        n_chunks = -(-(scfg.prompt_len - cached)
+                     // max(rep.job.prefill_chunk, 1))
+        t_first = now + n_chunks * step_s
+        if ready is None or t_first < ready:
+            rep.prefixes[req["prefix"]] = t_first
+        t_done = t_first + scfg.max_new * step_s
+        req.update(replica=rep.job.name, start_t=now, cached=cached,
+                   t_first=t_first, t_done=t_done, tpot=step_s,
+                   slo=(rep.job.ttft_slo_s, rep.job.tpot_slo_s))
+        rep.active.add(rid)
+        self._push(t_done, "req_done",
+                   (scfg.name, rid, req["attempt"]))
+
+    def _finish_request(self, svc: _Service, rid: int, now: float) -> None:
+        req = svc.requests[rid]
+        scfg = svc.cfg
+        rep = self.replicas.get(req.get("replica"))
+        if rep is not None:
+            rep.active.discard(rid)
+            rep.served += 1
+            rep.out_tokens += scfg.max_new
+            # KV traffic: uncached prompt + generated tokens append cache
+            # pages over the replica's model-axis fabric
+            links = rep.job.system.fabric.axis_links
+            link = links.get("model") or next(iter(links.values()))
+            nbytes = ((scfg.prompt_len - req["cached"]) + scfg.max_new) \
+                * costmodel.kv_bytes_per_token(get_config(scfg.arch))
+            self.telemetry.add_link_traffic(link, nbytes)
+            while rep.queue and len(rep.active) < rep.job.capacity:
+                self._begin_request(rep, svc, rep.queue.popleft(), now)
+        ttft = req["t_first"] - req["submit_t"]
+        ttft_slo, tpot_slo = req["slo"]       # the serving replica's SLOs
+        svc.stats.add_request(
+            t_done=now, wait_s=req["start_t"] - req["submit_t"],
+            ttft_s=ttft, tpot_s=req["tpot"],
+            prompt_tokens=scfg.prompt_len, cached_tokens=req["cached"],
+            output_tokens=scfg.max_new,
+            slo_ok=(ttft <= ttft_slo and req["tpot"] <= tpot_slo))
+        svc.remaining -= 1
+        if svc.remaining == 0:
+            self._finish_service(svc, now)
+
+    def _finish_service(self, svc: _Service, now: float) -> None:
+        """Request trace drained: replicas complete and give their pools
+        back — the re-aggregation moment composability exists for."""
+        for job in svc.replicas:
+            if job.state == RUNNING:
+                self._rate_off(job.name)
+                rep = self.replicas.pop(job.name, None)
+                if rep is not None:
+                    self._stash_counters(rep)
+                self.scheduler.on_complete(job, now)
+            elif job.state == QUEUED:
+                # preempted and never restarted before the trace drained
+                self.scheduler.complete_queued(
+                    job, now, "service drained while queued")
+        self._start_newly_scheduled(now)
+
+    def _reassign_replica_requests(self, job: ServeJob, now: float) -> None:
+        """A replica was preempted: its in-flight and queued requests go
+        back to the service for re-routing (a fresh attempt invalidates
+        their scheduled completions)."""
+        rep = self.replicas.pop(job.name, None)
+        if rep is None:
+            return
+        self._stash_counters(rep)
+        svc = self.services[job.service]
+        for rid in sorted(rep.active) + list(rep.queue):
+            req = svc.requests[rid]
+            req["attempt"] += 1
+            req.pop("replica", None)
+            self._route_request(svc, rid, now)
 
     # ---------------------------------------------------------------- run --
     def run(self) -> Dict[str, object]:
@@ -229,6 +455,17 @@ class ClusterSimulator:
                     self._rate_off(name)
                     self.scheduler.on_complete(job, now)
                     self._start_newly_scheduled(now)
+            elif kind == "req":
+                svc_name, rid = payload
+                svc = self.services[svc_name]
+                svc.stats.requests_submitted += 1
+                svc.stats.mark(now)
+                self._route_request(svc, rid, now)
+            elif kind == "req_done":
+                svc_name, rid, attempt = payload
+                svc = self.services[svc_name]
+                if svc.requests[rid]["attempt"] == attempt:
+                    self._finish_request(svc, rid, now)
             elif kind == "fail":
                 # failure handling needs exact steps_done (checkpoint
                 # boundaries, shrink re-planning): sync every running job
@@ -242,7 +479,13 @@ class ClusterSimulator:
                 changed = self.scheduler.on_failure(down, now)
                 for job in changed:
                     self._rate_off(job.name)      # re-enabled at restart
-                    if job.state == RUNNING:      # shrunk in place
+                    if isinstance(job, ServeJob):
+                        if job.state == RUNNING:  # shrunk in place: serve on
+                            self._push(now + restore_overhead_s(job), "rate",
+                                       (job.name, job.epoch))
+                        else:                     # preempted: re-route load
+                            self._reassign_replica_requests(job, now)
+                    elif job.state == RUNNING:    # shrunk in place
                         self._schedule_completion(
                             job, now, restore_overhead_s(job))
                 self._push(now + self.cfg.repair_after_s, "repair", down)
@@ -281,7 +524,52 @@ class ClusterSimulator:
             "failures": list(self.cfg.failures),
             "seed": self.cfg.seed,
         }
+        if self.services:
+            rep["serving"] = {
+                name: self._service_report(svc)
+                for name, svc in self.services.items()}
         return rep
+
+    def _service_report(self, svc: _Service) -> Dict[str, object]:
+        out = svc.stats.report()
+        out["requests"]["stranded"] = svc.remaining
+        out["replicas"] = {}
+        for job in svc.replicas:
+            row: Dict[str, object] = {"state": job.state,
+                                      "recompositions": job.recompositions}
+            if job.plan is not None and job.plan.feasible:
+                row["rated_tokens_per_s"] = job.tokens_per_s
+            row.update(self._replica_counters(job.name))
+            out["replicas"][job.name] = row
+        return out
+
+    def _stash_counters(self, rep: _Replica) -> None:
+        """Fold a retiring incarnation's counters into the durable tally
+        (a preempted replica restarts with a cold cache, but its served
+        work still counts)."""
+        d = self._done_reps.setdefault(
+            rep.job.name, {"served": 0, "output_tokens": 0,
+                           "hit_tokens": 0, "miss_tokens": 0})
+        d["served"] += rep.served
+        d["output_tokens"] += rep.out_tokens
+        d["hit_tokens"] += rep.hit_tokens
+        d["miss_tokens"] += rep.miss_tokens
+
+    def _replica_counters(self, name: str) -> Dict[str, object]:
+        """Served/hit counters for a replica across all incarnations."""
+        tally = dict(self._done_reps.get(
+            name, {"served": 0, "output_tokens": 0,
+                   "hit_tokens": 0, "miss_tokens": 0}))
+        rep = self.replicas.get(name)
+        if rep is not None:
+            tally["served"] += rep.served
+            tally["output_tokens"] += rep.out_tokens
+            tally["hit_tokens"] += rep.hit_tokens
+            tally["miss_tokens"] += rep.miss_tokens
+        tot = tally["hit_tokens"] + tally["miss_tokens"]
+        return {"served": tally["served"],
+                "output_tokens": tally["output_tokens"],
+                "cache_hit_rate": tally["hit_tokens"] / tot if tot else 0.0}
 
 
 def run_trace(cfg: Optional[TraceConfig] = None) -> Dict[str, object]:

@@ -661,6 +661,33 @@ class CalibratedCost:
                    kernel_speedup=dict(js.get("kernel_speedup", {})))
 
 
+def kv_bytes_per_token(cfg: ModelConfig, dtype_bytes: int = 2) -> float:
+    """KV-cache bytes appended per token across every attention layer —
+    the unit of serving KV traffic (page writes locally, cache-slice
+    ownership transfers on the wire in the flash-decode layout)."""
+    per_layer = 2 * cfg.n_kv_heads * cfg.head_dim * dtype_bytes
+    n_attn = sum(1 for b in cfg.pattern if b in (ATTN, ATTN_LOCAL))
+    return float(per_layer * n_attn)
+
+
+def serving_throughput(cfg: ModelConfig, shape: ShapeConfig,
+                       step_s: float) -> Dict[str, float]:
+    """Token throughput and KV traffic of one decode replica stepping at
+    ``step_s`` (pass a ``CalibratedCost``-priced step time to price from
+    measurements).  ``tokens_per_s`` is the replica's saturated decode
+    rate — ``global_batch`` sequences advance one token per step."""
+    step_s = max(step_s, 1e-30)
+    toks = shape.global_batch / step_s
+    kv_tok = kv_bytes_per_token(cfg)
+    return {
+        "tokens_per_s": toks,
+        "tpot_s": step_s,
+        "kv_write_bytes_per_s": toks * kv_tok,
+        # each decode step re-reads every sequence's history from HBM
+        "kv_read_bytes_per_s": toks * kv_tok * shape.seq_len,
+    }
+
+
 def predict_step_time(report: CostReport, system: ComposedSystem,
                       overlap: float = 1.0) -> float:
     """Step-time prediction on a given composed fabric.

@@ -39,7 +39,9 @@ from typing import Any, Dict, Mapping, Optional, Tuple
 DEFAULT_PATH = os.path.join("results", "tuned_configs.json")
 ENV_VAR = "REPRO_TUNED_CONFIGS"
 
-_SEQ_DIMS = ("s", "t")               # bucketed (next pow2); others exact
+# bucketed dims (next pow2 >= floor); others exact.  ``b`` (decode batch)
+# buckets from 1 so tiny serving batches don't all collapse into one cell
+_BUCKET_FLOOR = {"s": 32, "t": 32, "b": 1}
 
 
 def bucket_pow2(n: int, floor: int = 32) -> int:
@@ -52,13 +54,14 @@ def bucket_pow2(n: int, floor: int = 32) -> int:
 
 def make_key(kernel: str, *, dtype: str, variant: str = "",
              **dims: int) -> str:
-    """Canonical registry key; seq dims (s, t) are bucketed to the next
-    power of two, every other dim (head/feature widths) stays exact."""
+    """Canonical registry key; seq/batch dims (s, t, b) are bucketed to
+    the next power of two, every other dim (head/feature widths) stays
+    exact."""
     parts = []
     for name in sorted(dims):
         v = int(dims[name])
-        if name in _SEQ_DIMS:
-            v = bucket_pow2(v)
+        if name in _BUCKET_FLOOR:
+            v = bucket_pow2(v, _BUCKET_FLOOR[name])
         parts.append(f"{name}={v}")
     return f"{kernel}|{','.join(parts)}|{dtype}|{variant}"
 
@@ -227,6 +230,32 @@ def attention_blocks(S: int, T: int, D: int, G: int, dtype,
                      variant=attention_variant(causal, window),
                      s=S, t=T, d=D, g=G)
     return fit_block(out["block_q"], S), fit_block(out["block_k"], T)
+
+
+def decode_attention_blocks(B: int, T: int, D: int, G: int, dtype,
+                            causal: bool = True, window: int = 0,
+                            defaults: Tuple[int, int] = (1, 256),
+                            kernel: str = "decode_attention"
+                            ) -> Tuple[int, int]:
+    """(block_q, block_k) for the (B, 1, cache_len) decode shape.
+
+    Decode cells key on the *batch* bucket and the cache length — the
+    working set is the KV history, not the single query token (S is
+    always 1, so it is omitted from the key): the serving engine's
+    decode-step batching and the autotuner share the bucket vocabulary
+    ``decode_attention|b=<batch>,t=<cache_len>,d=…,g=…``.  ``block_q``
+    is fitted to 1 on a miss (one query row); ``block_k`` tiles the
+    cache scan.
+    """
+    reg = get_registry()
+    if reg is None:
+        return 1, fit_block(defaults[1], T)
+    out = reg.lookup(kernel,
+                     {"block_q": defaults[0], "block_k": defaults[1]},
+                     dtype=_dtype_name(dtype),
+                     variant=attention_variant(causal, window),
+                     b=B, t=T, d=D, g=G)
+    return fit_block(out["block_q"], 1), fit_block(out["block_k"], T)
 
 
 def ssd_chunk(S: int, H: int, P: int, G: int, N: int, dtype,

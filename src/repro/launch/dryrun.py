@@ -111,7 +111,8 @@ def lower_cell(arch: str, shape_name: str, mesh, policy: PolicyConfig,
                  + 2 * shape.global_batch * cfg.d_model * cfg.padded_vocab)
     else:  # decode
         step = engine.make_decode_step(cfg, policy, mesh=mesh,
-                                       max_seq=shape.seq_len)
+                                       max_seq=shape.seq_len,
+                                       batch=shape.global_batch)
         pspec = pol.param_specs(ins["params"], cfg, policy, mesh_axes)
         cspec = pol.cache_specs(ins["caches"], policy, mesh_axes)
         tspec = pol.batch_specs(
@@ -243,8 +244,10 @@ def main() -> int:
     ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--compress", default="none")
     ap.add_argument("--out", default="results/dryrun")
-    ap.add_argument("--skip-existing", action="store_true")
-    ap.add_argument("--verbose", action="store_true")
+    ap.add_argument("--skip-existing", action=argparse.BooleanOptionalAction,
+                    default=False)
+    ap.add_argument("--verbose", action=argparse.BooleanOptionalAction,
+                    default=False)
     ap.add_argument("--mesh-shape", default="",
                     help="logical re-composition of the same chips, e.g. "
                          "'64,4' (data,model) — the paper's recompose knob")

@@ -1,59 +1,88 @@
-"""Serving driver: batched requests through the continuous-batching engine.
+"""Serving driver: batched requests through the async serving engine.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
-      --requests 8 --max-new 16
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
+      --requests 8 --max-new 16            # paged engine, chunked prefill
+  PYTHONPATH=src python -m repro.launch.serve --no-reduced ...  # full config
+
+Requests whose prompt + decode budget exceed ``--max-seq`` are rejected
+up front (exit code 2) — the engine never truncates silently.
 """
 from __future__ import annotations
 
 import argparse
 import time
+from collections import deque
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config, reduced
 from repro.configs.base import PolicyConfig
 from repro.models import lm
-from repro.serve import Request, ServeEngine
+from repro.serve import AsyncServeEngine, ServeRequest
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
-    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--sched", default="slo",
+                    choices=["slo", "priority", "fcfs"])
+    ap.add_argument("--mode", default="auto",
+                    choices=["auto", "paged", "dense"])
     args = ap.parse_args()
+
+    if args.prompt_len + args.max_new > args.max_seq:
+        print(f"error: prompt ({args.prompt_len}) + max-new "
+              f"({args.max_new}) tokens exceed --max-seq ({args.max_seq}); "
+              f"raise --max-seq or shorten the request")
+        return 2
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
     policy = PolicyConfig(compute_dtype="float32", remat="none",
                           attn_impl="full")
-    key = jax.random.PRNGKey(0)
-    params = lm.init_lm(key, cfg)
-    eng = ServeEngine(cfg, params, policy, n_slots=args.slots,
-                      max_seq=args.max_seq)
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    eng = AsyncServeEngine(
+        cfg, params, policy, n_slots=args.slots, max_seq=args.max_seq,
+        page_size=args.page_size, prefill_chunk=args.prefill_chunk,
+        sched_policy=args.sched, mode=args.mode)
 
-    reqs = [Request(i, jax.random.randint(jax.random.PRNGKey(i),
-                                          (args.prompt_len,), 0,
-                                          cfg.vocab_size),
-                    max_new=args.max_new)
-            for i in range(args.requests)]
-    pending = list(reqs)
+    pending = deque(
+        ServeRequest(i, list(map(int, jax.random.randint(
+            jax.random.PRNGKey(i), (args.prompt_len,), 0,
+            cfg.vocab_size))), max_new=args.max_new)
+        for i in range(args.requests))
+    reqs = list(pending)
     t0 = time.time()
-    decoded = 0
-    while pending or any(r is not None for r in eng.slot_req):
-        while pending and eng.add_request(pending[0]):
-            pending.pop(0)
-        decoded += eng.step()
+    while pending:
+        req = pending.popleft()
+        if not eng.submit(req):
+            print(f"error: request {req.rid} rejected: {req.why_rejected}")
+            return 2
+    eng.run()
     dt = time.time() - t0
-    done = sum(r.done or len(r.out) >= r.max_new for r in reqs)
-    print(f"served {done}/{len(reqs)} requests, {decoded} decode steps "
-          f"in {dt:.1f}s ({decoded / max(dt, 1e-9):.1f} tok-steps/s)")
+
+    rep = eng.report()
+    done = sum(r.done for r in reqs)
+    print(f"served {done}/{len(reqs)} requests in {dt:.1f}s "
+          f"[{rep['mode']} mode] "
+          f"tput={rep['throughput_tok_s']:.1f} tok/s "
+          f"ttft_p50={rep['ttft_s']['p50']*1e3:.0f}ms "
+          f"tpot_p50={rep['tpot_s']['p50']*1e3:.0f}ms")
+    if "kv_pages" in rep:
+        kv = rep["kv_pages"]
+        print(f"kv pages: {kv['n_pages']}x{kv['page_size']}tok "
+              f"hit_rate={kv['hit_rate']*100:.0f}% "
+              f"evictions={kv['evictions']}")
     for r in reqs[:3]:
         print(f"  req {r.rid}: {r.out[:8]}...")
     return 0 if done == len(reqs) else 1

@@ -57,7 +57,8 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--preset", default="", choices=["", "100m"])
-    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=False)
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)

@@ -309,6 +309,38 @@ def local_flash_xla(q, k, v, *, window: int, causal=True, softcap=0.0,
     return ob.transpose(1, 0, 3, 2, 4).reshape(B, S, H, D)
 
 
+def chunk_decode_attention(q, k_cache, v_cache, cache_pos, q_pos, *,
+                           window=0, softcap=0.0):
+    """Multi-token attention of a prompt *chunk* against a KV cache.
+
+    q (B,S,H,D) is a contiguous chunk of new tokens at absolute positions
+    ``q_pos`` (B,S); the caches (B,W,K,D) already contain the chunk's own
+    K/V (written by the caller) plus all earlier history, with ``cache_pos``
+    (B,W) giving each slot's absolute position (-1 = empty).  Masking is
+    purely positional — a query attends to every valid slot at a position
+    <= its own (and within ``window``) — so the result is bit-identical to
+    one-shot prefill over the same tokens regardless of how the prompt was
+    chunked.  This is the chunked-prefill primitive of the serving stack.
+    """
+    B, S, H, D = q.shape
+    K = k_cache.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, D)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, k_cache,
+                   preferred_element_type=jnp.float32) / math.sqrt(D)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    valid = (cache_pos >= 0)[:, None, :]                  # (B,1,W)
+    diff = q_pos[:, :, None] - cache_pos[:, None, :]      # (B,S,W)
+    keep = valid & (diff >= 0)
+    if window > 0:
+        keep = keep & (diff < window)
+    s = jnp.where(keep[:, None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    o = jnp.einsum("bkgst,btkd->bskgd", p, v_cache)
+    return o.reshape(B, S, H, D)
+
+
 def decode_attention(q, k_cache, v_cache, cache_pos, *, window=0,
                      softcap=0.0):
     """q (B,1,H,D); caches (B,W,K,D); cache_pos (B,W) absolute positions of
@@ -539,6 +571,46 @@ def apply_attention(params, x, cfg: ModelConfig, *, local: bool,
     cd = compute_dtype
 
     if cache is not None and not isinstance(cache, str):
+        S = x.shape[1]
+        if S > 1:
+            # ---- chunked prefill: S new tokens appended to the cache ----
+            q, k_new, v_new = project_qkv(params, x, cfg, positions, cd)
+            W = cache["k"].shape[1]
+            bidx = jnp.arange(B)[:, None]
+            if window > 0:
+                # attend over [pre-write ring ∥ full chunk] — a ring write
+                # first would drop keys that early chunk queries still need
+                # whenever S > W; then apply the ring rule (last min(S, W)
+                # tokens survive, slot = pos % W), matching
+                # build_cache_from_prefill / the single-token decode write
+                o = chunk_decode_attention(
+                    q,
+                    jnp.concatenate([cache["k"],
+                                     k_new.astype(cache["k"].dtype)], 1),
+                    jnp.concatenate([cache["v"],
+                                     v_new.astype(cache["v"].dtype)], 1),
+                    jnp.concatenate([cache["pos"], positions], 1),
+                    positions, window=window, softcap=cfg.logit_softcap)
+                m = min(S, W)
+                slots = positions[:, -m:] % W
+                k_cache = cache["k"].at[bidx, slots].set(
+                    k_new[:, -m:].astype(cache["k"].dtype))
+                v_cache = cache["v"].at[bidx, slots].set(
+                    v_new[:, -m:].astype(cache["v"].dtype))
+                pos_cache = cache["pos"].at[bidx, slots].set(
+                    positions[:, -m:])
+            else:
+                k_cache = cache["k"].at[bidx, positions].set(
+                    k_new.astype(cache["k"].dtype))
+                v_cache = cache["v"].at[bidx, positions].set(
+                    v_new.astype(cache["v"].dtype))
+                pos_cache = cache["pos"].at[bidx, positions].set(positions)
+                o = chunk_decode_attention(q, k_cache, v_cache, pos_cache,
+                                           positions, window=window,
+                                           softcap=cfg.logit_softcap)
+            out = jnp.einsum("bshe,hed->bsd", o.astype(cd),
+                             params["wo"].astype(cd))
+            return out, {"k": k_cache, "v": v_cache, "pos": pos_cache}
         # ---- decode: single new token at absolute position `positions` ----
         q, k_new, v_new = project_qkv(params, x, cfg, positions, cd)
         if mesh is not None:

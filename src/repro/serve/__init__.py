@@ -1,3 +1,7 @@
-from repro.serve.engine import (Request, ServeEngine,  # noqa: F401
-                                greedy_sample, init_caches, make_decode_step,
-                                make_prefill_step)
+from repro.serve.engine import (AsyncServeEngine, Request,  # noqa: F401
+                                ServeEngine, greedy_sample, init_caches,
+                                make_decode_step, make_prefill_step)
+from repro.serve.kvcache import (BlockTable, PageError,  # noqa: F401
+                                 PagePool)
+from repro.serve.scheduler import (SLO, RequestScheduler,  # noqa: F401
+                                   ServeRequest)

@@ -12,22 +12,38 @@ placement follows ``core.policy.cache_specs``:
     would blow past HBM),
   * SSM / RG-LRU state channels over the tp axis.
 
-``ServeEngine`` adds slot-based continuous batching on top: sequences
-occupy slots of a fixed-size batch; finished sequences free their slot for
-the next request (the standard production serving shape).
+Two engines sit on top of the jitted steps:
+
+  * ``ServeEngine`` — the dense-slot baseline: sequences occupy slots of
+    a fixed-size batch with per-slot ``max_seq``-wide caches.  Kept as
+    the reference implementation (the paged path must match its logits
+    bit-for-bit at fp32) and as the execution mode for architectures
+    whose caches don't page (ring buffers, recurrent state);
+  * ``AsyncServeEngine`` — the production shape: a paged KV cache
+    (``serve.kvcache``: shared page pool, block tables, prefix-hash
+    reuse), an SLO-aware request scheduler (``serve.scheduler``) with
+    chunked prefill interleaved against the decode batch, decode-step
+    batching keyed by the tuned-config registry's (B, 1, cache_len)
+    buckets, and per-request telemetry
+    (``cluster.telemetry.ServingStats``).
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, PolicyConfig, ShapeConfig
+from repro.cluster.telemetry import ServingStats
+from repro.configs.base import ATTN, ModelConfig, PolicyConfig, ShapeConfig
 from repro.core import policy as pol
+from repro.kernels.registry import bucket_pow2
 from repro.models import lm, transformer
 from repro.models.transformer import RunCtx
+from repro.serve import kvcache
+from repro.serve.scheduler import DECODE, RequestScheduler, ServeRequest
 from repro.train.trainer import make_run_ctx
 
 
@@ -57,13 +73,16 @@ def make_prefill_step(cfg: ModelConfig, policy: PolicyConfig, *,
 
 
 def make_decode_step(cfg: ModelConfig, policy: PolicyConfig, mesh=None,
-                     max_seq: Optional[int] = None) -> Callable:
+                     max_seq: Optional[int] = None,
+                     batch: Optional[int] = None) -> Callable:
     """decode(params, caches, tokens, positions) -> (logits, caches).
 
     tokens (B, 1) int32 (or (B, 1, d) embeddings); positions (B, 1) int32.
-    ``max_seq`` (the cache length) keys the tuned-config lookup.
+    ``max_seq`` (the cache length) and ``batch`` key the tuned-config
+    lookup at the (B, 1, cache_len) decode bucket.
     """
-    ctx = make_run_ctx(cfg, policy, mesh, seq_len=max_seq)
+    ctx = make_run_ctx(cfg, policy, mesh, seq_len=max_seq, decode=True,
+                       batch=batch)
 
     def decode(params, caches, tokens, positions):
         logits, new_caches, _ = lm.forward(params, tokens, cfg, ctx,
@@ -138,14 +157,7 @@ class ServeEngine:
         # scatter the single-sequence cache into slot s; scanned segments
         # carry a leading layer-stack dim, so batch is dim 1 there
         segs = transformer.plan_segments(self.cfg.pattern)
-
-        def put(path, c_all, c_one):
-            bdim = _batch_dim(path, segs)
-            idx = tuple([slice(None)] * bdim + [slice(s, s + 1)])
-            return c_all.at[idx].set(c_one.astype(c_all.dtype))
-
-        self.caches = jax.tree_util.tree_map_with_path(
-            put, self.caches, caches)
+        self.caches = kvcache.scatter_slot(self.caches, caches, s, segs)
         self.slot_req[s] = req
         self.slot_pos = self.slot_pos.at[s].set(req.prompt.shape[0])
         self.slot_tok = self.slot_tok.at[s].set(nxt[0])
@@ -173,13 +185,284 @@ class ServeEngine:
         return len(active)
 
 
-def _batch_dim(path, segs) -> int:
-    """Cache-leaf batch dim: 1 for scanned (stacked) segments, else 0."""
-    import re
-    for p in path:
-        key = str(getattr(p, "key", ""))
-        m = re.match(r"seg(\d+)$", key)
-        if m:
-            si = int(m.group(1))
-            return 1 if si < len(segs) and segs[si][1] > 1 else 0
-    return 0
+# ---------------------------------------------------------------------------
+# AsyncServeEngine: paged KV cache + SLO scheduler + chunked prefill
+# ---------------------------------------------------------------------------
+class AsyncServeEngine:
+    """Production-shaped serving engine.
+
+    One ``step()`` is one engine iteration: admit what fits, run at most
+    one *batched* prefill-chunk step (``prefill_batch`` requests advance
+    ``prefill_chunk`` tokens each) and one batched decode step — chunked
+    prefill interleaves with decode at iteration granularity, so a long
+    prompt costs each decoding request one extra chunk-step of TPOT
+    instead of a full-prompt stall.
+
+    Execution modes:
+      * ``paged``  — all-attention architectures: block tables over a
+        shared page pool; the dense cache view exists only inside the
+        jitted step (one gather), new K/V scatters straight back to the
+        pool.  Prefill is *only* chunk steps — a prefix-cache hit simply
+        starts the first chunk at the first uncached token;
+      * ``dense``  — ring-buffer / recurrent-state architectures: per-slot
+        dense caches (the ``ServeEngine`` layout) under the same
+        scheduler, admission, and telemetry; no paging or prefix reuse.
+
+    ``mode="auto"`` picks per architecture.  ``clock`` is injectable for
+    deterministic tests (defaults to ``time.monotonic``).
+    """
+
+    def __init__(self, cfg: ModelConfig, params, policy: PolicyConfig, *,
+                 n_slots: int = 4, max_seq: int = 512, page_size: int = 16,
+                 n_pages: Optional[int] = None, prefill_chunk: int = 64,
+                 prefill_batch: int = 2, sched_policy: str = "slo",
+                 mode: str = "auto", mesh=None, clock=None):
+        self.cfg = cfg
+        self.params = params
+        self.policy = policy
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.prefill_chunk = prefill_chunk
+        self.clock = clock or time.monotonic
+        self.ctx_dtype = jnp.bfloat16 \
+            if policy.compute_dtype == "bfloat16" else jnp.float32
+        if mode == "auto":
+            mode = "paged" if all(b == ATTN for b in cfg.pattern) \
+                else "dense"
+        self.mode = mode
+        self.segs = transformer.plan_segments(cfg.pattern)
+        self.sched = RequestScheduler(
+            max_slots=n_slots, max_prompt=max_seq,
+            prefill_chunk=prefill_chunk, prefill_batch=prefill_batch,
+            policy=sched_policy)
+        self.stats = ServingStats()
+        # decode-shape bucket from the tuned-config registry vocabulary:
+        # jit cache keys and block lookups share it
+        ctx = make_run_ctx(cfg, policy, mesh, seq_len=max_seq, decode=True,
+                           batch=n_slots)
+        self.ctx = dataclasses.replace(ctx, cache_capacity=max_seq)
+        self._iters = 0
+        if self.mode == "paged":
+            self.pool = kvcache.PagePool(
+                cfg,
+                n_pages=n_pages or n_slots * (-(-max_seq // page_size)),
+                page_size=page_size, dtype=self.ctx_dtype)
+            self._paged_step = jax.jit(self._paged_step_fn,
+                                       donate_argnums=(1,))
+        else:
+            self.pool = None
+            self.caches = init_caches(cfg, n_slots, max_seq, self.ctx_dtype)
+            self.slot_req: List[Optional[ServeRequest]] = [None] * n_slots
+            self.prefill = jax.jit(make_prefill_step(
+                cfg, policy, cache_capacity=max_seq, mesh=mesh))
+            self.decode = jax.jit(make_decode_step(
+                cfg, policy, mesh, max_seq=max_seq, batch=n_slots))
+
+    # ------------------------------------------------------------ plumbing --
+    def now(self) -> float:
+        return self.clock()
+
+    def submit(self, req: ServeRequest) -> bool:
+        """Admission-queue a request; False = rejected (with reason in
+        ``req.why_rejected`` — the scheduler owns the capacity check)."""
+        now = self.now()
+        self.stats.mark(now)
+        self.stats.requests_submitted += 1
+        ok = self.sched.submit(req, now)
+        if not ok:
+            self.stats.requests_rejected += 1
+        return ok
+
+    def _try_open(self, req: ServeRequest) -> bool:
+        if self.mode == "paged":
+            try:
+                table, n_cached = self.pool.open_sequence(
+                    req.prompt, req.max_new)
+            except kvcache.PageError:
+                return False
+            req.table, req.n_cached = table, n_cached
+            return True
+        for s, cur in enumerate(self.slot_req):
+            if cur is None:
+                self.slot_req[s] = req
+                req.table = s
+                return True
+        return False
+
+    def _finish(self, req: ServeRequest, now: float) -> None:
+        if self.mode == "paged":
+            self.pool.close_sequence(req.prompt, req.table)
+            req.table = None
+        else:
+            self.slot_req[req.table] = None
+        self.stats.add_request(
+            t_done=now, wait_s=req.queue_wait_s(), ttft_s=req.ttft_s(),
+            tpot_s=req.tpot_s(), prompt_tokens=req.prompt_len,
+            cached_tokens=req.n_cached, output_tokens=len(req.out),
+            slo_ok=req.slo_met())
+
+    # ------------------------------------------------------- paged stepping --
+    def _paged_step_fn(self, params, pages, tables, toks, positions, valid,
+                       last_idx):
+        """One jitted paged step (chunk prefill when S>1, decode at S=1):
+        gather the dense view, run the stack, scatter the new K/V back to
+        the pool, return greedy next tokens at ``last_idx``."""
+        dense = kvcache.gather_dense(pages, tables, self.segs)
+        hidden, new_caches, _ = lm.forward(
+            params, toks, self.cfg, self.ctx, positions=positions,
+            caches=dense, return_hidden=True)
+        pages = kvcache.scatter_tokens(
+            pages, new_caches, tables, positions, valid,
+            self.pool.page_size, self.segs, self.pool.trash)
+        h = hidden[jnp.arange(toks.shape[0]), last_idx]
+        table_w = lm.head_table(params, self.cfg)
+        logits = (h.astype(self.ctx.compute_dtype)
+                  @ table_w.astype(self.ctx.compute_dtype).T)
+        return jnp.argmax(logits, -1).astype(jnp.int32), pages
+
+    def _table_width(self, reqs: List[ServeRequest]) -> int:
+        """Bucketed block-table width for this batch (shared jit key)."""
+        need = max(len(r.table) for r in reqs)
+        cap = self.pool.pages_for(self.max_seq)
+        return min(bucket_pow2(need, floor=1), cap)
+
+    def _run_paged(self, reqs: List[ServeRequest], toks, positions, valid,
+                   last_idx):
+        P = self._table_width(reqs)
+        B = len(reqs)
+        Bpad = min(bucket_pow2(B, floor=1), self.n_slots)
+        pad = Bpad - B
+        tables = jnp.stack(
+            [self.pool.padded_table(r.table, P) for r in reqs]
+            + [jnp.full((P,), self.pool.trash, jnp.int32)] * pad)
+        if pad:
+            zcol = jnp.zeros((pad, toks.shape[1]), jnp.int32)
+            toks = jnp.concatenate([toks, zcol])
+            positions = jnp.concatenate([positions, zcol])
+            valid = jnp.concatenate(
+                [valid, jnp.zeros((pad, valid.shape[1]), bool)])
+            last_idx = jnp.concatenate([last_idx, zcol[:, 0]])
+        nxt, self.pool.pages = self._paged_step(
+            self.params, self.pool.pages, tables, toks, positions, valid,
+            last_idx)
+        return nxt
+
+    def _paged_prefill_chunks(self, now: float) -> int:
+        work = self.sched.prefill_work()
+        if not work:
+            return 0
+        C = self.prefill_chunk
+        toks, poss, vals, last = [], [], [], []
+        for r in work:
+            n = self.sched.chunk_for(r)
+            row = [int(t) for t in r.prompt[r.prefilled:r.prefilled + n]]
+            row += [0] * (C - n)
+            toks.append(row)
+            poss.append(list(range(r.prefilled, r.prefilled + C)))
+            vals.append([i < n for i in range(C)])
+            last.append(n - 1)
+        nxt = self._run_paged(
+            work, jnp.asarray(toks, jnp.int32), jnp.asarray(poss, jnp.int32),
+            jnp.asarray(vals, bool), jnp.asarray(last, jnp.int32))
+        done_tokens = 0
+        for i, r in enumerate(work):
+            n = self.sched.chunk_for(r)
+            done_tokens += n
+            r.table.n_tokens = r.prefilled + n
+            self.sched.note_prefilled(r, n, now)
+            if r.state == DECODE:
+                # prompt complete: register its full pages now — they are
+                # immutable from this point, so concurrent shared-prefix
+                # requests can hit them while this one is still decoding —
+                # and the chunk's last hidden IS the first generated token
+                # (no separate "first decode" step)
+                self.pool.register_prefix(r.prompt, r.table)
+                if self.sched.note_token(r, int(nxt[i]), now):
+                    self._finish(r, now)
+        return done_tokens
+
+    def _paged_decode(self, now: float) -> int:
+        work = [r for r in self.sched.decode_work() if r.out]
+        if not work:
+            return 0
+        toks = jnp.asarray([[r.out[-1]] for r in work], jnp.int32)
+        pos = jnp.asarray(
+            [[r.prompt_len + len(r.out) - 1] for r in work], jnp.int32)
+        valid = jnp.ones((len(work), 1), bool)
+        last = jnp.zeros((len(work),), jnp.int32)
+        nxt = self._run_paged(work, toks, pos, valid, last)
+        for i, r in enumerate(work):
+            r.table.n_tokens += 1
+            if self.sched.note_token(r, int(nxt[i]), now):
+                self._finish(r, now)
+        return len(work)
+
+    # ------------------------------------------------------- dense stepping --
+    def _dense_prefill(self, now: float) -> int:
+        work = self.sched.prefill_work()
+        if not work:
+            return 0
+        done = 0
+        for req in work[:1]:          # one-shot prefill, one request/iter
+            s = req.table
+            toks = jnp.asarray([list(map(int, req.prompt))], jnp.int32)
+            logits, one = self.prefill(self.params, toks)
+            nxt = greedy_sample(logits)
+            self.caches = kvcache.scatter_slot(self.caches, one, s,
+                                               self.segs)
+            done += req.prompt_len
+            self.sched.note_prefilled(req, req.prompt_len, now)
+            if self.sched.note_token(req, int(nxt[0, 0]), now):
+                self._finish(req, now)
+        return done
+
+    def _dense_decode(self, now: float) -> int:
+        work = [r for r in self.sched.decode_work() if r.out]
+        if not work:
+            return 0
+        toks = [[0]] * self.n_slots
+        pos = [[0]] * self.n_slots
+        for r in work:
+            toks[r.table] = [r.out[-1]]
+            pos[r.table] = [r.prompt_len + len(r.out) - 1]
+        logits, self.caches = self.decode(
+            self.params, self.caches, jnp.asarray(toks, jnp.int32),
+            jnp.asarray(pos, jnp.int32))
+        nxt = greedy_sample(logits)
+        for r in list(work):
+            if self.sched.note_token(r, int(nxt[r.table, 0]), now):
+                self._finish(r, now)
+        return len(work)
+
+    # ---------------------------------------------------------------- loop --
+    def step(self) -> int:
+        """One engine iteration; returns tokens processed (prefill +
+        decode) so callers can loop ``while eng.step() or not
+        eng.sched.all_done()``."""
+        now = self.now()
+        self._iters += 1
+        self.sched.admit(now, self._try_open)
+        if self.mode == "paged":
+            n = self._paged_prefill_chunks(now)
+            n += self._paged_decode(now)
+        else:
+            n = self._dense_prefill(now)
+            n += self._dense_decode(now)
+        return n
+
+    def run(self, max_iters: int = 1_000_000) -> None:
+        """Drive until every submitted request finished or nothing moves."""
+        for _ in range(max_iters):
+            if self.sched.all_done():
+                return
+            if self.step() == 0 and not self.sched.active:
+                return            # starved: nothing admitted, nothing runs
+
+    # -------------------------------------------------------------- report --
+    def report(self) -> Dict[str, Any]:
+        rep = self.stats.report()
+        rep["mode"] = self.mode
+        rep["iterations"] = self._iters
+        if self.pool is not None:
+            rep["kv_pages"] = self.pool.stats()
+        return rep

@@ -1,0 +1,350 @@
+"""Paged KV-cache manager: fixed-size pages from a shared pool.
+
+The dense serving cache allocates ``n_slots x max_seq`` tokens of K/V up
+front and scatters whole per-sequence caches into slots
+(``ServeEngine._prefill_into_slot``).  This module replaces that with the
+standard production layout:
+
+  * **physical storage** — one page pool per attention layer, shaped
+    ``(n_pages + 1, page_size, K, D)`` (the ``+1`` row is a scratch page
+    that absorbs masked writes).  The pytree mirrors
+    ``transformer.init_stack_cache`` exactly — scanned segments carry a
+    leading layer dim — so a page id addresses that page's tokens across
+    *all* layers at once, like a vLLM block;
+  * **block tables** — each sequence owns an ordered list of page ids;
+    the dense ``(B, W, K, D)`` view the model consumes exists only
+    *inside* the jitted step (``gather_dense``: one XLA gather), never in
+    host memory;
+  * **prefix reuse** — pages are immutable once full; full prompt pages
+    are registered under a chain hash (page ``i``'s key folds page
+    ``i-1``'s) as soon as the prompt's prefill completes, so a request
+    sharing a prompt prefix re-links the existing pages (refcount++) and
+    prefill starts at the first uncached token — even while the
+    registering request is still decoding.  Sharing granularity is whole
+    pages, which makes copy-on-write unnecessary: only the (exclusively
+    owned) non-full tail page of a sequence is ever written;
+  * **free-list recycling** — released pages return to the free list;
+    hashed pages whose refcount drops to zero are *retained* in an LRU
+    cache and evicted only when the free list runs dry, so a hot system
+    prompt stays resident across requests.
+
+Only positional (full-attention) caches page cleanly — ring buffers and
+recurrent state are not length-indexed — so ``PagePool`` requires an
+all-``attn`` block pattern; ``AsyncServeEngine`` falls back to dense
+slot caches for the other families.
+"""
+from __future__ import annotations
+
+import re
+from collections import OrderedDict, deque
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, ModelConfig
+from repro.models import transformer
+
+
+class PageError(RuntimeError):
+    """Pool exhausted (or a sequence outgrew its table)."""
+
+
+def cache_batch_dim(path, segs) -> int:
+    """Batch/page dim of a stack-cache leaf: 1 under a scanned (stacked)
+    segment — those carry a leading layer dim — else 0."""
+    for p in path:
+        key = str(getattr(p, "key", ""))
+        m = re.match(r"seg(\d+)$", key)
+        if m:
+            si = int(m.group(1))
+            return 1 if si < len(segs) and segs[si][1] > 1 else 0
+    return 0
+
+
+def _is_pos_leaf(path) -> bool:
+    return str(getattr(path[-1], "key", "")) == "pos"
+
+
+# ---------------------------------------------------------------------------
+# device-side views (pure functions; the engine jits them with the model)
+# ---------------------------------------------------------------------------
+def gather_dense(pages, tables, segs):
+    """Materialize the dense per-sequence cache view from the pool.
+
+    ``tables`` (B, P) int32 page ids (pad unused entries with the scratch
+    page — its ``pos`` rows stay -1, so padded slots mask out).  Returns
+    the ``(B, P*page_size, ...)``-batched cache pytree the decode/chunk
+    paths consume.
+    """
+    def g(path, leaf):
+        bd = cache_batch_dim(path, segs)
+        out = jnp.take(leaf, tables, axis=bd)     # (..., B, P, ps, rest)
+        sh = out.shape
+        return out.reshape(sh[:bd + 1] + (sh[bd + 1] * sh[bd + 2],)
+                           + sh[bd + 3:])
+    return jax.tree_util.tree_map_with_path(g, pages)
+
+
+def scatter_tokens(pages, dense, tables, positions, valid, page_size, segs,
+                   trash: int):
+    """Write the tokens at ``positions`` (B, S) from the dense view back
+    into their pages; entries with ``valid`` False (padding rows/tails)
+    are routed to the scratch page with ``pos=-1`` so pool state is
+    untouched.  Slot == absolute position (full-attention layout)."""
+    B, S = positions.shape
+    bidx = jnp.arange(B)[:, None]
+    page = jnp.where(valid,
+                     tables[bidx, positions // page_size],
+                     jnp.int32(trash))
+    off = positions % page_size
+
+    def s(path, pleaf, dleaf):
+        bd = cache_batch_dim(path, segs)
+        if _is_pos_leaf(path):
+            val = jnp.where(valid, positions, -1).astype(pleaf.dtype)
+            if bd == 1:
+                val = jnp.broadcast_to(val, (pleaf.shape[0],) + val.shape)
+                return pleaf.at[:, page, off].set(val)
+            return pleaf.at[page, off].set(val)
+        if bd == 1:                                # (L, B, W, rest)
+            val = dleaf[:, bidx, positions]        # (L, B, S, rest)
+            return pleaf.at[:, page, off].set(val.astype(pleaf.dtype))
+        val = dleaf[bidx, positions]               # (B, S, rest)
+        return pleaf.at[page, off].set(val.astype(pleaf.dtype))
+
+    return jax.tree_util.tree_map_with_path(s, pages, dense)
+
+
+def scatter_slot(caches, one, slot: int, segs):
+    """Write a single-sequence cache pytree into batch slot ``slot`` of a
+    dense slot-cache pytree — the dense engines' prefill scatter (shared
+    by ``ServeEngine`` and ``AsyncServeEngine``'s dense mode)."""
+    def put(path, c_all, c_one):
+        bd = cache_batch_dim(path, segs)
+        idx = tuple([slice(None)] * bd + [slice(slot, slot + 1)])
+        return c_all.at[idx].set(c_one.astype(c_all.dtype))
+    return jax.tree_util.tree_map_with_path(put, caches, one)
+
+
+# ---------------------------------------------------------------------------
+# host-side accounting
+# ---------------------------------------------------------------------------
+class BlockTable:
+    """One sequence's ordered page ids + logical token length."""
+
+    __slots__ = ("pages", "n_tokens")
+
+    def __init__(self, pages: Optional[List[int]] = None, n_tokens: int = 0):
+        self.pages = list(pages or [])
+        self.n_tokens = n_tokens
+
+    def __len__(self) -> int:
+        return len(self.pages)
+
+
+class PagePool:
+    """Shared page pool: device arrays + free list + prefix-hash table."""
+
+    def __init__(self, cfg: ModelConfig, *, n_pages: int, page_size: int = 16,
+                 dtype=jnp.float32):
+        if any(b != ATTN for b in cfg.pattern):
+            raise ValueError(
+                "PagePool requires an all-'attn' block pattern; "
+                f"{cfg.name} has {sorted(set(cfg.pattern))} "
+                "(use the dense slot engine for ring/recurrent caches)")
+        self.cfg = cfg
+        self.page_size = int(page_size)
+        self.n_pages = int(n_pages)
+        self.trash = self.n_pages                  # scratch row
+        self.segs = transformer.plan_segments(cfg.pattern)
+        self.pages = transformer.init_stack_cache(
+            cfg, self.n_pages + 1, self.page_size, dtype)
+        self.free: deque = deque(range(self.n_pages))
+        self.ref = [0] * self.n_pages
+        self.page_hash: List[Optional[int]] = [None] * self.n_pages
+        # exact (prev_hash, tokens) key per hashed page: hits verify the
+        # token content, so a 64-bit chain-hash collision degrades to a
+        # miss instead of silently re-linking the wrong KV pages
+        self.page_key: List[Optional[Tuple]] = [None] * self.n_pages
+        self.by_hash: Dict[int, int] = {}          # hash -> page (live)
+        self.retained: "OrderedDict[int, int]" = OrderedDict()  # LRU, ref==0
+        # stats
+        self.hit_tokens = 0
+        self.miss_tokens = 0
+        self.evictions = 0
+        self.allocations = 0
+
+    # ------------------------------------------------------------- sizing --
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-max(n_tokens, 1) // self.page_size)
+
+    @property
+    def n_free(self) -> int:
+        return len(self.free) + len(self.retained)
+
+    @property
+    def in_use(self) -> int:
+        return self.n_pages - self.n_free
+
+    def utilization(self) -> float:
+        return self.in_use / max(self.n_pages, 1)
+
+    def hit_rate(self) -> float:
+        tot = self.hit_tokens + self.miss_tokens
+        return self.hit_tokens / tot if tot else 0.0
+
+    # -------------------------------------------------------- page lifecycle
+    def _evict_one(self) -> int:
+        if not self.retained:
+            raise PageError(f"page pool exhausted ({self.n_pages} pages)")
+        h, page = self.retained.popitem(last=False)   # LRU
+        self.by_hash.pop(h, None)
+        self.page_hash[page] = None
+        self.page_key[page] = None
+        self.evictions += 1
+        return page
+
+    def _take_page(self) -> int:
+        page = self.free.popleft() if self.free else self._evict_one()
+        self.ref[page] = 1
+        self.allocations += 1
+        return page
+
+    def allocate(self, n: int) -> List[int]:
+        """``n`` fresh exclusive pages (evicting retained LRU pages as
+        needed); raises PageError when the pool cannot satisfy it."""
+        if n > self.n_free:
+            raise PageError(
+                f"need {n} pages, {self.n_free} available "
+                f"({self.n_pages} total)")
+        out = [self._take_page() for _ in range(n)]
+        self._reset_pos(out)
+        return out
+
+    def release(self, table: BlockTable) -> None:
+        """Drop one reference per page; hashed full pages are retained
+        (LRU) for prefix reuse, the rest return to the free list."""
+        for page in table.pages:
+            self.ref[page] -= 1
+            if self.ref[page] > 0:
+                continue
+            h = self.page_hash[page]
+            if h is not None:
+                self.retained[h] = page
+                self.retained.move_to_end(h)
+            else:
+                self.free.append(page)
+        table.pages = []
+        table.n_tokens = 0
+
+    def _reset_pos(self, page_ids: Sequence[int]) -> None:
+        """Clear stale ``pos`` rows of recycled pages (device write).  K/V
+        contents can stay — ``pos == -1`` masks them."""
+        idx = jnp.asarray(list(page_ids), jnp.int32)
+
+        def r(path, leaf):
+            if not _is_pos_leaf(path):
+                return leaf
+            if cache_batch_dim(path, self.segs) == 1:
+                return leaf.at[:, idx].set(-1)
+            return leaf.at[idx].set(-1)
+
+        self.pages = jax.tree_util.tree_map_with_path(r, self.pages)
+
+    # ---------------------------------------------------------- prefix reuse
+    @staticmethod
+    def _chain(prev: int, toks: Tuple[int, ...]) -> int:
+        return hash((prev, toks))
+
+    def match_prefix(self, prompt: Sequence[int]) -> Tuple[List[int], int]:
+        """Longest run of already-cached *full* pages covering the prompt's
+        head.  Returns (page ids, n_cached_tokens); the returned pages are
+        referenced (the caller owns one ref each) and counted as hits.
+
+        Never matches the prompt's final page even when the prompt length
+        is an exact page multiple: the last page must stay writable for
+        the decode tail, and shared pages are immutable.
+        """
+        ps = self.page_size
+        toks = [int(t) for t in prompt]
+        pages: List[int] = []
+        h = 0
+        n_full = (len(toks) - 1) // ps             # final page excluded
+        prev = 0
+        for i in range(n_full):
+            key = (prev, tuple(toks[i * ps:(i + 1) * ps]))
+            h = self._chain(*key)
+            page = self.by_hash.get(h)
+            if page is None or self.page_key[page] != key:
+                break                              # miss (or hash collision)
+            # a referenced page must not sit in the eviction LRU — a
+            # retained hit revives it out of the evictable set
+            self.retained.pop(h, None)
+            self.ref[page] += 1
+            pages.append(page)
+            prev = h
+        self.hit_tokens += len(pages) * ps
+        self.miss_tokens += len(toks) - len(pages) * ps
+        return pages, len(pages) * ps
+
+    def register_prefix(self, prompt: Sequence[int], table: BlockTable
+                        ) -> None:
+        """Hash the prompt's full pages (call once the prompt's prefill
+        completes — they are immutable from then on) so later requests
+        can re-link them (idempotent; first registration wins)."""
+        ps = self.page_size
+        toks = [int(t) for t in prompt]
+        prev = 0
+        for i in range((len(toks) - 1) // ps):
+            key = (prev, tuple(toks[i * ps:(i + 1) * ps]))
+            h = self._chain(*key)
+            page = table.pages[i]
+            if h not in self.by_hash and self.page_hash[page] is None:
+                self.by_hash[h] = page
+                self.page_hash[page] = h
+                self.page_key[page] = key
+            prev = h
+
+    # ------------------------------------------------------------- sequences
+    def open_sequence(self, prompt: Sequence[int], max_new: int
+                      ) -> Tuple[BlockTable, int]:
+        """Block table for prompt + decode budget, reusing cached prefix
+        pages.  Returns (table, n_cached_tokens); raises PageError (with
+        the reused refs rolled back) when the pool cannot host it."""
+        reused, n_cached = self.match_prefix(prompt)
+        need = self.pages_for(len(prompt) + max_new) - len(reused)
+        try:
+            fresh = self.allocate(need)
+        except PageError:
+            self.release(BlockTable(reused))
+            # undo the optimistic hit accounting: the request never ran
+            self.hit_tokens -= n_cached
+            self.miss_tokens -= len(prompt) - n_cached
+            raise
+        return BlockTable(reused + fresh, n_cached), n_cached
+
+    def close_sequence(self, prompt: Sequence[int], table: BlockTable
+                       ) -> None:
+        """Register the prompt's pages for reuse, then drop the refs."""
+        self.register_prefix(prompt, table)
+        self.release(table)
+
+    def padded_table(self, table: BlockTable, width: int) -> jnp.ndarray:
+        """(width,) int32 page ids padded with the scratch page."""
+        row = table.pages[:width] + [self.trash] * (width - len(table))
+        return jnp.asarray(row, jnp.int32)
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "n_pages": self.n_pages,
+            "page_size": self.page_size,
+            "in_use": self.in_use,
+            "retained": len(self.retained),
+            "utilization": self.utilization(),
+            "hit_tokens": self.hit_tokens,
+            "miss_tokens": self.miss_tokens,
+            "hit_rate": self.hit_rate(),
+            "evictions": self.evictions,
+            "allocations": self.allocations,
+        }

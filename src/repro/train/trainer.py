@@ -62,22 +62,36 @@ def _dt(name: str):
 
 
 def resolve_attn_blocks(cfg: ModelConfig, policy: PolicyConfig,
-                        seq_len: Optional[int]) -> Tuple[int, int]:
+                        seq_len: Optional[int], *,
+                        decode: bool = False,
+                        batch: Optional[int] = None) -> Tuple[int, int]:
     """Shape-keyed tuned-config lookup for the step builders' attention
     tiles (the XLA flash path): measured (q_block, kv_block) when the
-    registry has the bucket, the historical (512, 512) otherwise."""
+    registry has the bucket, the historical (512, 512) otherwise.
+
+    ``decode=True`` keys the (B, 1, cache_len) decode shape instead of
+    the square prefill shape — ``seq_len`` is then the cache length and
+    ``batch`` the decode batch bucket — so serving decode steps resolve
+    their own tuned cells rather than borrowing prefill tiles."""
     from repro.kernels import registry as kreg
     if not seq_len:
         return RunCtx.attn_blocks        # class default — no shape known
+    g = max(1, cfg.n_heads // max(cfg.n_kv_heads, 1))
+    if decode:
+        return kreg.decode_attention_blocks(
+            batch or 1, seq_len, cfg.head_dim, g,
+            _dt(policy.compute_dtype), cfg.causal, 0,
+            defaults=(1, RunCtx.attn_blocks[1]))
     return kreg.attention_blocks(
-        seq_len, seq_len, cfg.head_dim,
-        max(1, cfg.n_heads // max(cfg.n_kv_heads, 1)),
+        seq_len, seq_len, cfg.head_dim, g,
         _dt(policy.compute_dtype), cfg.causal, 0,
         defaults=RunCtx.attn_blocks, kernel="flash_attention_xla")
 
 
 def make_run_ctx(cfg: ModelConfig, policy: PolicyConfig,
-                 mesh=None, *, seq_len: Optional[int] = None) -> RunCtx:
+                 mesh=None, *, seq_len: Optional[int] = None,
+                 decode: bool = False,
+                 batch: Optional[int] = None) -> RunCtx:
     moe_impl = "sorted"
     if (cfg.moe is not None and policy.ep and mesh is not None
             and policy.tp_axis in getattr(mesh, "shape", {})
@@ -87,7 +101,8 @@ def make_run_ctx(cfg: ModelConfig, policy: PolicyConfig,
     return RunCtx(
         compute_dtype=_dt(policy.compute_dtype),
         attn_impl=policy.attn_impl,
-        attn_blocks=resolve_attn_blocks(cfg, policy, seq_len),
+        attn_blocks=resolve_attn_blocks(cfg, policy, seq_len,
+                                        decode=decode, batch=batch),
         moe_impl=moe_impl,
         remat=policy.remat,
         pctx=ParallelCtx(mesh=mesh, dp_axes=policy.dp_axes,

@@ -11,10 +11,11 @@ import pytest
 
 from repro.configs import ASSIGNED_ARCHS, applicable_shapes, get_config
 
-RESULTS = os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "results", "dryrun")
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results")
+RESULTS = os.path.join(RESULTS_DIR, "dryrun")
 
-pytestmark = pytest.mark.skipif(
+needs_dryrun = pytest.mark.skipif(
     not os.path.isdir(RESULTS),
     reason="dry-run artifacts not generated (run repro.launch.dryrun)")
 
@@ -30,6 +31,7 @@ def _cells():
     return out
 
 
+@needs_dryrun
 def test_every_assigned_cell_has_an_artifact():
     missing = [c for c in _cells()
                if not os.path.exists(os.path.join(
@@ -38,6 +40,7 @@ def test_every_assigned_cell_has_an_artifact():
     assert len(_cells()) == 64
 
 
+@needs_dryrun
 @pytest.mark.parametrize("path", sorted(glob.glob(
     os.path.join(RESULTS, "*.json"))))
 def test_artifact_well_formed_and_fits_hbm(path):
@@ -60,6 +63,7 @@ def test_artifact_well_formed_and_fits_hbm(path):
     assert n in (256, 512)
 
 
+@needs_dryrun
 def test_multi_pod_cells_exercise_the_pod_axis():
     """At least the training cells must put traffic on the pod (DCN) axis
     — that is what the multi-pod dry-run proves."""
@@ -70,3 +74,50 @@ def test_multi_pod_cells_exercise_the_pod_axis():
         if js["per_axis_wire_bytes"].get("pod", 0) > 0:
             hits += 1
     assert hits >= 8, hits
+
+
+# ---------------------------------------------------------------------------
+# serving benchmark artifact (results/serve_bench.json)
+# ---------------------------------------------------------------------------
+SERVE_BENCH = os.path.join(RESULTS_DIR, "serve_bench.json")
+
+_DIST_KEYS = ("p50", "p99", "mean")
+_SCENARIO_KEYS = ("requests", "ttft_s", "tpot_s", "queue_wait_s",
+                  "slo_attainment", "throughput_tok_s", "cache_hit_rate",
+                  "output_tokens")
+
+
+@pytest.mark.skipif(
+    not os.path.exists(SERVE_BENCH),
+    reason="serve_bench artifact not generated "
+           "(run benchmarks/run.py --bench serve_bench)")
+def test_serve_bench_artifact_schema():
+    with open(SERVE_BENCH) as f:
+        js = json.load(f)
+    assert js["bench"] == "serve_bench"
+    # engine layer: >= 2 request-arrival scenarios with latency dists
+    assert set(js["engine"]) >= {"burst", "paced"}
+    for name, sc in js["engine"].items():
+        for k in _SCENARIO_KEYS:
+            assert k in sc, (name, k)
+        for dist in ("ttft_s", "tpot_s", "queue_wait_s"):
+            for q in _DIST_KEYS:
+                assert sc[dist][q] >= 0, (name, dist, q)
+        assert sc["requests"]["completed"] == sc["requests"]["submitted"]
+        kv = sc["kv_pages"]
+        assert 0.0 <= kv["hit_rate"] <= 1.0
+        assert kv["in_use"] == 0              # all pages recycled
+    # cluster layer: ServeJob replicas simulated alongside training jobs
+    assert set(js["cluster"]) >= {"poisson", "burst"}
+    for name, sc in js["cluster"].items():
+        jobs = sc["jobs"]
+        assert jobs["completed"] + jobs["rejected"] == jobs["submitted"]
+        for svc in sc["serving"].values():
+            assert svc["requests"]["stranded"] == 0
+            assert svc["ttft_s"]["p99"] > 0
+            assert svc["tpot_s"]["p50"] > 0
+            assert svc["throughput_tok_s"] > 0
+            assert len(svc["replicas"]) >= 2
+            for row in svc["replicas"].values():
+                assert "cache_hit_rate" in row
+                assert 0.0 <= row["cache_hit_rate"] <= 1.0

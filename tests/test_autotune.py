@@ -387,3 +387,52 @@ def test_from_registry_builds_speedups():
 def test_interpret_default_is_backend_derived():
     # CPU test environment: the one-place default must say "interpret"
     assert ops.default_interpret() == (jax.default_backend() != "tpu")
+
+
+# ---------------------------------------------------------------------------
+# decode-shape buckets (the serving engine's (B, 1, cache_len) cells)
+# ---------------------------------------------------------------------------
+def test_decode_bucket_keys_batch_dim():
+    # batch buckets pow2 from 1; cache length buckets like seq dims;
+    # S is omitted from decode cells (always 1)
+    k1 = registry.make_key("decode_attention", dtype="float32",
+                           variant="causal", b=3, t=300, d=64, g=4)
+    k2 = registry.make_key("decode_attention", dtype="float32",
+                           variant="causal", b=4, t=512, d=64, g=4)
+    assert k1 == k2                       # 3->4 and 300->512 share a cell
+    assert "b=4" in k1 and "t=512" in k1 and "s=" not in k1
+
+
+def test_decode_attention_blocks_resolve_and_fallback():
+    # miss: defaults fitted (block_q pinned to the single query row;
+    # block_k fitted to divide the cache length: 150 | 300)
+    assert registry.decode_attention_blocks(
+        4, 300, 64, 4, jnp.float32) == (1, 150)
+    reg = registry.Registry()
+    reg.put(registry.make_key("decode_attention", dtype="float32",
+                              variant="causal", b=4, t=512, d=64, g=4),
+            registry.TunedEntry(blocks={"block_q": 1, "block_k": 128},
+                                us=10.0, default_us=20.0))
+    registry.set_registry(reg)
+    assert registry.decode_attention_blocks(
+        3, 300, 64, 4, jnp.float32) == (1, 100)   # 128 fitted to T=300
+
+
+def test_resolve_attn_blocks_covers_decode_shape():
+    from repro.configs import get_config, reduced
+    from repro.configs.base import PolicyConfig
+    from repro.train.trainer import resolve_attn_blocks
+    cfg = reduced(get_config("qwen2-0.5b"))
+    pol = PolicyConfig(compute_dtype="float32")
+    g = max(1, cfg.n_heads // max(cfg.n_kv_heads, 1))
+    reg = registry.Registry()
+    reg.put(registry.make_key("decode_attention", dtype="float32",
+                              variant="causal", b=4, t=128,
+                              d=cfg.head_dim, g=g),
+            registry.TunedEntry(blocks={"block_q": 1, "block_k": 64}))
+    registry.set_registry(reg)
+    assert resolve_attn_blocks(cfg, pol, 128, decode=True,
+                               batch=4) == (1, 64)
+    # the prefill-shaped lookup is untouched by the decode cell
+    # (defaults fitted to the 128-token shape)
+    assert resolve_attn_blocks(cfg, pol, 128) == (128, 128)

@@ -5,7 +5,7 @@ import json
 import pytest
 
 from repro.cluster import (ClusterSimulator, Job, JobTemplate, Scheduler,
-                           TraceConfig, run_trace)
+                           ServeJob, ServiceConfig, TraceConfig, run_trace)
 from repro.cluster.scheduler import DONE, QUEUED, REJECTED, RUNNING
 from repro.core.topology import make_pool
 
@@ -316,3 +316,98 @@ def test_trace_heavy_contention_queues_jobs():
     assert rep["jobs"]["stranded"] == 0
     assert rep["job_wait_s"]["p99"] > 0
     assert rep["lease_conflicts"] == 0
+
+
+# ---------------------------------------------------------------------------
+# serving tenants (ServeJob + serving-trace mode)
+# ---------------------------------------------------------------------------
+def test_serve_job_admitted_and_priced():
+    pool = make_pool(n_local=128, n_switch=0, pods=1)
+    sched = Scheduler(pool)
+    job = ServeJob(name="svc/r0", arch="llama3.2-3b",
+                   shape_name="decode_32k", n_chips=64, steps=100,
+                   service="svc")
+    assert sched.submit(job, 0.0)
+    assert sched.poll(0.0) == [job]
+    assert job.state == RUNNING
+    tp = job.throughput()
+    assert tp["tokens_per_s"] > 0
+    assert tp["kv_write_bytes_per_s"] > 0
+    # throughput is priced from the placed (re-priced) plan
+    assert tp["tokens_per_s"] == pytest.approx(128 / job.step_s)
+
+
+def _serve_trace(arrival="poisson", **kw):
+    svc = ServiceConfig(name="chat", arch="llama3.2-3b",
+                        shape_name="decode_32k", n_replicas=2,
+                        chips_per_replica=64, n_requests=80,
+                        arrival_rate_hz=2.0, arrival=arrival,
+                        prompt_len=2048, max_new=64, n_prefixes=4,
+                        prefix_len=1024)
+    return TraceConfig(n_jobs=8, arrival_rate_hz=0.2, seed=5,
+                       failures=(), services=(svc,), **kw)
+
+
+def test_serving_trace_alongside_training_tenants():
+    rep = ClusterSimulator(_serve_trace()).run()
+    jobs = rep["jobs"]
+    # 8 batch jobs + 2 replicas all accounted for, nothing stranded
+    assert jobs["submitted"] == 10
+    assert jobs["completed"] + jobs["rejected"] == 10
+    assert jobs["stranded"] == 0
+    svc = rep["serving"]["chat"]
+    assert svc["requests"]["completed"] == 80
+    assert svc["requests"]["stranded"] == 0
+    assert svc["ttft_s"]["p99"] > 0
+    assert svc["tpot_s"]["p50"] > 0
+    assert svc["throughput_tok_s"] > 0
+    assert len(svc["replicas"]) == 2
+    for row in svc["replicas"].values():
+        assert row["served"] > 0
+        assert 0.0 <= row["cache_hit_rate"] < 1.0
+    # prefix caches warm up: some hits across the trace
+    assert svc["cache_hit_rate"] > 0
+    json.dumps(rep)
+
+
+def test_serving_trace_deterministic_and_arrival_sensitive():
+    a = ClusterSimulator(_serve_trace()).run()
+    b = ClusterSimulator(_serve_trace()).run()
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+    burst = ClusterSimulator(_serve_trace(arrival="burst")).run()
+    # a burst at t=0 must queue harder than paced poisson arrivals
+    assert burst["serving"]["chat"]["queue_wait_s"]["p99"] >= \
+        a["serving"]["chat"]["queue_wait_s"]["p99"]
+    # and cold-prefix requests prefilling concurrently must not count as
+    # cache hits — a prefix is reusable only after a prefill finishes
+    assert burst["serving"]["chat"]["cache_hit_rate"] <= \
+        a["serving"]["chat"]["cache_hit_rate"]
+
+
+def test_preempted_replica_completes_when_trace_drains():
+    """Regression: a replica preempted by a failure wave and still queued
+    when the request trace drains must complete with full accounting
+    (jobs.completed + jobs.rejected == jobs.submitted)."""
+    svc = ServiceConfig(name="chat", arch="llama3.2-3b",
+                        shape_name="decode_32k", n_replicas=2,
+                        chips_per_replica=64, n_requests=120,
+                        arrival_rate_hz=2.0, prompt_len=2048, max_new=64,
+                        n_prefixes=4, prefix_len=1024)
+    cfg = TraceConfig(n_jobs=0, seed=0, n_local=192, n_switch=0, pods=1,
+                      failures=((20.0, 90),), repair_after_s=1e9,
+                      services=(svc,))
+    rep = ClusterSimulator(cfg).run()
+    jobs = rep["jobs"]
+    assert jobs["completed"] + jobs["rejected"] == jobs["submitted"] == 2
+    assert rep["serving"]["chat"]["requests"]["stranded"] == 0
+
+
+def test_serving_replicas_release_pool_for_training():
+    """When the request trace drains, replicas complete and give their
+    chips back — the re-aggregation loop composability exists for."""
+    sim = ClusterSimulator(_serve_trace())
+    rep = sim.run()
+    for row in rep["serving"]["chat"]["replicas"].values():
+        assert row["state"] == DONE
+    assert rep["jobs"]["stranded"] == 0      # batch jobs finished too
+    assert not sim.pool.leases               # every chip returned

@@ -1,0 +1,311 @@
+"""Serving stack: paged KV cache, chunked prefill, scheduler, engine.
+
+The acceptance bar for the paged/chunked path is *exactness*: chunked
+prefill over a paged pool must reproduce the one-shot dense-cache logits
+(same greedy continuation) at fp32.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.configs.base import PolicyConfig
+from repro.models import lm
+from repro.serve import (SLO, AsyncServeEngine, PageError, PagePool,
+                         Request, RequestScheduler, ServeEngine,
+                         ServeRequest)
+from repro.serve.scheduler import DECODE
+from repro.train.trainer import make_run_ctx
+
+POLICY = PolicyConfig(compute_dtype="float32", remat="none",
+                      attn_impl="full")
+
+
+@pytest.fixture(scope="module")
+def small_lm(rng):
+    cfg = reduced(get_config("qwen2-0.5b"))
+    return cfg, lm.init_lm(rng, cfg)
+
+
+def _prompt(seed: int, n: int, vocab: int):
+    return list(np.random.RandomState(seed).randint(0, vocab, n))
+
+
+# ---------------------------------------------------------------------------
+# page pool unit behaviour
+# ---------------------------------------------------------------------------
+def _pool(cfg, n_pages=12, page_size=8):
+    return PagePool(cfg, n_pages=n_pages, page_size=page_size)
+
+
+def test_page_alloc_free_recycles(small_lm):
+    cfg, _ = small_lm
+    pool = _pool(cfg)
+    t, cached = pool.open_sequence(_prompt(0, 20, 100), max_new=4)
+    assert cached == 0
+    assert len(t) == pool.pages_for(24) == 3
+    assert pool.in_use == 3
+    pool.release(t)
+    assert pool.in_use == 0 and len(t) == 0
+
+
+def test_page_pool_exhaustion_raises(small_lm):
+    cfg, _ = small_lm
+    pool = _pool(cfg, n_pages=4)
+    pool.open_sequence(_prompt(0, 20, 100), max_new=4)    # 3 pages
+    with pytest.raises(PageError):
+        pool.open_sequence(_prompt(1, 20, 100), max_new=4)
+    assert pool.in_use == 3                   # failed open rolled back
+
+
+def test_prefix_hash_hits_and_retention(small_lm):
+    cfg, _ = small_lm
+    pool = _pool(cfg)
+    prompt = _prompt(7, 20, 100)              # 2 full pages + tail
+    t1, c1 = pool.open_sequence(prompt, max_new=4)
+    assert c1 == 0
+    pool.close_sequence(prompt, t1)           # registers + retains
+    t2, c2 = pool.open_sequence(prompt, max_new=4)
+    assert c2 == 2 * pool.page_size           # both full pages reused
+    assert pool.hit_tokens == 16
+    # a different prompt shares nothing
+    other = _prompt(8, 20, 100)
+    _, c3 = pool.open_sequence(other, max_new=4)
+    assert c3 == 0
+
+
+def test_reused_prefix_page_is_not_evictable(small_lm):
+    """Regression: a by_hash prefix hit must pull the page out of the
+    retained LRU — otherwise eviction under pool pressure hands a page
+    that a live sequence still references to a new sequence (silent KV
+    corruption + later double-free)."""
+    cfg, _ = small_lm
+    pool = _pool(cfg, n_pages=6, page_size=8)
+    prompt = _prompt(5, 17, 100)              # 3 pages, 2 hashable
+    t1, _ = pool.open_sequence(prompt, max_new=4)
+    pool.close_sequence(prompt, t1)           # 2 retained, 1 free
+    t2, c2 = pool.open_sequence(prompt, max_new=4)   # reuse both pages
+    assert c2 == 16
+    assert not pool.retained                  # live pages left the LRU
+    assert pool.in_use == 3                   # accounting sees them live
+    with pytest.raises(PageError):            # only 3 pages truly free
+        pool.open_sequence(_prompt(6, 28, 100), max_new=4)
+    # the live table was never cannibalized
+    assert all(pool.ref[p] == 1 for p in t2.pages)
+
+
+def test_prefix_hit_verifies_token_content(small_lm):
+    """A chain-hash collision must degrade to a miss, never re-link
+    another prompt's KV pages."""
+    cfg, _ = small_lm
+    pool = _pool(cfg)
+    prompt = _prompt(9, 20, 100)
+    t1, _ = pool.open_sequence(prompt, max_new=4)
+    pool.close_sequence(prompt, t1)
+    page = next(p for p in range(pool.n_pages)
+                if pool.page_hash[p] is not None)
+    pool.page_key[page] = (0, ("collision",))    # same hash, other tokens
+    _, cached = pool.open_sequence(prompt, max_new=4)
+    assert cached == 0
+
+
+def test_retained_pages_evicted_lru(small_lm):
+    cfg, _ = small_lm
+    pool = _pool(cfg, n_pages=6, page_size=8)
+    p1 = _prompt(1, 17, 100)                  # 3 pages, 2 hashable
+    t1, _ = pool.open_sequence(p1, max_new=4)
+    pool.close_sequence(p1, t1)               # 2 retained + 1 free
+    assert len(pool.retained) == 2
+    p2 = _prompt(2, 40, 100)                  # needs 6 pages -> evicts
+    t2, _ = pool.open_sequence(p2, max_new=4)
+    assert len(t2) == 6 and pool.evictions >= 2
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill == one-shot prefill (model level)
+# ---------------------------------------------------------------------------
+def test_chunked_prefill_matches_one_shot(small_lm):
+    cfg, params = small_lm
+    ctx = dataclasses.replace(
+        make_run_ctx(cfg, POLICY, None, seq_len=32), cache_capacity=32)
+    toks = jnp.asarray([_prompt(3, 21, cfg.vocab_size)])
+    h1, c1, _ = lm.forward(params, toks, cfg, ctx, caches="init",
+                           return_hidden=True)
+    caches = None
+    h = None
+    for s, e in ((0, 8), (8, 16), (16, 21)):      # uneven chunks
+        pos = jnp.arange(s, e)[None, :]
+        h, caches, _ = lm.forward(
+            params, toks[:, s:e], cfg, ctx, positions=pos,
+            caches=("init" if caches is None else caches),
+            return_hidden=True)
+    np.testing.assert_allclose(np.asarray(h1[:, -1]), np.asarray(h[:, -1]),
+                               atol=1e-5)
+    # every cache leaf identical too (positions, K, V)
+    for a, b in zip(jax.tree.leaves(c1), jax.tree.leaves(caches)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_chunked_prefill_matches_windowed(small_lm):
+    """Sliding-window layers: chunks larger than the window stay exact."""
+    cfg, _ = small_lm
+    cfg = dataclasses.replace(
+        cfg, block_pattern=("attn_local",) * cfg.n_layers, local_window=6)
+    params = lm.init_lm(jax.random.PRNGKey(1), cfg)
+    ctx = dataclasses.replace(
+        make_run_ctx(cfg, POLICY, None, seq_len=32), cache_capacity=32)
+    toks = jnp.asarray([_prompt(4, 20, cfg.vocab_size)])
+    h1, _, _ = lm.forward(params, toks, cfg, ctx, caches="init",
+                          return_hidden=True)
+    h, caches = None, None
+    for s, e in ((0, 8), (8, 16), (16, 20)):
+        pos = jnp.arange(s, e)[None, :]
+        h, caches, _ = lm.forward(
+            params, toks[:, s:e], cfg, ctx, positions=pos,
+            caches=("init" if caches is None else caches),
+            return_hidden=True)
+    np.testing.assert_allclose(np.asarray(h1[:, -1]), np.asarray(h[:, -1]),
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# engine end-to-end
+# ---------------------------------------------------------------------------
+def _engine(cfg, params, **kw):
+    kw.setdefault("n_slots", 3)
+    kw.setdefault("max_seq", 96)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("prefill_chunk", 16)
+    return AsyncServeEngine(cfg, params, POLICY, **kw)
+
+
+def test_paged_engine_matches_teacher_forcing(small_lm):
+    cfg, params = small_lm
+    eng = _engine(cfg, params)
+    assert eng.mode == "paged"
+    reqs = [ServeRequest(i, _prompt(10 + i, 20 + 5 * i, cfg.vocab_size),
+                         max_new=5) for i in range(4)]
+    for r in reqs:
+        assert eng.submit(r)
+    eng.run()
+    assert all(r.done for r in reqs)
+    ctx = make_run_ctx(cfg, POLICY, None)
+    for r in reqs[:2]:
+        toks = list(r.prompt)
+        for expect in r.out:
+            logits, _, _ = lm.forward(params, jnp.asarray([toks]), cfg, ctx)
+            assert int(jnp.argmax(logits[0, -1])) == expect
+            toks.append(expect)
+
+
+def test_paged_engine_output_invariant_under_reuse(small_lm):
+    """Prefix-cache hits change TTFT, never tokens."""
+    cfg, params = small_lm
+    shared = _prompt(42, 33, cfg.vocab_size)
+
+    def run(slots):
+        eng = _engine(cfg, params, n_slots=slots)
+        reqs = [ServeRequest(i, shared + _prompt(50 + i, 5, cfg.vocab_size),
+                             max_new=4) for i in range(4)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        return eng, reqs
+
+    e1, r1 = run(2)
+    e2, r2 = run(3)
+    assert e1.pool.hit_tokens > 0             # later requests reuse prefix
+    for a, b in zip(r1, r2):
+        assert a.out == b.out
+    assert e1.pool.in_use == 0                # full recycling
+
+
+def test_engine_rejects_overlong_prompt(small_lm):
+    cfg, params = small_lm
+    eng = _engine(cfg, params)
+    bad = ServeRequest(0, _prompt(0, 95, cfg.vocab_size), max_new=8)
+    assert not eng.submit(bad)
+    assert bad.state == "rejected" and "capacity" in bad.why_rejected
+
+
+def test_dense_mode_serves_recurrent_arch(rng):
+    cfg = reduced(get_config("recurrentgemma-2b"))
+    params = lm.init_lm(rng, cfg)
+    eng = AsyncServeEngine(cfg, params, POLICY, n_slots=2, max_seq=64)
+    assert eng.mode == "dense"
+    reqs = [ServeRequest(i, _prompt(i, 12, cfg.vocab_size), max_new=3)
+            for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert all(r.done for r in reqs)
+
+
+def test_engine_telemetry_report(small_lm):
+    cfg, params = small_lm
+    eng = _engine(cfg, params)
+    for i in range(3):
+        eng.submit(ServeRequest(i, _prompt(i, 20, cfg.vocab_size),
+                                max_new=4))
+    eng.run()
+    rep = eng.report()
+    assert rep["requests"]["completed"] == 3
+    assert rep["ttft_s"]["p50"] > 0
+    assert rep["output_tokens"] == 12
+    assert rep["kv_pages"]["in_use"] == 0
+
+
+def test_legacy_dense_engine_still_serves(small_lm):
+    """The dense baseline ServeEngine keeps working (and is what the
+    paged path is equivalence-tested against)."""
+    cfg, params = small_lm
+    eng = ServeEngine(cfg, params, POLICY, n_slots=2, max_seq=64)
+    req = Request(0, jnp.asarray(_prompt(1, 16, cfg.vocab_size)), max_new=4)
+    assert eng.add_request(req)
+    while not req.done:
+        eng.step()
+    assert len(req.out) == 4
+
+
+# ---------------------------------------------------------------------------
+# request scheduler policies
+# ---------------------------------------------------------------------------
+def test_scheduler_slo_orders_by_deadline():
+    sched = RequestScheduler(max_slots=4, max_prompt=64, policy="slo")
+    lax_ = ServeRequest(0, [1] * 8, slo=SLO(ttft_s=9.0))
+    tight = ServeRequest(1, [1] * 8, slo=SLO(ttft_s=0.5))
+    sched.submit(lax_, now=0.0)
+    sched.submit(tight, now=0.1)
+    admitted = sched.admit(0.2, lambda r: True)
+    for r in admitted:
+        r.state = DECODE
+    assert admitted[0].rid == 1               # tighter deadline first
+
+
+def test_scheduler_priority_and_fcfs():
+    for policy, first in (("priority", 1), ("fcfs", 0)):
+        sched = RequestScheduler(max_slots=1, max_prompt=64, policy=policy)
+        sched.submit(ServeRequest(0, [1] * 8, priority=0), now=0.0)
+        sched.submit(ServeRequest(1, [1] * 8, priority=5), now=0.1)
+        admitted = sched.admit(0.2, lambda r: True)
+        assert admitted[0].rid == first, policy
+
+
+def test_scheduler_rejects_oversized_and_interleaves_chunks():
+    sched = RequestScheduler(max_slots=4, max_prompt=32, prefill_chunk=8,
+                             prefill_batch=2)
+    assert not sched.submit(ServeRequest(0, [1] * 40), now=0.0)
+    # a 0-token decode budget can't be honored (first token comes from
+    # the prefill's last hidden state)
+    assert not sched.submit(ServeRequest(9, [1] * 8, max_new=0), now=0.0)
+    long_req = ServeRequest(1, [1] * 24, max_new=4)
+    sched.submit(long_req, now=0.0)
+    sched.admit(0.0, lambda r: True)
+    assert sched.chunk_for(long_req) == 8     # chunked, not all 24
+    sched.note_prefilled(long_req, 8, 0.1)
+    assert long_req.state != DECODE
+    sched.note_prefilled(long_req, 16, 0.2)
+    assert long_req.state == DECODE
