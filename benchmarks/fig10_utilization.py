@@ -13,8 +13,7 @@ from typing import List, Tuple
 
 from benchmarks.paper_model import (PAPER_WORKLOADS, comm_time,
                                     compute_time, step_time)
-from benchmarks.fig15_storage import SAMPLE_BYTES
-from repro.data import StorageModel
+from repro.data import IO_WORKLOADS, StorageModel
 from repro.core.topology import LOCAL_NVME
 
 
@@ -32,7 +31,8 @@ def run() -> List[Tuple[str, float, str]]:
             # why the paper sees *higher* util on falcon configs)
             busy = comp + comm_time(w, config)
             out[config] = min(1.0, busy / step)
-        read = storage.read_time(w.batch_size * SAMPLE_BYTES[w.name])
+        read = storage.read_time(
+            w.batch_size * IO_WORKLOADS[w.name].record_bytes)
         cpu_util = min(1.0, (read * 3.0) / step_time(w, "localGPUs"))
         us = (time.perf_counter() - t0) * 1e6
         ok80 = all(v > 0.6 for v in out.values())

@@ -3,6 +3,13 @@
 The paper observes: NVMe acceleration helps input-heavy models (YOLO,
 BERT fine-tuning reads big records); the falcon switch adds only a small
 penalty on the storage path because reads overlap compute (prefetching).
+
+Per-step read bytes come from the MLPerf-Storage-style trace generator
+(``repro.data.pipeline.IOTraceGenerator``): per-sample record-size
+distributions + per-epoch shuffled reads, instead of the former flat
+bytes-per-sample constant.  A third column prices the same read against
+a falcon tranche shared by a co-tenant (the composability cost the
+paper's single-tenant chassis could not measure).
 """
 from __future__ import annotations
 
@@ -11,22 +18,21 @@ from typing import List, Tuple
 
 from benchmarks.paper_model import PAPER_WORKLOADS, step_time
 from repro.core.topology import DEFAULT_LINKS, LOCAL_NVME, SWITCH_NVME
-from repro.data import StorageModel, input_stall
+from repro.data import IO_WORKLOADS, IOTraceGenerator, StorageModel
 
-# per-sample input bytes (ImageNet JPEG ~110KB; COCO 640px ~300KB; SQuAD
-# tokenized record ~6KB).  Deviation note: the paper reports NVMe helping
-# BERT too; tokenized-SQuAD reads are tiny, so our model shows ~no BERT
-# effect — their gain likely includes checkpoint I/O (Fig 9 dips), which
-# we model separately in the checkpoint layer.
-SAMPLE_BYTES = {"mobilenetv2": 110e3, "resnet50": 110e3, "yolov5l": 300e3,
-                "bert-base": 6e3, "bert-large": 6e3}
+# Deviation note: the paper reports NVMe helping BERT too; tokenized-SQuAD
+# reads are tiny, so our model shows ~no BERT effect — their gain likely
+# includes checkpoint I/O (Fig 9 dips), which the IOWorkload's
+# checkpoint-burst term models separately.
 HDD_BW = 0.2e9    # the no-NVMe baseline the paper accelerates from
+TRACE_STEPS = 64  # steps averaged from the shuffled-read trace
 
 
 def run() -> List[Tuple[str, float, str]]:
     rows = []
     local = StorageModel(LOCAL_NVME)
     falcon = StorageModel(SWITCH_NVME)
+    shared2 = StorageModel(SWITCH_NVME, dict(DEFAULT_LINKS), n_lessees=2)
     # real dataloaders overlap only partially (CPU augmentation sits on
     # the critical path); reads hide under half the step
     def stall(read_s, step_s):
@@ -35,17 +41,24 @@ def run() -> List[Tuple[str, float, str]]:
     for w in PAPER_WORKLOADS:
         t0 = time.perf_counter()
         comp = step_time(w, "localGPUs")
-        nbytes = w.batch_size * SAMPLE_BYTES[w.name]
+        io = IO_WORKLOADS[w.name]
+        gen = IOTraceGenerator(io, seed=0)
+        nbytes = float(gen.read_trace(TRACE_STEPS).mean()) \
+            * (w.batch_size / io.batch_size)
         stall_hdd = stall(nbytes / HDD_BW, comp)
         stall_local = stall(local.read_time(nbytes), comp)
         stall_falcon = stall(falcon.read_time(nbytes), comp)
+        stall_shared = stall(shared2.read_time(nbytes), comp)
         us = (time.perf_counter() - t0) * 1e6
         speedup = (comp + stall_hdd) / (comp + stall_local)
         penalty = ((comp + stall_falcon) - (comp + stall_local)) \
             / (comp + stall_local) * 100
+        shared_pen = ((comp + stall_shared) - (comp + stall_local)) \
+            / (comp + stall_local) * 100
         rows.append((f"fig15/{w.name}", us,
                      f"nvme_speedup_vs_hdd={speedup:.2f}x "
                      f"falcon_nvme_penalty={penalty:+.1f}% "
+                     f"falcon_shared2_penalty={shared_pen:+.1f}% "
                      f"(paper: penalty small, speedup largest for "
                      f"input-heavy)"))
     return rows

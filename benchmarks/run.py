@@ -26,8 +26,8 @@ def main() -> int:
     from benchmarks import (beyond_paper, cluster_sim, fig10_utilization,
                             fig11_switch_overhead, fig12_traffic,
                             fig15_storage, fig16_sw_opt, kernel_tune,
-                            recompose, roofline, serve_bench, table2_models,
-                            table4_links)
+                            recompose, roofline, serve_bench, storage_bench,
+                            table2_models, table4_links)
     modules = {
         "table2": table2_models,
         "table4": table4_links,
@@ -42,6 +42,7 @@ def main() -> int:
         "cluster_sim": cluster_sim,
         "kernel_tune": kernel_tune,
         "serve_bench": serve_bench,
+        "storage_bench": storage_bench,
     }
 
     if args.bench:

@@ -1,0 +1,164 @@
+"""Storage-composability benchmark: tranche contention, local vs switch.
+
+The paper's §V-3 measures one workload against one NVMe placement at a
+time (localNVMe vs falconNVMe).  This benchmark sweeps the question the
+composable pitch actually raises: what happens when the *switch* lets N
+tenants attach the **same** tranche, versus each tenant composing its own
+host-local one?
+
+Two layers:
+
+  * **sweep** — analytic: 1..4 co-located tenants on one switch-attached
+    tranche vs the same tenants on separate local tranches, priced with
+    the MLPerf-Storage-style trace generator (shuffled-epoch reads +
+    checkpoint bursts) over the contended ``StorageModel``.
+  * **cluster** — the trace-driven simulator end-to-end: identical
+    input-heavy training jobs admitted through the scheduler (which now
+    requires a storage lease), once against a single shared
+    switch-attached tranche and once against per-tenant local tranches;
+    reports per-tranche ``StorageStats`` (occupancy, bytes, input-stall
+    seconds) and the makespan gap.
+
+``report()`` is the JSON artifact ``run.py --bench storage_bench`` writes
+to ``results/storage_bench.json``; schema asserted by
+``tests/test_artifacts.py``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+from repro.cluster.simulator import ClusterSimulator, JobTemplate, TraceConfig
+from repro.core.topology import DEFAULT_LINKS, LinkClass
+from repro.data.pipeline import (IOTraceGenerator, IOWorkload, StorageModel,
+                                 workload_stall)
+from repro.data.storage import StorageTranche
+
+MAX_TENANTS = 4
+
+# An input-heavy tenant (multimodal-frame-class records: 1 MB +- 300 KB,
+# 512-sample global batch) with periodic 2 GB checkpoint bursts — the
+# workload class where the paper's NVMe placement actually matters.
+HEAVY_IO = IOWorkload("heavy-input", 1e6, 0.3e6, batch_size=512,
+                      samples_per_epoch=1 << 16,
+                      checkpoint_bytes=2e9, checkpoint_every=20)
+STEP_S = 0.25                       # representative compute step time
+
+
+def _tranche(attach: LinkClass, i: int = 0) -> StorageTranche:
+    name = f"{'local' if attach == LinkClass.LOCAL else 'falcon'}-nvme-{i}"
+    return StorageTranche(name, attach=attach)
+
+
+def sweep() -> Dict[str, Dict[str, object]]:
+    """Per-tenant stall/throughput, shared switch vs separate local."""
+    gen = IOTraceGenerator(HEAVY_IO, seed=0)
+    mean_read = float(gen.read_trace(64).mean())
+    out: Dict[str, Dict[str, object]] = {}
+    for n in range(1, MAX_TENANTS + 1):
+        shared = StorageModel(_tranche(LinkClass.SWITCH).spec(),
+                              dict(DEFAULT_LINKS), n_lessees=n)
+        local = StorageModel(_tranche(LinkClass.LOCAL).spec(),
+                             dict(DEFAULT_LINKS), n_lessees=1)
+        stall_sh = workload_stall(HEAVY_IO, shared, STEP_S)
+        stall_lo = workload_stall(HEAVY_IO, local, STEP_S)
+        out[f"tenants_{n}"] = {
+            "n_tenants": n,
+            "mean_step_read_mb": mean_read / 1e6,
+            "shared_switch": {
+                "per_tenant_read_bw_gbps": shared.tier.effective_read_bw(
+                    shared.links) / n / 1e9,
+                "input_stall_s": stall_sh,
+                "step_s": STEP_S + stall_sh,
+            },
+            "local_per_tenant": {
+                "per_tenant_read_bw_gbps": local.tier.effective_read_bw(
+                    local.links) / 1e9,
+                "input_stall_s": stall_lo,
+                "step_s": STEP_S + stall_lo,
+            },
+            "contention_slowdown": (STEP_S + stall_sh) / (STEP_S + stall_lo),
+        }
+    return out
+
+
+def _trace(tranches: Tuple[StorageTranche, ...], n_jobs: int) -> TraceConfig:
+    tmpl = (JobTemplate("qwen2-0.5b", "train_4k", 16, 30, io=HEAVY_IO),)
+    return TraceConfig(n_jobs=n_jobs, arrival_rate_hz=5.0, seed=1,
+                       n_local=64, n_switch=0, pods=1, templates=tmpl,
+                       failures=(), storage_tranches=tranches)
+
+
+def cluster(n_jobs: int = 3) -> Dict[str, object]:
+    shared = ClusterSimulator(
+        _trace((_tranche(LinkClass.SWITCH),), n_jobs)).run()
+    separate = ClusterSimulator(
+        _trace(tuple(_tranche(LinkClass.LOCAL, i) for i in range(n_jobs)),
+               n_jobs)).run()
+
+    def view(rep):
+        return {
+            "jobs": rep["jobs"],
+            "makespan_s": rep["makespan_s"],
+            "auu": rep["auu"],
+            "storage": rep["storage"],
+            "input_stall_s_total": sum(
+                s["input_stall_s"] for s in rep["storage"].values()),
+        }
+
+    sh, se = view(shared), view(separate)
+    return {
+        "n_tenants": n_jobs,
+        "shared_switch_tranche": sh,
+        "separate_local_tranches": se,
+        "acceptance": {
+            # >= 2 tenants on one switch tranche must stall harder than
+            # the same tenants on their own local tranches
+            "shared_stall_s": sh["input_stall_s_total"],
+            "separate_stall_s": se["input_stall_s_total"],
+            "contention_visible": (sh["input_stall_s_total"]
+                                   > se["input_stall_s_total"]),
+            "makespan_gap_s": sh["makespan_s"] - se["makespan_s"],
+        },
+    }
+
+
+def report() -> Dict[str, object]:
+    return {
+        "bench": "storage_bench",
+        "config": {
+            "io_workload": {
+                "name": HEAVY_IO.name,
+                "record_bytes": HEAVY_IO.record_bytes,
+                "record_stdev": HEAVY_IO.record_stdev,
+                "batch_size": HEAVY_IO.batch_size,
+                "checkpoint_bytes": HEAVY_IO.checkpoint_bytes,
+                "checkpoint_every": HEAVY_IO.checkpoint_every,
+            },
+            "step_s": STEP_S,
+            "max_tenants": MAX_TENANTS,
+        },
+        "sweep": sweep(),
+        "cluster": cluster(),
+    }
+
+
+def run() -> List[Tuple[str, float, str]]:
+    t0 = time.perf_counter()
+    rep = report()
+    us = (time.perf_counter() - t0) * 1e6
+    rows = []
+    for key, row in rep["sweep"].items():
+        rows.append((
+            f"storage_bench/{key}", us,
+            f"shared_stall={row['shared_switch']['input_stall_s']*1e3:.0f}ms "
+            f"local_stall={row['local_per_tenant']['input_stall_s']*1e3:.0f}ms "
+            f"slowdown={row['contention_slowdown']:.2f}x"))
+    acc = rep["cluster"]["acceptance"]
+    rows.append((
+        "storage_bench/cluster", us,
+        f"shared_stall={acc['shared_stall_s']:.1f}s "
+        f"separate_stall={acc['separate_stall_s']:.1f}s "
+        f"makespan_gap={acc['makespan_gap_s']:.1f}s "
+        f"{'OK' if acc['contention_visible'] else 'FAIL'}"))
+    return rows

@@ -24,6 +24,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.compose import CompositionError, ComposedSystem
 from repro.core.topology import Device, DevicePool, LeaseError, LinkClass
+from repro.data.storage import StoragePool, StorageTranche
 
 # bandwidth ordering used to pick the "worst" link a span needs
 _LINK_RANK = {LinkClass.LOCAL: 0, LinkClass.SWITCH: 1, LinkClass.HOST: 2,
@@ -137,6 +138,35 @@ def plan_placement(pool: DevicePool, dp: int, tp: int,
                          tuple(sorted(fabrics, key=_LINK_RANK.get)), note)
 
 
+def plan_tranche(storage: StoragePool, *, capacity_bytes: float = 0.0,
+                 prefer_domain: Optional[int] = None) -> StorageTranche:
+    """Choose the NVMe tranche a new tenant should attach.
+
+    Mirrors ``plan_placement``'s locality preference on the storage axis:
+    an *idle* local tranche in the placement's domain first (the paper's
+    localNVMe), then any idle local, then an idle switch-attached one,
+    and only then the least-contended shared tranche — co-location splits
+    bandwidth, so it is the placement of last resort.  Raises
+    ``CompositionError`` when no tranche has the capacity headroom.
+    """
+    def fits(t: StorageTranche) -> bool:
+        return (not storage.exclusively_held(t.name)
+                and storage.capacity_used(t.name) + capacity_bytes
+                <= t.capacity_bytes)
+
+    candidates = [t for t in storage.tranches.values() if fits(t)]
+    if not candidates:
+        raise CompositionError(
+            f"no tranche can host {capacity_bytes / 1e9:.1f} GB "
+            f"({len(storage.tranches)} tranches, all full or "
+            "exclusively held)")
+    return min(candidates, key=lambda t: (
+        storage.n_lessees(t.name),                       # idle first
+        _LINK_RANK[t.attach],                            # local fabric
+        t.domain != prefer_domain if prefer_domain is not None else False,
+        t.name))                                         # deterministic
+
+
 # ---------------------------------------------------------------------------
 # lease lifecycle bookkeeping (job-facing view over DevicePool.leases)
 # ---------------------------------------------------------------------------
@@ -153,11 +183,16 @@ class LeaseManager:
 
     ``compose()`` performs the actual claim inside the pool; the manager
     records who holds what since when, counts conflicts (claims that
-    raised), and answers utilization queries for telemetry.
+    raised), and answers utilization queries for telemetry.  When built
+    with a ``StoragePool``, NVMe tranches are pooled alongside devices:
+    ``acquire_tranche`` attaches a holder, and ``release`` frees the
+    holder's devices *and* storage in one call.
     """
 
-    def __init__(self, pool: DevicePool):
+    def __init__(self, pool: DevicePool,
+                 storage: Optional[StoragePool] = None):
         self.pool = pool
+        self.storage = storage
         self._leases: Dict[int, Lease] = {}      # lease_id -> Lease; a
         self._next_id = 0                        # holder may hold several
         self.conflicts = 0
@@ -185,8 +220,22 @@ class LeaseManager:
         self.pool.lease(uids, holder)
         return self._record(holder, tuple(uids), now)
 
+    def acquire_tranche(self, holder: str, tranche: str, *,
+                        capacity_bytes: float = 0.0,
+                        now: float = 0.0):
+        """Attach ``holder`` to an NVMe tranche (requires a storage pool);
+        double-claims raise ``CompositionError`` inside the pool."""
+        if self.storage is None:
+            raise CompositionError(
+                "LeaseManager has no StoragePool; cannot lease tranche "
+                f"{tranche!r}")
+        return self.storage.lease(tranche, holder,
+                                  capacity_bytes=capacity_bytes, now=now)
+
     def release(self, holder: str) -> List[int]:
         self.forget(holder)
+        if self.storage is not None:
+            self.storage.release(holder)
         return self.pool.release_holder(holder)
 
     def forget(self, holder: str) -> None:
@@ -216,7 +265,8 @@ class LeaseManager:
         return leased_healthy / healthy
 
     def check_exclusive(self) -> None:
-        """Invariant: every lease's uids are disjoint and pool-backed."""
+        """Invariant: every lease's uids are disjoint and pool-backed;
+        the storage pool (when present) is never oversubscribed."""
         seen: Dict[int, str] = {}
         for lease in self._leases.values():
             for u in lease.uids:
@@ -225,3 +275,5 @@ class LeaseManager:
                         f"uid {u} held by both {seen[u]!r} and "
                         f"{lease.holder!r}")
                 seen[u] = lease.holder
+        if self.storage is not None:
+            self.storage.check_invariants()

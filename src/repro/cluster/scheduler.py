@@ -31,7 +31,7 @@ import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.cluster.lease import (LeaseManager, derive_axis_links,
-                                 plan_placement)
+                                 plan_placement, plan_tranche)
 from repro.cluster.telemetry import Telemetry
 from repro.configs import get_config
 from repro.configs.base import SHAPES
@@ -39,6 +39,9 @@ from repro.core import recommend
 from repro.core.compose import (ComposedSystem, CompositionError, compose,
                                 release)
 from repro.core.topology import DevicePool, LinkClass
+from repro.data.pipeline import (IOWorkload, StorageModel, lm_io_workload,
+                                 workload_stall)
+from repro.data.storage import StoragePool, make_storage_pool
 from repro.train import elastic
 
 QUEUED, RUNNING, DONE, REJECTED = "queued", "running", "done", "rejected"
@@ -67,6 +70,11 @@ class Job:
     recompositions: int = 0
     epoch: int = 0                   # bumped on every shape change/preempt
     why_rejected: str = ""
+    # storage: the job's I/O shape (defaulted from the arch/shape cell at
+    # submit) and the contended input stall on its leased tranche (updated
+    # by the scheduler as co-tenants come and go)
+    io: Optional[IOWorkload] = None
+    input_stall_s: float = 0.0
 
     @property
     def kind(self) -> str:
@@ -79,8 +87,14 @@ class Job:
 
     @property
     def step_s(self) -> float:
+        """Effective step time: the CalibratedCost-priced plan step plus
+        the contended input stall of the job's storage tranche."""
         assert self.plan is not None
-        return self.plan.step_s
+        return self.plan.step_s + self.input_stall_s
+
+    @property
+    def tranche(self) -> Optional[str]:
+        return self.system.tranche if self.system is not None else None
 
     def remaining_steps(self) -> float:
         return max(0.0, self.steps - self.steps_done)
@@ -149,7 +163,8 @@ class Scheduler:
     """Priority-FIFO + EASY-backfill scheduler with elastic failure handling."""
 
     def __init__(self, pool: DevicePool, telemetry: Optional[Telemetry] = None,
-                 backfill: bool = True, calibration=None):
+                 backfill: bool = True, calibration=None,
+                 storage: Optional[StoragePool] = None):
         self.pool = pool
         self.telemetry = telemetry or Telemetry(len(pool.devices))
         self.backfill = backfill
@@ -158,11 +173,22 @@ class Scheduler:
         # None defers to recommend.get_calibration() at use time, so a
         # later set_calibration() reaches already-built schedulers.
         self._calibration = calibration
-        self.manager = LeaseManager(pool)
+        # storage tranches are first-class: every started job holds one
+        # (admission-to-run requires the lease; see _start)
+        self.storage = storage if storage is not None else \
+            make_storage_pool(links=pool.links)
+        self.manager = LeaseManager(pool, self.storage)
         self.queue: List[Job] = []
         self.running: List[Job] = []
         self.done: List[Job] = []
         self.rejected: List[Job] = []
+        # jobs whose contended input stall changed while running, keyed by
+        # name with the stall value before the FIRST undrained change —
+        # the simulator drains this to re-schedule completion events (the
+        # old stall prices progress already made).  Keyed (not a list) so
+        # it stays bounded by the running set even when nothing drains it;
+        # entries are dropped when a job stops running.
+        self.stall_dirty: Dict[str, Tuple[Job, float]] = {}
 
     @property
     def calibration(self):
@@ -225,10 +251,25 @@ class Scheduler:
         self.telemetry.jobs_submitted += 1
         job.submit_t = now
         job.queued_t = now
+        if job.io is None:
+            job.io = lm_io_workload(get_config(job.arch),
+                                    SHAPES[job.shape_name])
+        max_tranche = max((t.capacity_bytes
+                           for t in self.storage.tranches.values()),
+                          default=0.0)
         if job.n_chips > len(self.pool.devices):
             job.state = REJECTED
             job.why_rejected = (f"requests {job.n_chips} chips; pool has "
                                 f"{len(self.pool.devices)}")
+        elif self._storage_request(job) > max_tranche:
+            # a dataset no tranche can EVER host must reject at submit,
+            # not livelock at the head of the queue raising storage
+            # conflicts on every poll
+            job.state = REJECTED
+            job.why_rejected = (
+                f"dataset {self._storage_request(job) / 1e12:.2f} TB "
+                f"exceeds every tranche (largest "
+                f"{max_tranche / 1e12:.2f} TB)")
         else:
             cands = self._candidates_for(job)
             plan = self._best(cands)
@@ -250,13 +291,26 @@ class Scheduler:
         return True
 
     # ------------------------------------------------------------- start --
+    def _storage_request(self, job: Job) -> float:
+        return job.io.dataset_bytes() if job.io is not None else 0.0
+
     def _start(self, job: Job, now: float) -> bool:
         dp, tp = job.dp_tp
         try:
             plan = plan_placement(self.pool, dp, tp)
+            # a composition is devices + storage: running requires an NVMe
+            # tranche lease alongside the chip claim, placed local-first
+            # (plan_tranche) and claimed atomically inside compose()
+            domain = {d.uid: d.domain for d in self.pool.devices}[
+                plan.uids[0]]
+            tranche = plan_tranche(
+                self.storage, capacity_bytes=self._storage_request(job),
+                prefer_domain=domain)
             job.system = compose(
                 self.pool, job.name, ("data", "model"), (dp, tp),
-                plan.axis_links, uids=plan.uids)
+                plan.axis_links, uids=plan.uids,
+                storage_pool=self.storage, tranche=tranche.name,
+                storage_capacity=self._storage_request(job))
         except CompositionError as e:
             # capacity was checked before calling; reaching here means a
             # genuine claim conflict — count it and leave the job queued
@@ -271,16 +325,50 @@ class Scheduler:
         job.progress_t = now
         job.run = elastic.ElasticRun(job.system, ckpt_dir="")
         self.running.append(job)
+        st = self.telemetry.tranche_stats(tranche.name, tranche.attach.value)
+        st.leases_granted += 1
+        self.update_stalls()
         # wait = time spent in the queue since the last (re)queueing; run
         # time before a preemption is not wait
         self.telemetry.job_waited(now - job.queued_t)
         detail = (f"mesh={dp}x{tp} links=" +
                   ",".join(f"{a}:{c.value}"
                            for a, c in job.system.fabric.axis_links.items()))
+        detail += (f" tranche={tranche.name}"
+                   f"({self.storage.n_lessees(tranche.name)} lessees)")
         if isinstance(job, ServeJob):
             detail += f" serve={job.tokens_per_s:.0f}tok/s"
         self.telemetry.log(now, "start", job.name, detail)
         return True
+
+    # ----------------------------------------------------- storage stalls --
+    def stall_for(self, job: Job) -> float:
+        """Contended per-step input stall of ``job`` on its tranche."""
+        if (job.io is None or job.system is None
+                or job.system.tranche is None):
+            return 0.0
+        model = StorageModel.for_tranche(self.storage, job.system.tranche)
+        return workload_stall(job.io, model, job.plan.step_s)
+
+    def update_stalls(self) -> List[Job]:
+        """Re-derive every running job's input stall under the current
+        tranche contention; jobs whose stall changed are queued on
+        ``stall_dirty`` (drained by the simulator to re-schedule their
+        completion events) and returned."""
+        changed: List[Job] = []
+        for job in self.running:
+            stall = self.stall_for(job)
+            if abs(stall - job.input_stall_s) > 1e-12:
+                self.stall_dirty.setdefault(job.name,
+                                            (job, job.input_stall_s))
+                job.input_stall_s = stall
+                changed.append(job)
+        return changed
+
+    def drain_stall_dirty(self) -> List[Tuple[Job, float]]:
+        out = list(self.stall_dirty.values())
+        self.stall_dirty.clear()
+        return out
 
     # ---------------------------------------------------------- schedule --
     def _sorted_queue(self) -> List[Job]:
@@ -333,7 +421,9 @@ class Scheduler:
         self.running.remove(job)
         self.done.append(job)
         release(self.pool, job.system)
-        self.manager.release(job.name)
+        self.manager.release(job.name)       # devices + storage tranche
+        self.stall_dirty.pop(job.name, None)
+        self.update_stalls()                 # co-tenants speed back up
         self.telemetry.jobs_completed += 1
         self.telemetry.log(now, "complete", job.name,
                            f"ran {now - job.start_t:.1f}s")
@@ -411,17 +501,21 @@ class Scheduler:
             self.telemetry.log(
                 now, "recompose", job.name,
                 f"{old_shape}->{new_sys.axis_sizes} after {len(hit)} loss")
+        self.update_stalls()         # shrunk meshes re-derive their stalls
         return changed
 
     def _preempt(self, job: Job, now: float) -> None:
         """Shrink impossible: release everything and requeue the job."""
         elastic.preempt(job.run, self.pool, step=int(job.steps_done))
-        self.manager.release(job.name)
+        self.manager.release(job.name)       # devices + storage tranche
         self.running.remove(job)
         job.system = None
         job.run = None
         job.state = QUEUED
         job.epoch += 1
+        job.input_stall_s = 0.0
+        self.stall_dirty.pop(job.name, None)
+        self.update_stalls()
         # resume from last "checkpointed" step boundary, re-planned at the
         # original budget (a stale shrunken plan would desync poll()'s
         # n_chips gate from the mesh _start() actually composes)

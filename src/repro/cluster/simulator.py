@@ -39,6 +39,8 @@ from repro.configs import get_config
 from repro.configs.base import SHAPES
 from repro.core import costmodel
 from repro.core.topology import LinkClass, make_pool
+from repro.data.pipeline import IOWorkload
+from repro.data.storage import StoragePool, StorageTranche, make_storage_pool
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +51,9 @@ class JobTemplate:
     n_chips: int
     steps: int
     weight: float = 1.0
+    # explicit I/O shape (None -> lm_io_workload(arch, shape) at submit);
+    # input-heavy mixes use this to stress the storage tranches
+    io: Optional[IOWorkload] = None
 
 
 # A mixed train/serve diet over small-to-mid archs: feasible on modest
@@ -149,6 +154,9 @@ class TraceConfig:
     # serving-trace mode: long-lived ServeJob tenants + request arrivals
     # alongside the batch-job trace (empty tuple = batch-only, unchanged)
     services: Tuple[ServiceConfig, ...] = ()
+    # storage inventory: explicit tranche set, or None for the default
+    # make_storage_pool() (4 local + 2 switch-attached NVMe tranches)
+    storage_tranches: Optional[Tuple[StorageTranche, ...]] = None
 
 
 def restore_overhead_s(job: Job) -> float:
@@ -165,9 +173,16 @@ class ClusterSimulator:
         self.pool = make_pool(n_local=cfg.n_local, n_switch=cfg.n_switch,
                               pods=cfg.pods)
         self.telemetry = Telemetry(len(self.pool.devices))
+        storage = (StoragePool(list(cfg.storage_tranches), self.pool.links)
+                   if cfg.storage_tranches is not None
+                   else make_storage_pool(links=self.pool.links))
         self.scheduler = Scheduler(self.pool, self.telemetry,
                                    backfill=cfg.backfill,
-                                   calibration=cfg.calibration)
+                                   calibration=cfg.calibration,
+                                   storage=storage)
+        # pre-create per-tranche stats so occupancy spans the whole trace
+        for tr in storage.tranches.values():
+            self.telemetry.tranche_stats(tr.name, tr.attach.value)
         self.rng = random.Random(cfg.seed)
         self.jobs: Dict[str, Job] = {}
         self.services: Dict[str, _Service] = {}
@@ -183,6 +198,10 @@ class ClusterSimulator:
         # is then O(#link classes) per event
         self._link_rate: Dict[LinkClass, float] = {}
         self._job_rate: Dict[str, Dict[LinkClass, float]] = {}
+        # per-tranche storage accounting on the same incremental pattern:
+        # tranche -> [read B/s, write B/s, stall s/s] while jobs step
+        self._store_rate: Dict[str, List[float]] = {}
+        self._job_store_rate: Dict[str, Tuple[str, float, float, float]] = {}
         self._accrue_t = 0.0
         self.wall_s = 0.0           # wall-clock of the last run() call
         self.events_per_s = 0.0
@@ -200,7 +219,7 @@ class ClusterSimulator:
             tpl = self.rng.choices(self.cfg.templates, weights=weights)[0]
             job = Job(name=f"job-{i:03d}-{tpl.arch}-{tpl.shape_name}",
                       arch=tpl.arch, shape_name=tpl.shape_name,
-                      n_chips=tpl.n_chips, steps=tpl.steps)
+                      n_chips=tpl.n_chips, steps=tpl.steps, io=tpl.io)
             self.jobs[job.name] = job
             self._push(t, "arrival", job.name)
         for t_fail, n in self.cfg.failures:
@@ -256,33 +275,55 @@ class ClusterSimulator:
     def _rate_on(self, job: Job) -> None:
         self._rate_off(job.name)
         rates = self._job_link_rate(job)
-        if not rates:
-            return
-        self._job_rate[job.name] = rates
-        for link, r in rates.items():
-            self._link_rate[link] = self._link_rate.get(link, 0.0) + r
+        if rates:
+            self._job_rate[job.name] = rates
+            for link, r in rates.items():
+                self._link_rate[link] = self._link_rate.get(link, 0.0) + r
+        if (job.io is not None and job.system is not None
+                and job.system.tranche is not None):
+            step = max(job.step_s, 1e-30)
+            row = (job.system.tranche,
+                   job.io.mean_step_read_bytes() / step,
+                   job.io.mean_step_write_bytes() / step,
+                   job.input_stall_s / step)
+            self._job_store_rate[job.name] = row
+            acc = self._store_rate.setdefault(row[0], [0.0, 0.0, 0.0])
+            for i in range(3):
+                acc[i] += row[1 + i]
 
     def _rate_off(self, name: str) -> None:
         for link, r in self._job_rate.pop(name, {}).items():
             self._link_rate[link] -= r
+        row = self._job_store_rate.pop(name, None)
+        if row is not None:
+            acc = self._store_rate[row[0]]
+            for i in range(3):
+                acc[i] -= row[1 + i]
 
     def _accrue(self, now: float) -> None:
-        """Integrate link traffic up to ``now`` (O(#links), not O(jobs))."""
+        """Integrate link traffic and per-tranche storage I/O up to
+        ``now`` (O(#links + #tranches), not O(jobs))."""
         dt = now - self._accrue_t
         if dt > 0:
             for link, rate in self._link_rate.items():
                 if rate > 0:
                     self.telemetry.add_link_traffic(link, rate * dt)
+            for tranche, (rr, wr, sr) in self._store_rate.items():
+                if rr > 0 or wr > 0 or sr > 0:
+                    self.telemetry.tranche_stats(tranche).add_io(
+                        rr * dt, wr * dt, sr * dt)
         self._accrue_t = max(self._accrue_t, now)
 
-    def _sync_steps(self, job: Job, now: float) -> None:
+    def _sync_steps(self, job: Job, now: float,
+                    step_s: Optional[float] = None) -> None:
         """Bring one job's ``steps_done`` up to ``now`` (lazy: called only
         when an event actually needs the figure — checkpoint on failure,
-        preemption, shrink re-planning)."""
+        preemption, shrink re-planning).  ``step_s`` overrides the job's
+        current rate (used when a stall change already overwrote it)."""
         t0 = max(job.progress_t, job.start_t)
         if now <= t0:
             return
-        d_steps = min((now - t0) / max(job.step_s, 1e-30),
+        d_steps = min((now - t0) / max(step_s or job.step_s, 1e-30),
                       job.remaining_steps())
         job.steps_done += d_steps
         job.progress_t = now
@@ -292,6 +333,10 @@ class ClusterSimulator:
             now, n_leased=len(self.pool.leases),
             busy_equiv=self.scheduler.busy_equiv(),
             n_healthy=len(self.pool.healthy()))
+        storage = self.scheduler.storage
+        for name in storage.tranches:
+            self.telemetry.tranche_stats(name).observe(
+                now, storage.n_lessees(name))
 
     def _schedule_completion(self, job: Job, now: float,
                              overhead: float = 0.0) -> None:
@@ -306,13 +351,37 @@ class ClusterSimulator:
                    (job.name, job.epoch))
 
     def _start_newly_scheduled(self, now: float) -> None:
-        for job in self.scheduler.poll(now):
+        started = self.scheduler.poll(now)
+        for job in started:
             if isinstance(job, ServeJob):
                 self._replica_started(job, now)
                 continue
             # a preempted job resuming from a checkpoint pays the restore
             overhead = restore_overhead_s(job)
             self._schedule_completion(job, now, overhead)
+        self._resync_stalls(now, exclude={j.name for j in started})
+
+    def _resync_stalls(self, now: float, exclude=frozenset()) -> None:
+        """Tranche contention changed: re-schedule the completion of every
+        running job whose input stall moved.  Progress already made is
+        accrued at the *old* effective step time; the remaining steps are
+        re-priced at the new one.  Jobs in ``exclude`` just had their
+        events (re)scheduled by the caller and are skipped."""
+        for job, old_stall in self.scheduler.drain_stall_dirty():
+            if job.name in exclude or job.state != RUNNING:
+                continue
+            if isinstance(job, ServeJob):
+                # no completion event to move — refresh the rate row so
+                # traffic/stall accrual follows the new contention (the
+                # per-request pricing reads job.step_s live)
+                self._rate_off(job.name)
+                self._push(now, "rate", (job.name, job.epoch))
+                continue
+            self._sync_steps(job, now,
+                             step_s=job.plan.step_s + old_stall)
+            self._rate_off(job.name)
+            job.epoch += 1           # invalidates the stale completion
+            self._schedule_completion(job, now)
 
     # ------------------------------------------------------------- serving --
     def _replica_started(self, job: ServeJob, now: float) -> None:
@@ -488,6 +557,9 @@ class ClusterSimulator:
                     elif job.state == RUNNING:    # shrunk in place
                         self._schedule_completion(
                             job, now, restore_overhead_s(job))
+                # changed jobs were just rescheduled (restore overhead
+                # included); only their co-tenants need a stall resync
+                self._resync_stalls(now, exclude={j.name for j in changed})
                 self._push(now + self.cfg.repair_after_s, "repair", down)
                 self._start_newly_scheduled(now)
             elif kind == "repair":

@@ -31,7 +31,7 @@ from typing import Dict, List, Optional
 from repro.core.topology import LinkClass
 
 EVENT_KINDS = ("submit", "reject", "start", "complete", "fail", "repair",
-               "recompose", "preempt", "conflict")
+               "recompose", "preempt", "conflict", "storage")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,6 +125,64 @@ class ServingStats:
         }
 
 
+class StorageStats:
+    """Per-tranche storage telemetry: time-weighted lessee occupancy,
+    bytes moved, and accumulated input-stall seconds — the MLPerf-Storage
+    view (AU degradation comes exactly from these stalls) lifted to the
+    tranche the jobs actually lease."""
+
+    def __init__(self, name: str, attach: str = ""):
+        self.name = name
+        self.attach = attach
+        self.read_bytes = 0.0
+        self.write_bytes = 0.0
+        self.stall_s = 0.0              # input-stall seconds across tenants
+        self.leases_granted = 0
+        self.peak_lessees = 0
+        # time-weighted lessee integral
+        self._t: Optional[float] = None
+        self._t0: Optional[float] = None
+        self._n = 0
+        self._lessee_area = 0.0         # lessee-seconds
+
+    def observe(self, t: float, n_lessees: int) -> None:
+        if self._t is None:
+            self._t = self._t0 = t
+        dt = t - self._t
+        if dt > 0:
+            self._lessee_area += dt * self._n
+            self._t = t
+        self._n = n_lessees
+        self.peak_lessees = max(self.peak_lessees, n_lessees)
+
+    def add_io(self, read_bytes: float = 0.0, write_bytes: float = 0.0,
+               stall_s: float = 0.0) -> None:
+        self.read_bytes += read_bytes
+        self.write_bytes += write_bytes
+        self.stall_s += stall_s
+
+    @property
+    def span_s(self) -> float:
+        if self._t is None or self._t0 is None:
+            return 0.0
+        return self._t - self._t0
+
+    def mean_lessees(self) -> float:
+        span = self.span_s
+        return self._lessee_area / span if span > 0 else 0.0
+
+    def report(self) -> Dict[str, object]:
+        return {
+            "attach": self.attach,
+            "leases_granted": self.leases_granted,
+            "peak_lessees": self.peak_lessees,
+            "mean_lessees": self.mean_lessees(),
+            "read_gb": self.read_bytes / 1e9,
+            "write_gb": self.write_bytes / 1e9,
+            "input_stall_s": self.stall_s,
+        }
+
+
 class Telemetry:
     """Integrates occupancy over simulated time and accumulates counters."""
 
@@ -141,6 +199,7 @@ class Telemetry:
         self.jobs_completed = 0
         self.jobs_rejected = 0
         self.jobs_preempted = 0
+        self.storage: Dict[str, StorageStats] = {}   # tranche -> stats
         # time-weighted integrals
         self._t: Optional[float] = None
         self._t0: Optional[float] = None
@@ -187,6 +246,12 @@ class Telemetry:
     def add_recomposition(self, overhead_s: float) -> None:
         self.recompositions += 1
         self.recompose_overhead_s += overhead_s
+
+    def tranche_stats(self, name: str, attach: str = "") -> StorageStats:
+        st = self.storage.get(name)
+        if st is None:
+            st = self.storage[name] = StorageStats(name, attach)
+        return st
 
     # -------------------------------------------------------------- report --
     @property
@@ -238,4 +303,6 @@ class Telemetry:
             },
             "lease_conflicts": self.lease_conflicts,
             "n_events": len(self.events),
+            "storage": {name: st.report()
+                        for name, st in sorted(self.storage.items())},
         }

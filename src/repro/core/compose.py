@@ -41,6 +41,9 @@ class ComposedSystem:
     fabric: FabricSpec
     device_uids: Tuple[int, ...] = ()
     chip: ChipSpec = ChipSpec()
+    # storage tranche leased with this composition (None = legacy static
+    # tier pricing only; see repro.data.storage)
+    tranche: Optional[str] = None
 
     # ------------------------------------------------------------ derived --
     @property
@@ -107,7 +110,9 @@ def compose(pool: DevicePool, name: str,
             axis_links: Mapping[str, LinkClass],
             storage: StorageSpec = LOCAL_NVME,
             prefer_fabric: Optional[LinkClass] = None,
-            uids: Optional[Sequence[int]] = None) -> ComposedSystem:
+            uids: Optional[Sequence[int]] = None,
+            storage_pool=None, tranche: Optional[str] = None,
+            storage_capacity: float = 0.0) -> ComposedSystem:
     """Claim devices from the pool and build a ComposedSystem.
 
     Devices are taken domain-major so that the *innermost* (fastest-varying)
@@ -123,6 +128,12 @@ def compose(pool: DevicePool, name: str,
     ``uids``: explicit device selection (e.g. from
     ``repro.cluster.lease.plan_placement``) — claimed verbatim, so the
     caller's placement decision is exactly what the lease records.
+
+    ``storage_pool``/``tranche``: a composition is devices **plus**
+    storage.  When given, the named NVMe tranche (``repro.data.storage``)
+    is leased under the composition's name — atomically with the device
+    claim: a storage conflict rolls the device lease back — and the
+    fabric's storage tier is priced from that tranche.
     """
     n = int(np.prod(list(axis_sizes)))
     free = pool.available()
@@ -157,14 +168,26 @@ def compose(pool: DevicePool, name: str,
         pool.lease(claimed, name)
     except LeaseError as e:              # e.g. duplicate uids in `uids`
         raise CompositionError(str(e)) from e
+    if storage_pool is not None and tranche is not None:
+        try:
+            storage_pool.lease(tranche, name,
+                               capacity_bytes=storage_capacity)
+        except CompositionError:
+            pool.release(claimed)        # atomic: no half-composition
+            raise
+        storage = storage_pool.tranches[tranche].spec()
     fabric = FabricSpec(dict(axis_links), dict(pool.links), storage)
     return ComposedSystem(name, tuple(axis_names), tuple(axis_sizes),
-                          fabric, claimed)
+                          fabric, claimed, tranche=tranche)
 
 
-def release(pool: DevicePool, system: ComposedSystem) -> None:
-    """Return ``system``'s devices to the pool (job finished / preempted)."""
+def release(pool: DevicePool, system: ComposedSystem,
+            storage_pool=None) -> None:
+    """Return ``system``'s devices (and, when ``storage_pool`` is given,
+    its storage tranche) to the pool (job finished / preempted)."""
     pool.release(system.device_uids)
+    if storage_pool is not None:
+        storage_pool.release(system.name)
 
 
 def recompose(pool: DevicePool, system: ComposedSystem, *,
@@ -175,7 +198,8 @@ def recompose(pool: DevicePool, system: ComposedSystem, *,
 
     This is the paper's dynamic re-allocation: the logical machine is
     re-formed from whatever healthy devices remain; training resumes from
-    the latest checkpoint (see ``repro.train.elastic``).
+    the latest checkpoint (see ``repro.train.elastic``).  The storage
+    tranche lease (held by name) survives the recompose untouched.
     """
     sizes = tuple(axis_sizes or system.axis_sizes)
     links = dict(axis_links or system.fabric.axis_links)
@@ -186,7 +210,8 @@ def recompose(pool: DevicePool, system: ComposedSystem, *,
     old = [u for u in system.device_uids if pool.leases.get(u) == system.name]
     pool.release(old)
     try:
-        return compose(pool, system.name, system.axis_names, sizes, links, st)
+        return compose(pool, system.name, system.axis_names, sizes, links,
+                       st, tranche=system.tranche)
     except CompositionError:
         present = {d.uid for d in pool.devices}
         pool.lease([u for u in old if u in present], system.name)

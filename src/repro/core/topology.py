@@ -89,6 +89,15 @@ class ChipSpec:
     vmem_bytes: float = 128 * 2 ** 20
 
 
+def partitioned_bw(device_bw: float, link: LinkSpec,
+                   n_lessees: int = 1) -> float:
+    """Per-lessee storage bandwidth: the device's sustained rate, capped
+    by its attach fabric, split equally across concurrent lessees.  The
+    single sharing formula used by ``StorageSpec``, ``StorageTranche``
+    (repro.data.storage) and ``StorageModel`` (repro.data.pipeline)."""
+    return min(device_bw, link.bandwidth) / max(1, n_lessees)
+
+
 @dataclasses.dataclass(frozen=True)
 class StorageSpec:
     """A storage tier (the paper's local vs falcon-attached NVMe)."""
@@ -98,7 +107,7 @@ class StorageSpec:
 
     def effective_read_bw(self, links: Mapping[LinkClass, LinkSpec]) -> float:
         """Read bandwidth after the attach fabric's ceiling."""
-        return min(self.read_bw, links[self.attach].bandwidth)
+        return partitioned_bw(self.read_bw, links[self.attach])
 
 
 # NVMe constants: 4TB enterprise NVMe ~3.2 GB/s sequential read (paper's

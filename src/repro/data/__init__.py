@@ -1,2 +1,6 @@
-from repro.data.pipeline import (Prefetcher, StorageModel,  # noqa: F401
-                                 SyntheticDataset, input_stall, make_batch)
+from repro.data.pipeline import (IOTraceGenerator, IOWorkload,  # noqa: F401
+                                 IO_WORKLOADS, Prefetcher, StorageModel,
+                                 SyntheticDataset, input_stall,
+                                 lm_io_workload, make_batch, workload_stall)
+from repro.data.storage import (StorageLease, StoragePool,  # noqa: F401
+                                StorageTranche, make_storage_pool)

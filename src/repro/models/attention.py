@@ -661,28 +661,53 @@ def apply_attention(params, x, cfg: ModelConfig, *, local: bool,
     new_cache = None
     if cache == "init":
         new_cache = build_cache_from_prefill(
-            k, v, positions, window=window, capacity=cache_capacity)
+            k, v, positions, window=window, capacity=cache_capacity,
+            kv_mask=kv_mask)
     return out, new_cache
 
 
 def build_cache_from_prefill(k, v, positions, *, window: int,
-                             capacity: int = 0):
+                             capacity: int = 0, kv_mask=None):
     """Turn prefill K/V into a decode cache.
 
     Full attention: cache slot = absolute position (capacity >= S + decode
     budget). Local attention: ring buffer of size ``window``; slot = pos %
     window (matching the decode-side write rule).
+
+    ``kv_mask`` (B, S) bool, True = real token (pow2-bucketed prefill):
+    right-padded entries must not enter the cache.  Full caches mark the
+    padded slots empty (``pos = -1``); ring caches gather the last
+    ``window`` *real* tokens per batch row instead of the array tail —
+    the tail itself is padding, and a masked scatter at ``-1 % W`` would
+    clobber a live slot.
     """
     B, S = k.shape[0], k.shape[1]
-    pos = jnp.broadcast_to(positions, (B, S))
+    pos = jnp.broadcast_to(positions, (B, S)).astype(jnp.int32)
     if window > 0:
         W = window
+        if kv_mask is not None:
+            # slot w holds the newest real index p ≡ w (mod W); per-batch
+            # lengths make this a gather, matching the decode write rule
+            L = kv_mask.astype(jnp.int32).sum(axis=1)          # (B,)
+            w_ids = jnp.arange(W)[None, :]                      # (1, W)
+            p = (L[:, None] - 1) - ((L[:, None] - 1 - w_ids) % W)
+            valid = p >= 0
+            pc = jnp.clip(p, 0)
+            gather = lambda a: jnp.take_along_axis(
+                a, pc.reshape(B, W, *([1] * (a.ndim - 2))), axis=1)
+            cache_k = jnp.where(valid.reshape(B, W, 1, 1), gather(k), 0)
+            cache_v = jnp.where(valid.reshape(B, W, 1, 1), gather(v), 0)
+            cache_p = jnp.where(valid, jnp.take_along_axis(pos, pc, 1), -1)
+            return {"k": cache_k.astype(k.dtype),
+                    "v": cache_v.astype(v.dtype), "pos": cache_p}
         m = min(S, W)
         slots = (jnp.arange(S - m, S) % W)
         cache_k = jnp.zeros((B, W) + k.shape[2:], k.dtype).at[:, slots].set(k[:, -m:])
         cache_v = jnp.zeros((B, W) + v.shape[2:], v.dtype).at[:, slots].set(v[:, -m:])
         cache_p = jnp.full((B, W), -1, jnp.int32).at[:, slots].set(pos[:, -m:])
         return {"k": cache_k, "v": cache_v, "pos": cache_p}
+    if kv_mask is not None:
+        pos = jnp.where(kv_mask, pos, -1)       # padded slots stay empty
     cap = max(capacity, S)
     if cap == S:
         return {"k": k, "v": v, "pos": pos.astype(jnp.int32)}

@@ -168,19 +168,31 @@ def rglru_decode_step(log_a, gated, h):
 
 def apply_rglru(params, x, cfg: ModelConfig, *, compute_dtype=jnp.bfloat16,
                 cache: Optional[dict] = None, build_cache: bool = False,
-                batch_axes=(), model_axis=None):
+                batch_axes=(), model_axis=None, token_mask=None):
     """x (B,S,d_model) -> (y, new_cache|None).
 
     cache = {"conv": (B,K-1,W), "state": (B,W) fp32}.
+    ``token_mask`` (B,S) bool, True = real token: right-padded positions
+    become identity recurrence steps (a = 1, input contribution 0), so
+    the cached state is exactly the state after the last real token; the
+    conv cache is rebuilt from the true tail.
     """
     r = cfg.rglru
     cd = compute_dtype
     gate = jax.nn.gelu(x.astype(cd) @ params["in_gate"].astype(cd))
     rec = x.astype(cd) @ params["in_rec"].astype(cd)
+    lengths = None
+    if token_mask is not None and cache is None:
+        lengths = token_mask.astype(jnp.int32).sum(axis=1)
     conv_cache = cache["conv"] if cache is not None else None
-    rec, new_conv = causal_conv1d(rec, params["conv_w"], cache=conv_cache)
+    rec, new_conv = causal_conv1d(rec, params["conv_w"], cache=conv_cache,
+                                  length=lengths)
     rec = rec + params["conv_b"].astype(rec.dtype)
     log_a, gated = rglru_gates(params, rec, r.c, batch_axes, model_axis)
+    if lengths is not None:
+        keep = token_mask[:, :, None]
+        log_a = jnp.where(keep, log_a, 0.0)    # a = 1: state unchanged
+        gated = jnp.where(keep, gated, 0.0)    # no padded input folded in
 
     if cache is not None:
         h = rglru_decode_step(log_a[:, 0], gated[:, 0], cache["state"])

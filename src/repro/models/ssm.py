@@ -172,7 +172,7 @@ def ssd_decode_step(x, dt, A, Bm, Cm, h):
 # ---------------------------------------------------------------------------
 # causal depthwise conv1d (+ cache)
 # ---------------------------------------------------------------------------
-def causal_conv1d(x, w, cache=None):
+def causal_conv1d(x, w, cache=None, length=None):
     """x (B, S, C); w (K, C) depthwise. Returns (y, new_cache (B,K-1,C)).
 
     Implemented as K shift-and-multiply taps rather than
@@ -183,6 +183,12 @@ def causal_conv1d(x, w, cache=None):
     spurious all-reduce on the 16x16 mesh).  K static slices + FMAs are
     elementwise ops GSPMD shards perfectly, and at K=4 they cost the same
     FLOPs the conv would.
+
+    ``length`` (B,) int32: real (unpadded) sequence lengths.  When given,
+    ``new_cache`` holds the K-1 inputs *preceding position length* rather
+    than the tail of the (possibly right-padded) array — required by the
+    pow2-bucketed prefill, whose padded columns must not leak into the
+    decode-side conv state.
     """
     K = w.shape[0]
     S = x.shape[1]
@@ -195,7 +201,14 @@ def causal_conv1d(x, w, cache=None):
         tap = jax.lax.slice_in_dim(x_pad, j, j + S, axis=1) \
             * w[j].astype(x.dtype)
         y = tap if y is None else y + tap
-    new_cache = x_pad[:, -(K - 1):] if K > 1 else None
+    if K <= 1:
+        return y, None
+    if length is None:
+        return y, x_pad[:, -(K - 1):]
+    # x_pad index of real position p is p + K - 1, so the tail inputs at
+    # positions [length-K+1, length-1] sit at x_pad[length .. length+K-2]
+    idx = length[:, None] + jnp.arange(K - 1)[None, :]
+    new_cache = jnp.take_along_axis(x_pad, idx[:, :, None], axis=1)
     return y, new_cache
 
 
@@ -239,10 +252,14 @@ def init_ssm(key, cfg: ModelConfig, dtype=jnp.float32):
 
 def apply_ssm(params, x, cfg: ModelConfig, *, compute_dtype=jnp.bfloat16,
               cache: Optional[dict] = None, build_cache: bool = False,
-              pctx=None):
+              pctx=None, token_mask=None):
     """x (B,S,d_model) -> (y, new_cache|None).
 
     cache = {"conv_x"/"conv_b"/"conv_c": (B,K-1,*), "state": (B,H,N,P)}.
+    ``token_mask`` (B,S) bool, True = real token: right-padded positions
+    get dt = 0 (decay 1, zero input — state passes through unchanged, the
+    same trick ``ssd_chunked`` uses for its own chunk padding), and the
+    conv caches are rebuilt from the true tail.
     """
     s = cfg.ssm
     cd = compute_dtype
@@ -258,12 +275,19 @@ def apply_ssm(params, x, cfg: ModelConfig, *, compute_dtype=jnp.bfloat16,
     cs = xc @ params["in_c"].astype(cd)
     dt = xc @ params["in_dt"].astype(cd)
 
+    lengths = None
+    if token_mask is not None and cache is None:
+        lengths = token_mask.astype(jnp.int32).sum(axis=1)
+
     cx = cache["conv_x"] if cache is not None else None
     cb = cache["conv_b"] if cache is not None else None
     cc = cache["conv_c"] if cache is not None else None
-    xs, ncx = causal_conv1d(xs, params["conv_x_w"], cache=cx)
-    bs, ncb = causal_conv1d(bs, params["conv_b_w"], cache=cb)
-    cs, ncc = causal_conv1d(cs, params["conv_c_w"], cache=cc)
+    xs, ncx = causal_conv1d(xs, params["conv_x_w"], cache=cx,
+                            length=lengths)
+    bs, ncb = causal_conv1d(bs, params["conv_b_w"], cache=cb,
+                            length=lengths)
+    cs, ncc = causal_conv1d(cs, params["conv_c_w"], cache=cc,
+                            length=lengths)
     xs = jax.nn.silu(xs + params["conv_x_b"].astype(xs.dtype))
     bs = jax.nn.silu(bs + params["conv_b_b"].astype(bs.dtype))
     cs = jax.nn.silu(cs + params["conv_c_b"].astype(cs.dtype))
@@ -272,6 +296,8 @@ def apply_ssm(params, x, cfg: ModelConfig, *, compute_dtype=jnp.bfloat16,
     Bm = bs.reshape(B, S, s.n_groups, s.d_state)
     Cm = cs.reshape(B, S, s.n_groups, s.d_state)
     dtv = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    if lengths is not None:
+        dtv = jnp.where(token_mask[:, :, None], dtv, 0.0)
     A = -jnp.exp(params["A_log"])
 
     if cache is not None:

@@ -117,7 +117,8 @@ def apply_block(p, x, blk: str, cfg: ModelConfig, ctx: RunCtx, *,
         mix, new_cache = ssm.apply_ssm(
             p["ssm"], h, cfg, compute_dtype=cd, cache=(
                 cache if isinstance(cache, dict) else None),
-            build_cache=(cache == "init"), pctx=ctx.pctx)
+            build_cache=(cache == "init"), pctx=ctx.pctx,
+            token_mask=kv_mask)
     elif blk == RGLRU:
         has_mesh = ctx.pctx.mesh is not None
         mix, new_cache = rglru.apply_rglru(
@@ -125,7 +126,8 @@ def apply_block(p, x, blk: str, cfg: ModelConfig, ctx: RunCtx, *,
                 cache if isinstance(cache, dict) else None),
             build_cache=(cache == "init"),
             batch_axes=(tuple(ctx.pctx.dp_axes) if has_mesh else ()),
-            model_axis=(ctx.pctx.tp_axis if has_mesh else None))
+            model_axis=(ctx.pctx.tp_axis if has_mesh else None),
+            token_mask=kv_mask)
     else:
         raise ValueError(blk)
 

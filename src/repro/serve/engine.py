@@ -51,11 +51,20 @@ from repro.train.trainer import make_run_ctx
 # step builders (jit-able; used by launch.dryrun and ServeEngine)
 # ---------------------------------------------------------------------------
 def make_prefill_step(cfg: ModelConfig, policy: PolicyConfig, *,
-                      cache_capacity: int, mesh=None) -> Callable:
+                      cache_capacity: int, mesh=None,
+                      bucketed: bool = False) -> Callable:
     """prefill(params, tokens) -> (last-token logits, caches).
 
     The attention tiles come from the tuned-config registry keyed by the
-    prefill length (= cache capacity); defaults on a registry miss."""
+    prefill length (= cache capacity); defaults on a registry miss.
+
+    ``bucketed=True`` returns ``prefill(params, tokens, length)`` for
+    pow2-padded prompts: ``tokens`` (B, S_bucket) right-padded, ``length``
+    (B,) int32 real lengths.  Padded columns are masked end to end —
+    attention caches mark them empty, recurrent/SSM state passes through
+    them unchanged — and the logits are read at ``length - 1``, so one
+    trace serves every prompt length in the bucket.
+    """
     ctx = dataclasses.replace(
         make_run_ctx(cfg, policy, mesh, seq_len=cache_capacity),
         cache_capacity=cache_capacity)
@@ -69,7 +78,20 @@ def make_prefill_step(cfg: ModelConfig, policy: PolicyConfig, *,
                @ logits.astype(ctx.compute_dtype).T)
         return out, caches
 
-    return prefill
+    def prefill_bucketed(params, tokens, length):
+        B, S = tokens.shape[0], tokens.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        mask = positions < length[:, None]
+        hidden, caches, _ = lm.forward(params, tokens, cfg, ctx,
+                                       positions=positions, caches="init",
+                                       kv_mask=mask, return_hidden=True)
+        last = hidden[jnp.arange(B), length - 1][:, None]
+        logits = lm.head_table(params, cfg)
+        out = (last.astype(ctx.compute_dtype)
+               @ logits.astype(ctx.compute_dtype).T)
+        return out, caches
+
+    return prefill_bucketed if bucketed else prefill
 
 
 def make_decode_step(cfg: ModelConfig, policy: PolicyConfig, mesh=None,
@@ -253,8 +275,12 @@ class AsyncServeEngine:
             self.pool = None
             self.caches = init_caches(cfg, n_slots, max_seq, self.ctx_dtype)
             self.slot_req: List[Optional[ServeRequest]] = [None] * n_slots
+            # pow2-bucketed one-shot prefill: prompts are right-padded to
+            # the next power of two, so the trace count is O(log max_seq)
+            # instead of one retrace per distinct prompt length
             self.prefill = jax.jit(make_prefill_step(
-                cfg, policy, cache_capacity=max_seq, mesh=mesh))
+                cfg, policy, cache_capacity=max_seq, mesh=mesh,
+                bucketed=True))
             self.decode = jax.jit(make_decode_step(
                 cfg, policy, mesh, max_seq=max_seq, batch=n_slots))
 
@@ -405,8 +431,14 @@ class AsyncServeEngine:
         done = 0
         for req in work[:1]:          # one-shot prefill, one request/iter
             s = req.table
-            toks = jnp.asarray([list(map(int, req.prompt))], jnp.int32)
-            logits, one = self.prefill(self.params, toks)
+            L = req.prompt_len
+            # pad to the pow2 bucket (capped at capacity): every length in
+            # the bucket shares one compiled trace
+            Spad = min(bucket_pow2(L, floor=16), self.max_seq)
+            row = list(map(int, req.prompt)) + [0] * (Spad - L)
+            toks = jnp.asarray([row], jnp.int32)
+            length = jnp.asarray([L], jnp.int32)
+            logits, one = self.prefill(self.params, toks, length)
             nxt = greedy_sample(logits)
             self.caches = kvcache.scatter_slot(self.caches, one, s,
                                                self.segs)

@@ -121,3 +121,49 @@ def test_serve_bench_artifact_schema():
             for row in svc["replicas"].values():
                 assert "cache_hit_rate" in row
                 assert 0.0 <= row["cache_hit_rate"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# storage benchmark artifact (results/storage_bench.json)
+# ---------------------------------------------------------------------------
+STORAGE_BENCH = os.path.join(RESULTS_DIR, "storage_bench.json")
+
+_TRANCHE_KEYS = ("attach", "leases_granted", "peak_lessees", "mean_lessees",
+                 "read_gb", "write_gb", "input_stall_s")
+
+
+@pytest.mark.skipif(
+    not os.path.exists(STORAGE_BENCH),
+    reason="storage_bench artifact not generated "
+           "(run benchmarks/run.py --bench storage_bench)")
+def test_storage_bench_artifact_schema():
+    with open(STORAGE_BENCH) as f:
+        js = json.load(f)
+    assert js["bench"] == "storage_bench"
+    # analytic sweep: 1..4 tenants, shared-switch vs local-per-tenant
+    sweep = js["sweep"]
+    assert set(sweep) >= {f"tenants_{n}" for n in (1, 2, 3, 4)}
+    for name, row in sweep.items():
+        for side in ("shared_switch", "local_per_tenant"):
+            assert row[side]["input_stall_s"] >= 0
+            assert row[side]["per_tenant_read_bw_gbps"] > 0
+        assert row["contention_slowdown"] >= 1.0 - 1e-9
+    # contention must be visible from 2 tenants on
+    assert sweep["tenants_2"]["shared_switch"]["input_stall_s"] > \
+        sweep["tenants_2"]["local_per_tenant"]["input_stall_s"]
+    assert sweep["tenants_4"]["contention_slowdown"] > \
+        sweep["tenants_2"]["contention_slowdown"]
+    # cluster layer: the simulator shows the same ordering end-to-end
+    cl = js["cluster"]
+    assert cl["n_tenants"] >= 2
+    for side in ("shared_switch_tranche", "separate_local_tranches"):
+        sc = cl[side]
+        jobs = sc["jobs"]
+        assert jobs["completed"] + jobs["rejected"] == jobs["submitted"]
+        assert sc["storage"], side
+        for st in sc["storage"].values():
+            for k in _TRANCHE_KEYS:
+                assert k in st, (side, k)
+    acc = cl["acceptance"]
+    assert acc["contention_visible"] is True
+    assert acc["shared_stall_s"] > acc["separate_stall_s"]

@@ -1,0 +1,120 @@
+"""Property tests for the paged KV cache (serve/kvcache.py).
+
+Random alloc / free / prefix-reuse sequences must preserve the pool
+invariants that keep serving correct under load:
+
+  * pages are never leaked — releasing every live sequence returns the
+    pool to fully-free;
+  * a page is never double-assigned — its refcount equals the number of
+    live block tables holding it (shared prefix pages count once per
+    holder), and unreferenced pages live in exactly one of free/retained;
+  * free-list size + retained LRU + live pages always equals pool size.
+"""
+import dataclasses
+
+import pytest
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.serve import PageError, PagePool
+
+TINY = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=16,
+                   n_heads=2, n_kv_heads=1, d_ff=32, vocab_size=64)
+
+N_PAGES = 8
+PAGE_SIZE = 4
+SHARED = list(np.random.RandomState(1234).randint(0, 64, 32))
+
+
+def _prompt(seed: int, shared_pages: int, tail: int):
+    rng = np.random.RandomState(seed)
+    return SHARED[:shared_pages * PAGE_SIZE] + \
+        list(rng.randint(0, 64, tail + 1))
+
+
+def _check_invariants(pool: PagePool, live):
+    # partition: every page is free, retained, or referenced — exactly one
+    free = set(pool.free)
+    retained = set(pool.retained.values())
+    assert not free & retained
+    referenced = {p for p in range(pool.n_pages) if pool.ref[p] > 0}
+    assert not referenced & free
+    assert not referenced & retained
+    assert free | retained | referenced == set(range(pool.n_pages))
+    # free-list + retained + live pages == pool size
+    assert len(free) + len(retained) + len(referenced) == pool.n_pages
+    assert pool.in_use == len(referenced)
+    # refcount == number of live tables holding the page (no silent
+    # double-assignment: an exclusive page appears in exactly one table)
+    held = {}
+    for _, table in live:
+        for p in table.pages:
+            held[p] = held.get(p, 0) + 1
+    for p in range(pool.n_pages):
+        assert pool.ref[p] == held.get(p, 0), (p, pool.ref[p], held)
+    # every live table's pages are distinct (one slot, one page)
+    for _, table in live:
+        assert len(set(table.pages)) == len(table.pages)
+
+
+action = st.one_of(
+    st.tuples(st.just("open"), st.integers(0, 5), st.integers(0, 2),
+              st.integers(0, 10), st.integers(0, 6)),
+    st.tuples(st.just("close"), st.integers(0, 7)),
+    st.tuples(st.just("drop"), st.integers(0, 7)),
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(action, min_size=1, max_size=30))
+def test_random_sequences_preserve_pool_invariants(actions):
+    pool = PagePool(TINY, n_pages=N_PAGES, page_size=PAGE_SIZE)
+    live = []
+    for act in actions:
+        if act[0] == "open":
+            _, seed, shared_pages, tail, max_new = act
+            prompt = _prompt(seed, shared_pages, tail)
+            try:
+                table, cached = pool.open_sequence(prompt, max_new)
+            except PageError:
+                pass                     # full pool: rollback must be clean
+            else:
+                assert cached <= len(prompt) - 1
+                live.append((prompt, table))
+        elif act[0] == "close" and live:
+            prompt, table = live.pop(act[1] % len(live))
+            pool.close_sequence(prompt, table)   # register + release
+        elif act[0] == "drop" and live:
+            _, table = live.pop(act[1] % len(live))
+            pool.release(table)                  # release without hashing
+        _check_invariants(pool, live)
+    while live:                                  # never leak: drain to zero
+        prompt, table = live.pop()
+        pool.close_sequence(prompt, table)
+    _check_invariants(pool, live)
+    assert pool.in_use == 0
+    assert len(pool.free) + len(pool.retained) == pool.n_pages
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1_000_000))
+def test_shared_prefix_pages_referenced_once_per_holder(seed):
+    pool = PagePool(TINY, n_pages=N_PAGES, page_size=PAGE_SIZE)
+    prompt = _prompt(seed, shared_pages=2, tail=2)
+    t1, c1 = pool.open_sequence(prompt, 1)
+    pool.register_prefix(prompt, t1)             # prefill finished
+    t2, c2 = pool.open_sequence(prompt, 1)
+    assert c1 == 0 and c2 == 2 * PAGE_SIZE
+    shared = set(t1.pages) & set(t2.pages)
+    assert len(shared) == 2                      # both full pages re-linked
+    for p in shared:
+        assert pool.ref[p] == 2
+    _check_invariants(pool, [(prompt, t1), (prompt, t2)])
+    pool.release(t1)
+    for p in shared:
+        assert pool.ref[p] == 1                  # still owned by t2
+    pool.release(t2)
+    assert pool.in_use == 0

@@ -244,6 +244,63 @@ def test_dense_mode_serves_recurrent_arch(rng):
     assert all(r.done for r in reqs)
 
 
+def test_dense_prefill_traces_constant_across_prompt_lengths(rng):
+    """Regression (ROADMAP open item): the dense fallback's one-shot
+    prefill pads prompts to pow2 buckets — four distinct lengths in one
+    bucket compile ONE trace, and a second bucket adds exactly one."""
+    cfg = reduced(get_config("recurrentgemma-2b"))
+    params = lm.init_lm(rng, cfg)
+    eng = AsyncServeEngine(cfg, params, POLICY, n_slots=2, max_seq=64)
+    assert eng.mode == "dense"
+    reqs = [ServeRequest(i, _prompt(i, n, cfg.vocab_size), max_new=2)
+            for i, n in enumerate((9, 11, 13, 15))]   # all bucket to 16
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert all(r.done for r in reqs)
+    assert eng.prefill._cache_size() == 1
+    eng.submit(ServeRequest(9, _prompt(9, 25, cfg.vocab_size), max_new=2))
+    eng.run()
+    assert eng.prefill._cache_size() == 2             # one new bucket
+
+
+@pytest.mark.parametrize("arch", ["recurrentgemma-2b", "mamba2-780m"])
+def test_bucketed_prefill_exact_for_recurrent_archs(arch):
+    """Padded columns must not leak into recurrent/conv/ring state: the
+    pow2-padded prefill reproduces the exact-length prefill bit-for-bit
+    (fp32 tolerance) — logits, recurrent states, conv tails, and the
+    masked attention cache slots."""
+    from repro.serve.engine import make_prefill_step
+    cfg = reduced(get_config(arch))
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    exact = make_prefill_step(cfg, POLICY, cache_capacity=32)
+    bucket = make_prefill_step(cfg, POLICY, cache_capacity=32,
+                               bucketed=True)
+    L = 21
+    toks = _prompt(3, L, cfg.vocab_size)
+    lo, c1 = exact(params, jnp.asarray([toks]))
+    lb, c2 = bucket(params, jnp.asarray([toks + [0] * (32 - L)]),
+                    jnp.asarray([L], jnp.int32))
+    np.testing.assert_allclose(np.asarray(lo), np.asarray(lb), atol=1e-5)
+    flat1 = jax.tree_util.tree_flatten_with_path(c1)[0]
+    flat2 = jax.tree_util.tree_flatten_with_path(c2)[0]
+    for (path, a), (_, b) in zip(flat1, flat2):
+        a, b = np.asarray(a), np.asarray(b)
+        assert a.shape == b.shape, path
+        key = str(getattr(path[-1], "key", ""))
+        if key == "pos":
+            np.testing.assert_array_equal(a, b, err_msg=str(path))
+        elif key in ("k", "v"):
+            # padded slots are masked by pos = -1; real slots must match
+            pos = next(np.asarray(x) for p, x in flat2
+                       if p[:-1] == path[:-1]
+                       and str(getattr(p[-1], "key", "")) == "pos")
+            np.testing.assert_allclose(a[pos >= 0], b[pos >= 0],
+                                       atol=1e-5, err_msg=str(path))
+        else:          # recurrent state / conv tails: exact everywhere
+            np.testing.assert_allclose(a, b, atol=1e-5, err_msg=str(path))
+
+
 def test_engine_telemetry_report(small_lm):
     cfg, params = small_lm
     eng = _engine(cfg, params)

@@ -1,0 +1,389 @@
+"""Storage composability: tranche leasing, bandwidth partitioning, the
+MLPerf-Storage-style trace generator, and the simulator's input-stall
+telemetry.  (No hypothesis dependency — this file must collect
+everywhere.)"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.cluster.lease import LeaseManager, plan_tranche
+from repro.cluster.scheduler import Job, Scheduler
+from repro.cluster.simulator import (ClusterSimulator, JobTemplate,
+                                     TraceConfig)
+from repro.core import compose
+from repro.core.compose import CompositionError
+from repro.core.topology import DEFAULT_LINKS, LinkClass, make_pool
+from repro.data.pipeline import (IOTraceGenerator, IOWorkload, StorageModel,
+                                 lm_io_workload, workload_stall)
+from repro.data.storage import (StoragePool, StorageTranche,
+                                make_storage_pool)
+
+HEAVY_IO = IOWorkload("heavy", 1e6, 0.3e6, batch_size=512,
+                      samples_per_epoch=1 << 14,
+                      checkpoint_bytes=2e9, checkpoint_every=20)
+
+
+def _pool(n_local=2, n_switch=1):
+    return make_storage_pool(n_local=n_local, n_switch=n_switch)
+
+
+# ---------------------------------------------------------------------------
+# tranche lease lifecycle
+# ---------------------------------------------------------------------------
+def test_tranche_lease_round_trip():
+    pool = _pool()
+    lease = pool.lease("local-nvme-0", "job-a", capacity_bytes=1e12)
+    assert lease.tranche == "local-nvme-0"
+    assert pool.n_lessees("local-nvme-0") == 1
+    assert pool.lessees("local-nvme-0") == ("job-a",)
+    assert pool.tranches_of("job-a") == ["local-nvme-0"]
+    assert pool.capacity_used("local-nvme-0") == 1e12
+    assert pool.release("job-a") == ["local-nvme-0"]
+    assert pool.n_lessees("local-nvme-0") == 0
+    assert pool.release("job-a") == []       # idempotent
+
+
+def test_double_claim_raises_composition_error():
+    pool = _pool()
+    pool.lease("local-nvme-0", "job-a")
+    with pytest.raises(CompositionError):
+        pool.lease("local-nvme-0", "job-a")  # leases don't stack
+    # a different tranche for the same holder is fine (e.g. data + ckpt)
+    pool.lease("local-nvme-1", "job-a")
+    assert sorted(pool.tranches_of("job-a")) == ["local-nvme-0",
+                                                 "local-nvme-1"]
+    with pytest.raises(CompositionError):
+        pool.lease("no-such-tranche", "job-a")
+
+
+def test_exclusive_claims_conflict_both_ways():
+    pool = _pool()
+    pool.lease("falcon-nvme-0", "a")
+    with pytest.raises(CompositionError):
+        pool.lease("falcon-nvme-0", "b", exclusive=True)
+    pool.lease("local-nvme-0", "c", exclusive=True)
+    with pytest.raises(CompositionError):
+        pool.lease("local-nvme-0", "d")      # shared under exclusive
+    pool.check_invariants()
+
+
+def test_capacity_oversubscription_raises_atomically():
+    pool = StoragePool([StorageTranche("t", capacity_bytes=10e9)])
+    pool.lease("t", "a", capacity_bytes=8e9)
+    with pytest.raises(CompositionError):
+        pool.lease("t", "b", capacity_bytes=4e9)
+    assert pool.n_lessees("t") == 1          # failed claim left no trace
+    pool.lease("t", "b", capacity_bytes=2e9)
+    pool.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# bandwidth partitioning
+# ---------------------------------------------------------------------------
+def test_bandwidth_partitioned_across_lessees():
+    pool = _pool()
+    tr = "falcon-nvme-0"
+    solo = pool.read_bw(tr)
+    pool.lease(tr, "a")
+    pool.lease(tr, "b")
+    assert pool.read_bw(tr) == pytest.approx(solo / 2)
+    for h in ("c", "d"):
+        pool.lease(tr, h)
+    assert pool.read_bw(tr) == pytest.approx(solo / 4)
+    pool.release("a")
+    assert pool.read_bw(tr) == pytest.approx(solo / 3)
+
+
+def test_attach_link_ceiling_applies_before_partitioning():
+    """A tranche faster than its attach fabric is fabric-bound."""
+    fast = StorageTranche("fast", read_bw=1e12, attach=LinkClass.SWITCH)
+    switch_bw = DEFAULT_LINKS[LinkClass.SWITCH].bandwidth
+    assert fast.effective_read_bw(DEFAULT_LINKS) == pytest.approx(switch_bw)
+    assert fast.effective_read_bw(DEFAULT_LINKS, 2) == \
+        pytest.approx(switch_bw / 2)
+
+
+def test_contended_stall_grows_with_lessees():
+    step_s = 0.25
+    stalls = []
+    for n in (1, 2, 4):
+        model = StorageModel(
+            StorageTranche("t", attach=LinkClass.SWITCH).spec(),
+            dict(DEFAULT_LINKS), n_lessees=n)
+        stalls.append(workload_stall(HEAVY_IO, model, step_s))
+    assert stalls[0] < stalls[1] < stalls[2]
+    # 4-way sharing cannot be better than 4x the read time of 1-way
+    assert stalls[2] > stalls[0]
+
+
+# ---------------------------------------------------------------------------
+# trace generator (per-epoch shuffled reads, record distributions, bursts)
+# ---------------------------------------------------------------------------
+def test_generator_deterministic_per_seed():
+    a = IOTraceGenerator(HEAVY_IO, seed=3).read_trace(40)
+    b = IOTraceGenerator(HEAVY_IO, seed=3).read_trace(40)
+    np.testing.assert_array_equal(a, b)
+    c = IOTraceGenerator(HEAVY_IO, seed=4).read_trace(40)
+    assert not np.array_equal(a, c)
+
+
+def test_generator_epochs_reshuffle_same_dataset():
+    gen = IOTraceGenerator(HEAVY_IO, seed=0)
+    e0, e1 = gen.epoch_order(0), gen.epoch_order(1)
+    assert not np.array_equal(e0, e1)            # shuffled
+    np.testing.assert_array_equal(np.sort(e0), np.sort(e1))  # same samples
+    # record sizes are a dataset property: epoch totals are identical
+    spe = HEAVY_IO.steps_per_epoch
+    t0 = gen.read_trace(spe).sum()
+    t1 = gen.read_trace(spe, start=spe).sum()
+    assert t0 == pytest.approx(t1, rel=1e-3)
+    # per-step bytes vary (record-size distribution, not a flat constant)
+    assert np.std(gen.read_trace(32)) > 0
+
+
+def test_checkpoint_write_bursts():
+    gen = IOTraceGenerator(HEAVY_IO, seed=0)
+    writes = [gen.step_write_bytes(t) for t in range(45)]
+    assert writes[19] == HEAVY_IO.checkpoint_bytes
+    assert writes[39] == HEAVY_IO.checkpoint_bytes
+    assert sum(1 for w in writes if w > 0) == 2
+    no_ckpt = IOTraceGenerator(IOWorkload("x", 1e3, 0, 4, 64), seed=0)
+    assert all(no_ckpt.step_write_bytes(t) == 0 for t in range(40))
+
+
+def test_lm_io_workload_shapes():
+    from repro.configs import get_config
+    from repro.configs.base import SHAPES
+    cfg = get_config("qwen2-0.5b")
+    train = lm_io_workload(cfg, SHAPES["train_4k"])
+    assert train.record_bytes == (4096 + 1) * 4
+    assert train.batch_size == 256
+    assert train.checkpoint_bytes == pytest.approx(cfg.param_count() * 4.0)
+    decode = lm_io_workload(cfg, SHAPES["decode_32k"])
+    assert decode.record_bytes == 4.0            # per-token
+    assert decode.checkpoint_every == 0
+
+
+# ---------------------------------------------------------------------------
+# compose() integration: a composition = devices + storage
+# ---------------------------------------------------------------------------
+def test_compose_leases_tranche_and_release_frees_it():
+    dev = make_pool(n_local=8, n_switch=0, pods=1)
+    st = _pool()
+    sys_ = compose.compose(dev, "j", ("data",), (4,),
+                           {"data": LinkClass.LOCAL},
+                           storage_pool=st, tranche="falcon-nvme-0",
+                           storage_capacity=1e12)
+    assert sys_.tranche == "falcon-nvme-0"
+    assert sys_.fabric.storage.name == "falcon-nvme-0"
+    assert sys_.fabric.storage.attach == LinkClass.SWITCH
+    assert st.lessees("falcon-nvme-0") == ("j",)
+    compose.release(dev, sys_, storage_pool=st)
+    assert st.n_lessees("falcon-nvme-0") == 0 and not dev.leases
+
+
+def test_compose_storage_conflict_rolls_back_device_claim():
+    dev = make_pool(n_local=8, n_switch=0, pods=1)
+    st = StoragePool([StorageTranche("only", capacity_bytes=1e9)])
+    st.lease("only", "other", exclusive=True)
+    with pytest.raises(CompositionError):
+        compose.compose(dev, "j", ("data",), (4,),
+                        {"data": LinkClass.LOCAL},
+                        storage_pool=st, tranche="only")
+    assert not dev.leases                        # atomic rollback
+
+
+def test_never_fitting_dataset_rejected_at_submit():
+    """A dataset no tranche can EVER host must reject at submit (like an
+    over-pool chip request), not livelock at the head of the queue
+    raising a storage conflict on every poll."""
+    dev = make_pool(n_local=256, n_switch=0, pods=1)
+    sched = Scheduler(dev, storage=_pool())
+    big = IOWorkload("big", 1e9, 0, batch_size=64,
+                     samples_per_epoch=100_000)          # 100 PB dataset
+    job = Job(name="j", arch="qwen2-0.5b", shape_name="train_4k",
+              n_chips=16, steps=5, io=big)
+    assert not sched.submit(job, 0.0)
+    assert job.state == "rejected"
+    assert "tranche" in job.why_rejected
+    assert sched.poll(0.0) == [] and sched.manager.conflicts == 0
+
+
+def test_plan_tranche_skips_exclusively_held():
+    """An exclusively-held tranche must never be planned even when it has
+    the fewest lessees — otherwise the claim raises on every poll and
+    the job never starts despite a shareable alternative."""
+    from repro.data.storage import StoragePool
+    st = StoragePool([StorageTranche("a"), StorageTranche("b")])
+    st.lease("a", "owner", exclusive=True)               # 1 lessee
+    st.lease("b", "x")
+    st.lease("b", "y")                                   # 2 lessees
+    assert plan_tranche(st).name == "b"
+    st.lease("b", "z", exclusive=False)
+    with pytest.raises(CompositionError):
+        # both unusable: a is exclusive, b lacks the capacity headroom
+        plan_tranche(st, capacity_bytes=st.tranches["b"].capacity_bytes + 1)
+
+
+def test_stall_dirty_stays_bounded_without_simulator():
+    """A Scheduler driven directly (no simulator draining) must not grow
+    stall_dirty without bound or pin completed jobs."""
+    dev = make_pool(n_local=64, n_switch=0, pods=1)
+    one = StoragePool([StorageTranche("shared", attach=LinkClass.SWITCH)])
+    sched = Scheduler(dev, storage=one)
+    for i in range(6):
+        job = Job(name=f"j{i}", arch="qwen2-0.5b", shape_name="train_4k",
+                  n_chips=16, steps=5, io=HEAVY_IO)
+        sched.submit(job, float(i))
+        sched.poll(float(i))
+        if i % 2:
+            sched.on_complete(sched.running[0], float(i) + 0.5)
+    done_names = {j.name for j in sched.done}
+    assert not done_names & set(sched.stall_dirty)       # no pinning
+    assert len(sched.stall_dirty) <= len(sched.running)
+
+
+def test_plan_tranche_prefers_idle_local_then_shares():
+    st = make_storage_pool(n_local=1, n_switch=1)
+    first = plan_tranche(st)
+    assert first.attach == LinkClass.LOCAL
+    st.lease(first.name, "a")
+    second = plan_tranche(st)                    # idle switch > shared local
+    assert second.name == "falcon-nvme-0"
+    st.lease(second.name, "b")
+    third = plan_tranche(st)                     # all busy: least-loaded
+    assert st.n_lessees(third.name) == 1
+
+
+def test_lease_manager_pools_storage_with_devices():
+    dev = make_pool(n_local=16, n_switch=0, pods=1)
+    st = _pool()
+    mgr = LeaseManager(dev, st)
+    sys_ = compose.compose(dev, "j", ("data",), (4,),
+                           {"data": LinkClass.LOCAL})
+    mgr.adopt(sys_, now=1.0)
+    mgr.acquire_tranche("j", "local-nvme-0", capacity_bytes=1e12, now=1.0)
+    with pytest.raises(CompositionError):
+        mgr.acquire_tranche("j", "local-nvme-0")     # double claim
+    mgr.check_exclusive()
+    mgr.release("j")                             # devices AND storage
+    assert not dev.leases and st.n_lessees("local-nvme-0") == 0
+
+
+# ---------------------------------------------------------------------------
+# scheduler: admission-to-run requires a storage lease; stalls follow
+# contention
+# ---------------------------------------------------------------------------
+def test_scheduler_start_acquires_and_complete_releases_tranche():
+    dev = make_pool(n_local=32, n_switch=0, pods=1)
+    sched = Scheduler(dev, storage=_pool())
+    job = Job(name="j", arch="qwen2-0.5b", shape_name="train_4k",
+              n_chips=16, steps=5)
+    assert sched.submit(job, 0.0)
+    assert job.io is not None                    # defaulted from the cell
+    sched.poll(0.0)
+    assert job.system.tranche is not None
+    assert sched.storage.tranches_of("j") == [job.system.tranche]
+    sched.manager.check_exclusive()
+    sched.on_complete(job, 10.0)
+    assert sched.storage.tranches_of("j") == []
+
+
+def test_scheduler_co_tenants_stall_more_than_solo():
+    dev = make_pool(n_local=64, n_switch=0, pods=1)
+    one_tranche = StoragePool([StorageTranche("shared",
+                                              attach=LinkClass.SWITCH)])
+    sched = Scheduler(dev, storage=one_tranche)
+    jobs = [Job(name=f"j{i}", arch="qwen2-0.5b", shape_name="train_4k",
+                n_chips=16, steps=5, io=HEAVY_IO) for i in range(2)]
+    sched.submit(jobs[0], 0.0)
+    sched.poll(0.0)
+    solo_stall = jobs[0].input_stall_s
+    assert solo_stall > 0                        # heavy reads don't hide
+    sched.submit(jobs[1], 1.0)
+    sched.poll(1.0)
+    assert one_tranche.n_lessees("shared") == 2
+    assert jobs[0].input_stall_s > solo_stall    # co-tenant slows it down
+    assert jobs[1].input_stall_s == pytest.approx(jobs[0].input_stall_s)
+    assert jobs[0].step_s == pytest.approx(
+        jobs[0].plan.step_s + jobs[0].input_stall_s)
+    sched.on_complete(jobs[1], 5.0)
+    assert jobs[0].input_stall_s == pytest.approx(solo_stall)
+
+
+def test_preempt_releases_tranche_and_clears_stall():
+    dev = make_pool(n_local=8, n_switch=0, pods=1)
+    sched = Scheduler(dev, storage=_pool())
+    job = Job(name="j", arch="qwen2-0.5b", shape_name="train_4k",
+              n_chips=8, steps=10, io=HEAVY_IO)
+    sched.submit(job, 0.0)
+    sched.poll(0.0)
+    tranche = job.system.tranche
+    assert tranche is not None
+    sched.on_failure(list(job.system.device_uids), now=1.0)
+    assert job.state == "queued"
+    assert job.input_stall_s == 0.0
+    assert sched.storage.n_lessees(tranche) == 0
+
+
+# ---------------------------------------------------------------------------
+# simulator: per-tranche occupancy + input-stall telemetry
+# ---------------------------------------------------------------------------
+def _sim_cfg(tranches, n_jobs=3):
+    tmpl = (JobTemplate("qwen2-0.5b", "train_4k", 16, 30, io=HEAVY_IO),)
+    return TraceConfig(n_jobs=n_jobs, arrival_rate_hz=5.0, seed=1,
+                       n_local=64, n_switch=0, pods=1, templates=tmpl,
+                       failures=(), storage_tranches=tranches)
+
+
+def test_simulator_reports_storage_stats():
+    shared = (StorageTranche("falcon-0", attach=LinkClass.SWITCH),)
+    rep = ClusterSimulator(_sim_cfg(shared)).run()
+    assert rep["jobs"]["completed"] == 3
+    st = rep["storage"]["falcon-0"]
+    assert st["attach"] == "switch"
+    assert st["leases_granted"] == 3
+    assert st["peak_lessees"] >= 2
+    assert st["input_stall_s"] > 0
+    # exact byte accounting: 3 jobs x 30 steps x batch x mean record
+    assert st["read_gb"] == pytest.approx(
+        3 * 30 * HEAVY_IO.mean_step_read_bytes() / 1e9, rel=1e-6)
+    assert st["write_gb"] == pytest.approx(
+        3 * 30 * HEAVY_IO.mean_step_write_bytes() / 1e9, rel=1e-6)
+    json.dumps(rep)
+
+
+def test_shared_switch_tranche_stalls_more_than_separate_local():
+    """The acceptance property: >=2 tenants co-located on one
+    switch-attached tranche stall harder (and finish later) than the
+    same tenants on their own local tranches."""
+    shared = ClusterSimulator(_sim_cfg(
+        (StorageTranche("falcon-0", attach=LinkClass.SWITCH),))).run()
+    separate = ClusterSimulator(_sim_cfg(
+        tuple(StorageTranche(f"local-{i}") for i in range(3)))).run()
+    stall_sh = sum(s["input_stall_s"] for s in shared["storage"].values())
+    stall_se = sum(s["input_stall_s"] for s in separate["storage"].values())
+    assert stall_sh > stall_se > 0
+    assert shared["makespan_s"] > separate["makespan_s"]
+    # contention surfaces as accelerator under-utilization (MLPerf AU)
+    assert shared["auu"] >= separate["auu"]
+
+
+def test_simulator_storage_deterministic_per_seed():
+    cfg = _sim_cfg((StorageTranche("falcon-0", attach=LinkClass.SWITCH),))
+    a = ClusterSimulator(cfg).run()
+    b = ClusterSimulator(cfg).run()
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+
+
+def test_default_trace_still_completes_with_storage_layer():
+    """The storage layer rides along under the stock trace mix: every job
+    holds a tranche while running, nothing strands, leases drain."""
+    from repro.cluster.simulator import run_trace
+    rep = run_trace(TraceConfig(n_jobs=10, arrival_rate_hz=0.3, seed=11))
+    assert rep["jobs"]["completed"] + rep["jobs"]["rejected"] == 10
+    assert rep["jobs"]["stranded"] == 0
+    assert rep["storage"]                        # per-tranche stats present
+    granted = sum(s["leases_granted"] for s in rep["storage"].values())
+    assert granted >= rep["jobs"]["completed"]
