@@ -1,0 +1,154 @@
+#!/usr/bin/env python3
+"""Docs integrity gate (run in CI; stdlib only).
+
+Checks, over README.md + docs/*.md:
+
+  1. **Dead relative links** — every ``[text](path)`` markdown link
+     that is not http(s)/mailto/anchor must resolve to a file or
+     directory relative to the file that contains it.
+  2. **Stale module references** — every backticked repo path
+     (``src/...``, ``docs/...``, ``benchmarks/...``, ``tests/...``,
+     ``examples/...``, ``scripts/...``, ``configs/...``, ``results/<x>.json``)
+     and every backticked dotted module (``repro.x.y``) must exist.
+  3. **Artifact schema drift** — for each ``<!-- schema: NAME -->``
+     block in docs/artifacts.md, the fenced JSON object's top-level
+     keys must equal the top-level keys of ``results/NAME.json`` (when
+     that artifact exists), and every shipped ``results/*.json`` must
+     have a schema block.
+
+Exit status 0 = clean; 1 = problems (all printed).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+LINK_RE = re.compile(r"\[[^\]]+\]\(([^)\s]+)\)")
+CODE_RE = re.compile(r"`([^`\n]+)`")
+SCHEMA_RE = re.compile(
+    r"<!--\s*schema:\s*([\w-]+)\s*-->\s*```json\n(.*?)```", re.DOTALL)
+# backticked tokens that look like repo paths
+PATH_PREFIXES = ("src/", "docs/", "benchmarks/", "tests/", "examples/",
+                 "scripts/", "configs/", "results/")
+DOTTED_RE = re.compile(r"^repro(\.\w+)+$")
+
+
+def _md_files():
+    out = [os.path.join(ROOT, "README.md")]
+    docs = os.path.join(ROOT, "docs")
+    if os.path.isdir(docs):
+        out += sorted(os.path.join(docs, f) for f in os.listdir(docs)
+                      if f.endswith(".md"))
+    return out
+
+
+def check_links(path: str, text: str):
+    errs = []
+    base = os.path.dirname(path)
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#")[0]
+        if not rel:
+            continue
+        if not os.path.exists(os.path.join(base, rel)):
+            errs.append(f"{os.path.relpath(path, ROOT)}: dead link -> "
+                        f"{target}")
+    return errs
+
+
+def _path_exists(token: str) -> bool:
+    # tolerate trailing slashes and informal "dir/..." suffixes
+    token = token.rstrip("/").split(" ")[0]
+    if token.endswith("/..."):
+        token = token[:-4]
+    full = os.path.join(ROOT, token)
+    # "benchmarks/cluster_sim"-style module references omit the .py
+    return os.path.exists(full) or os.path.exists(full + ".py")
+
+
+def check_module_refs(path: str, text: str):
+    errs = []
+    for token in CODE_RE.findall(text):
+        token = token.strip()
+        if token.startswith(PATH_PREFIXES):
+            # strip informal decorations: "src/repro/core (topology, ...)"
+            bare = token.split(" (")[0].split("#")[0]
+            if any(ch in bare for ch in "*{<>$"):
+                continue                      # glob/placeholder, not a path
+            if not _path_exists(bare):
+                errs.append(f"{os.path.relpath(path, ROOT)}: stale path "
+                            f"reference `{token}`")
+        elif DOTTED_RE.match(token):
+            mod = os.path.join(ROOT, "src", *token.split("."))
+            if not (os.path.isdir(mod) or os.path.exists(mod + ".py")):
+                errs.append(f"{os.path.relpath(path, ROOT)}: stale module "
+                            f"reference `{token}`")
+    return errs
+
+
+def check_artifact_schemas():
+    errs = []
+    art_md = os.path.join(ROOT, "docs", "artifacts.md")
+    if not os.path.exists(art_md):
+        return [f"docs/artifacts.md missing ({art_md})"]
+    with open(art_md) as f:
+        text = f.read()
+    documented = {}
+    for name, body in SCHEMA_RE.findall(text):
+        try:
+            documented[name] = set(json.loads(body))
+        except json.JSONDecodeError as e:
+            errs.append(f"docs/artifacts.md: schema block {name!r} is not "
+                        f"valid JSON: {e}")
+    results = os.path.join(ROOT, "results")
+    shipped = sorted(f for f in os.listdir(results)
+                     if f.endswith(".json")) if os.path.isdir(results) else []
+    for fname in shipped:
+        name = fname[:-len(".json")]
+        if name not in documented:
+            errs.append(f"results/{fname} has no <!-- schema: {name} --> "
+                        "block in docs/artifacts.md")
+            continue
+        with open(os.path.join(results, fname)) as f:
+            actual = set(json.load(f))
+        want = documented[name]
+        missing = sorted(want - actual)
+        extra = sorted(actual - want)
+        if missing:
+            errs.append(f"results/{fname}: documented keys absent from "
+                        f"artifact: {missing}")
+        if extra:
+            errs.append(f"results/{fname}: artifact keys missing from "
+                        f"docs/artifacts.md: {extra}")
+    for name in documented:
+        # documented-but-unshipped is fine (artifact may be generated in
+        # CI only), as long as the block parses — nothing to do
+        pass
+    return errs
+
+
+def main() -> int:
+    errs = []
+    for path in _md_files():
+        with open(path) as f:
+            text = f.read()
+        errs += check_links(path, text)
+        errs += check_module_refs(path, text)
+    errs += check_artifact_schemas()
+    if errs:
+        print(f"check_docs: {len(errs)} problem(s)")
+        for e in errs:
+            print("  -", e)
+        return 1
+    print("check_docs: OK "
+          f"({len(_md_files())} markdown files, schemas in sync)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -7,21 +7,33 @@ real clouds): many tenants sharing one device pool, each job leased an
 exclusive slice, composed on the fabric that matches its placement, and
 re-composed elastically when devices fail.
 
-  * ``lease``     — exclusive claim/release with domain-aware placement
-  * ``scheduler`` — multi-tenant job queue: admission, backfill,
+  * ``lease``     — exclusive claim/release with domain-aware placement,
+                    multi-pod gang co-selection (``plan_gang``) and
+                    all-or-nothing gang claims (``acquire_gang``)
+  * ``scheduler`` — multi-tenant job queue with pluggable policies
+                    (``easy`` | ``fair_share`` | ``priority_preempt``):
+                    admission, backfill, policy preemption, elastic
                     preempt-to-shrink on failure
   * ``simulator`` — trace-driven discrete-event cluster simulation
-  * ``telemetry`` — per-link traffic, utilization/AUU, recompose overhead
+  * ``telemetry`` — per-link traffic, utilization/AUU, fairness + gang
+                    stats, recompose overhead
+
+See ``docs/architecture.md`` for the subsystem map and
+``docs/telemetry.md`` for the full event/telemetry schema.
 """
-from repro.cluster.lease import LeaseManager, PlacementPlan, plan_placement
-from repro.cluster.scheduler import Job, Scheduler, ServeJob
+from repro.cluster.lease import (GangPlan, LeaseManager, PlacementPlan,
+                                 plan_gang, plan_placement)
+from repro.cluster.scheduler import (POLICIES, EasyPolicy, FairSharePolicy,
+                                     Job, Policy, PriorityPreemptPolicy,
+                                     Scheduler, ServeJob, make_policy)
 from repro.cluster.simulator import (ClusterSimulator, JobTemplate,
                                      ServiceConfig, TraceConfig, run_trace)
 from repro.cluster.telemetry import ClusterEvent, ServingStats, Telemetry
 
 __all__ = [
-    "ClusterEvent", "ClusterSimulator", "Job", "JobTemplate", "LeaseManager",
-    "PlacementPlan", "Scheduler", "ServeJob", "ServiceConfig",
-    "ServingStats", "Telemetry", "TraceConfig", "plan_placement",
-    "run_trace",
+    "ClusterEvent", "ClusterSimulator", "EasyPolicy", "FairSharePolicy",
+    "GangPlan", "Job", "JobTemplate", "LeaseManager", "POLICIES",
+    "PlacementPlan", "Policy", "PriorityPreemptPolicy", "Scheduler",
+    "ServeJob", "ServiceConfig", "ServingStats", "Telemetry", "TraceConfig",
+    "make_policy", "plan_gang", "plan_placement", "run_trace",
 ]

@@ -16,6 +16,27 @@ and only the data axis spans the composed switch:
 This is the paper's Table III spectrum (localGPUs / hybridGPUs /
 falconGPUs) derived from *where the free devices actually are* instead
 of fixed by hand.
+
+Multi-pod **gang** placement extends the same policy over the DCN axis:
+``plan_gang`` co-selects ``n_pods`` pod-sized chip cliques — each member
+mesh confined to a single locality domain — choosing the set of domains
+that minimizes the DCN hop span, and ``LeaseManager.acquire_gang``
+claims them all-or-nothing.
+
+Invariants (enforced here and in ``DevicePool`` / ``StoragePool``):
+
+  * **Exclusive device claims** — a uid is never leased twice; an
+    overlapping claim raises ``LeaseError`` / ``CompositionError`` and
+    leaves the pool untouched (``DevicePool.lease`` is atomic).
+  * **All-or-nothing gang claims** — ``acquire_gang`` claims member
+    cliques one at a time but rolls back every already-claimed member
+    if any later member conflicts, so a failed gang acquisition leaves
+    the pool exactly as it was.
+  * **Plans never mutate the pool** — ``plan_placement`` / ``plan_gang``
+    / ``plan_tranche`` only read pool state; a plan that cannot be
+    covered raises ``CompositionError`` without side effects.
+  * **Release is symmetric** — ``LeaseManager.release(holder)`` frees
+    the holder's devices *and* storage tranches in one call.
 """
 from __future__ import annotations
 
@@ -138,6 +159,98 @@ def plan_placement(pool: DevicePool, dp: int, tp: int,
                          tuple(sorted(fabrics, key=_LINK_RANK.get)), note)
 
 
+# ---------------------------------------------------------------------------
+# multi-pod gang placement (the DCN axis)
+# ---------------------------------------------------------------------------
+def domain_counts(devices: Sequence[Device]) -> Dict[int, int]:
+    """Device count per locality domain over any device iterable."""
+    out: Dict[int, int] = {}
+    for d in devices:
+        out[d.domain] = out.get(d.domain, 0) + 1
+    return out
+
+
+def hosting_domains(devices: Sequence[Device], n_member: int) -> List[int]:
+    """Domains (sorted) with at least ``n_member`` of ``devices`` — THE
+    gang-member eligibility rule, shared by planning (``plan_gang``),
+    fit-checking (``Scheduler._fits_now``), admission
+    (``Scheduler._gang_impossible``), and policy preemption, so the
+    four views of "can this domain host a member clique?" cannot
+    desync."""
+    return sorted(dom for dom, n in domain_counts(devices).items()
+                  if n >= n_member)
+
+
+@dataclasses.dataclass(frozen=True)
+class GangPlan:
+    """A co-selected placement for an ``n_pods``-member gang.
+
+    Each member is a full ``(dp, tp)`` mesh confined to one locality
+    domain; members talk to each other over the DCN ("pod") axis.
+    ``uids`` concatenates the members pod-major, which is exactly the
+    row-major order ``compose()`` expects for a ``(pod, data, model)``
+    mesh.
+    """
+    members: Tuple[PlacementPlan, ...]
+    domains: Tuple[int, ...]             # one locality domain per member
+    axis_links: Dict[str, LinkClass]     # pod -> DCN + worst member links
+    dcn_hops: int                        # domain-id span of the gang
+
+    @property
+    def uids(self) -> Tuple[int, ...]:
+        return tuple(u for m in self.members for u in m.uids)
+
+    @property
+    def n_pods(self) -> int:
+        return len(self.members)
+
+
+def plan_gang(pool: DevicePool, n_pods: int, dp: int, tp: int,
+              prefer_fabric: Optional[LinkClass] = None) -> GangPlan:
+    """Co-select ``n_pods`` pod-sized chip cliques for one gang job.
+
+    Each member mesh (``dp * tp`` chips) is carved from a single
+    locality domain with ``plan_placement``'s clique-major rule, so the
+    intra-member axes ride the member's own fabric and only the gang's
+    "pod" axis crosses the DCN.  The member domains are chosen to
+    minimize the DCN hop span (``max(domain) - min(domain)`` over the
+    eligible domains, ties to the lowest ids — deterministic), i.e. the
+    gang lands on the closest set of pods that can each host a member.
+
+    Pure planning: the pool is only read.  Raises ``CompositionError``
+    when fewer than ``n_pods`` domains can host a member.
+    """
+    if n_pods < 2:
+        raise CompositionError(f"a gang needs n_pods >= 2; got {n_pods}")
+    n_member = dp * tp
+    free = pool.available()
+    eligible = hosting_domains(free, n_member)
+    if len(eligible) < n_pods:
+        raise CompositionError(
+            f"gang needs {n_pods} domains with {n_member} free devices "
+            f"each; only {len(eligible)} of "
+            f"{len(domain_counts(free))} qualify")
+    # minimal-span window over the sorted eligible domain ids: the DCN
+    # hop distance between domains a and b is |a - b| (pods are laid out
+    # linearly on the inter-pod network), so the contiguous window with
+    # the smallest id span is the closest co-selection
+    windows = [eligible[i:i + n_pods]
+               for i in range(len(eligible) - n_pods + 1)]
+    chosen = min(windows, key=lambda w: (w[-1] - w[0], w[0]))
+    members = []
+    for dom in chosen:
+        sub = DevicePool(
+            devices=[d for d in pool.devices if d.domain == dom],
+            links=pool.links, leases=pool.leases)
+        members.append(plan_placement(sub, dp, tp, prefer_fabric))
+    links: Dict[str, LinkClass] = {"pod": LinkClass.DCN}
+    for axis in ("data", "model"):
+        links[axis] = max((m.axis_links[axis] for m in members),
+                          key=lambda c: _LINK_RANK[c])
+    return GangPlan(tuple(members), tuple(chosen), links,
+                    chosen[-1] - chosen[0])
+
+
 def plan_tranche(storage: StoragePool, *, capacity_bytes: float = 0.0,
                  prefer_domain: Optional[int] = None) -> StorageTranche:
     """Choose the NVMe tranche a new tenant should attach.
@@ -219,6 +332,29 @@ class LeaseManager:
         """Directly claim explicit uids (storage tiers, spare tranches)."""
         self.pool.lease(uids, holder)
         return self._record(holder, tuple(uids), now)
+
+    def acquire_gang(self, holder: str, gang: GangPlan,
+                     now: float = 0.0) -> Lease:
+        """All-or-nothing claim of every member clique in ``gang``.
+
+        Members are claimed one at a time (each member claim is itself
+        atomic inside the pool); if any member conflicts, every member
+        already claimed for this gang is released before raising, so a
+        failed acquisition leaves the pool bit-identical to before the
+        call.  Raises ``CompositionError`` on any conflict.
+        """
+        claimed: List[int] = []
+        try:
+            for m in gang.members:
+                self.pool.lease(m.uids, holder)
+                claimed.extend(m.uids)
+        except LeaseError as e:
+            self.pool.release(claimed)           # roll back partial claim
+            self.conflicts += 1
+            raise CompositionError(
+                f"gang claim for {holder!r} rolled back "
+                f"({len(claimed)} device(s) released): {e}") from e
+        return self._record(holder, gang.uids, now)
 
     def acquire_tranche(self, holder: str, tranche: str, *,
                         capacity_bytes: float = 0.0,

@@ -20,25 +20,54 @@ queue for slices of the device pool.  For each job the scheduler:
      the data axis when they don't, re-queue the job when even a 1-wide
      mesh no longer fits.
 
-Queue policy is priority FIFO with EASY backfill: the head job reserves
-the earliest time enough devices free up (running jobs expose analytic
-end-time estimates), and a later job may jump ahead only if it fits the
-free pool *and* its estimated finish does not push past the reservation.
+Queue policy is **pluggable** (``Policy``): ``easy`` is priority FIFO
+with EASY backfill — the head job reserves the earliest time enough
+devices free up (running jobs expose analytic end-time estimates), and
+a later job may jump ahead only if it fits the free pool *and* its
+estimated finish does not push past the reservation.  ``fair_share``
+orders the queue by per-tenant weighted deficit (device-seconds
+consumed divided by tenant weight — the least-served tenant goes
+first), and ``priority_preempt`` extends ``easy`` with policy-driven
+preemption: a higher-priority head may shrink or evict lower-priority
+running jobs (including whole gangs) through the ``train/elastic``
+checkpoint-resume path.
+
+Jobs with ``n_pods > 1`` are **gangs**: an all-or-nothing multi-pod
+composition over the DCN axis (``lease.plan_gang``), admitted with the
+pod axis priced on the DCN links (``recommend._estimate(pods=...)``
+reusing ``Candidate.wire_bytes``/``CalibratedCost``).
+
+Invariants:
+
+  * **Atomic composition** — a job either holds its full device claim
+    (all gang members) plus a storage tranche, or nothing: a conflict
+    anywhere rolls the whole claim back (``CompositionError``), the job
+    stays queued, and the conflict is counted.
+  * **Stall re-derivation** — whenever tranche contention changes
+    (start / complete / preempt / shrink), every running job's
+    ``input_stall_s`` is re-derived (``update_stalls``) and changed
+    jobs are queued on ``stall_dirty`` for the simulator to re-price.
+  * **Gangs are all-or-nothing at runtime too** — losing any member
+    device preempts the whole gang (no cross-pod shrink).
+  * **Checkpoint-boundary resume** — preemption and policy shrink floor
+    ``steps_done`` to the last integer step; the restore cost is priced
+    against the *contended* tranche bandwidth (``restore_s``).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
-from repro.cluster.lease import (LeaseManager, derive_axis_links,
+from repro.cluster.lease import (GangPlan, LeaseManager, derive_axis_links,
+                                 domain_counts, hosting_domains, plan_gang,
                                  plan_placement, plan_tranche)
 from repro.cluster.telemetry import Telemetry
 from repro.configs import get_config
 from repro.configs.base import SHAPES
 from repro.core import recommend
 from repro.core.compose import (ComposedSystem, CompositionError, compose,
-                                release)
-from repro.core.topology import DevicePool, LinkClass
+                                recompose, release)
+from repro.core.topology import Device, DevicePool, LinkClass
 from repro.data.pipeline import (IOWorkload, StorageModel, lm_io_workload,
                                  workload_stall)
 from repro.data.storage import StoragePool, make_storage_pool
@@ -75,10 +104,21 @@ class Job:
     # by the scheduler as co-tenants come and go)
     io: Optional[IOWorkload] = None
     input_stall_s: float = 0.0
+    # gang scheduling: n_pods > 1 requests an all-or-nothing multi-pod
+    # composition over the DCN axis; gang_domains records the member
+    # locality domains of the current placement
+    n_pods: int = 1
+    gang_domains: Tuple[int, ...] = ()
+    # fairness accounting tenant; "" bills the job to its own name
+    tenant: str = ""
 
     @property
     def kind(self) -> str:
         return SHAPES[self.shape_name].kind
+
+    @property
+    def tenant_key(self) -> str:
+        return self.tenant or self.name
 
     @property
     def dp_tp(self) -> Tuple[int, int]:
@@ -159,12 +199,189 @@ class ServeJob(Job):
         return self.throughput()["tokens_per_s"]
 
 
+# ---------------------------------------------------------------------------
+# pluggable scheduling policies
+# ---------------------------------------------------------------------------
+class Policy:
+    """Queue-ordering / preemption policy plugged into ``Scheduler``.
+
+    ``order`` returns the queue in service order for this poll (the
+    first element is the head the backfill reservation protects); it
+    must be a pure, deterministic function of scheduler state.
+    ``make_room`` may preempt running work to fit ``job`` and returns
+    True iff it freed at least one device (the scheduler then
+    re-evaluates the queue); the base policy never preempts.
+    """
+
+    name = "policy"
+
+    def order(self, sched: "Scheduler", now: float) -> List[Job]:
+        raise NotImplementedError
+
+    def make_room(self, sched: "Scheduler", job: Job, now: float) -> bool:
+        return False
+
+
+class EasyPolicy(Policy):
+    """Priority FIFO with EASY backfill — the original (PR 1) behavior,
+    bit-for-bit: order by (-priority, submit time); never preempt."""
+
+    name = "easy"
+
+    def order(self, sched: "Scheduler", now: float) -> List[Job]:
+        return sorted(sched.queue, key=lambda j: (-j.priority, j.submit_t))
+
+
+class FairSharePolicy(Policy):
+    """Per-tenant weighted deficit ordering.
+
+    Each tenant accrues usage as device-seconds of running leases
+    (``Scheduler.tenant_usage``); the queue is ordered by
+    ``usage / weight`` ascending — the tenant that has consumed the
+    least of its entitlement goes first — with (-priority, submit time)
+    breaking ties, so a flooding tenant cannot starve light tenants the
+    way plain FIFO does.  Unknown tenants weigh 1.0.
+    """
+
+    name = "fair_share"
+
+    def __init__(self, tenant_weights: Optional[Mapping[str, float]] = None):
+        self.weights = {k: float(v)
+                        for k, v in dict(tenant_weights or {}).items()}
+
+    def deficit(self, sched: "Scheduler", tenant: str) -> float:
+        w = max(self.weights.get(tenant, 1.0), 1e-9)
+        return sched.tenant_usage.get(tenant, 0.0) / w
+
+    def order(self, sched: "Scheduler", now: float) -> List[Job]:
+        sched._accrue_usage(now)
+        return sorted(sched.queue,
+                      key=lambda j: (self.deficit(sched, j.tenant_key),
+                                     -j.priority, j.submit_t))
+
+
+class PriorityPreemptPolicy(Policy):
+    """EASY ordering plus policy preemption: when the head does not fit,
+    strictly-lower-priority running jobs are shrunk (halve the data
+    axis, when that alone covers the shortfall and the halved mesh is
+    feasible) or evicted whole — lowest priority first, then youngest —
+    through the ``train/elastic`` checkpoint-resume path.  Gangs are
+    evicted atomically (no cross-pod shrink)."""
+
+    name = "priority_preempt"
+
+    def order(self, sched: "Scheduler", now: float) -> List[Job]:
+        return sorted(sched.queue, key=lambda j: (-j.priority, j.submit_t))
+
+    def make_room(self, sched: "Scheduler", job: Job, now: float) -> bool:
+        """Preempt lower-priority work for ``job`` — but only when the
+        candidate evictions can actually make it placeable.  Evicting
+        victims for a head that stays blocked anyway (e.g. pinned by an
+        equal-priority job) would let backfill restart the victim and
+        the next poll iteration evict it again: a livelock at one
+        simulated timestamp."""
+        victims = sorted(
+            (r for r in sched.running if r.priority < job.priority),
+            key=lambda r: (r.priority, -r.start_t, r.name))
+        if not victims:
+            return False
+        if job.n_pods > 1:
+            return self._make_room_for_gang(sched, job, victims, now)
+        need = job.n_chips - len(sched.pool.available())
+        if need <= 0:
+            return False
+        if need > sum(v.system.n_devices for v in victims
+                      if v.system is not None):
+            return False         # head cannot fit even if every victim goes
+        acted = False
+        for victim in victims:
+            if need <= 0:
+                break
+            held = victim.system.n_devices if victim.system else 0
+            freed = 0
+            if need <= held // 2:
+                freed = sched.preempt_to_shrink(victim, now)
+            if freed == 0:
+                freed = sched.evict(victim, now, for_job=job.name)
+            need -= freed
+            acted = acted or freed > 0
+        return acted
+
+    @staticmethod
+    def _make_room_for_gang(sched: "Scheduler", job: Job,
+                            victims: List[Job], now: float) -> bool:
+        """Free whole member cliques for a gang head.
+
+        A gang blocked by domain *fragmentation* can have enough free
+        chips in total (raw shortfall <= 0) while no ``n_pods`` domains
+        hold a full member each, so room is made per-domain: target the
+        ``n_pods`` large-enough domains needing the fewest evictions and
+        evict victims holding devices there until each member fits.
+        Shrink is skipped — a recompose may relocate the victim's claim,
+        so only eviction reliably frees chips in the chosen domain.
+        """
+        per_pod = job.n_chips // job.n_pods
+        dom_of = {d.uid: d.domain for d in sched.pool.devices}
+        healthy = domain_counts([d for d in sched.pool.devices if d.healthy])
+        victim_in: Dict[int, int] = {}
+        for v in victims:
+            for u in (v.system.device_uids if v.system is not None else ()):
+                victim_in[dom_of[u]] = victim_in.get(dom_of[u], 0) + 1
+
+        def free_in(dom: int) -> int:
+            return sum(1 for d in sched.pool.available()
+                       if d.domain == dom)
+
+        # a domain is a viable member host only if evicting every victim
+        # there would actually complete a clique — otherwise the gang
+        # stays blocked and the evictions just thrash (livelock guard)
+        eligible = [dom for dom, cap in healthy.items()
+                    if cap >= per_pod
+                    and free_in(dom) + victim_in.get(dom, 0) >= per_pod]
+        if len(eligible) < job.n_pods:
+            return False
+        targets = sorted(eligible,
+                         key=lambda dom: (max(0, per_pod - free_in(dom)),
+                                          dom))[:job.n_pods]
+        acted = False
+        for dom in targets:
+            for victim in victims:
+                if free_in(dom) >= per_pod:
+                    break
+                if victim.state != RUNNING or victim.system is None:
+                    continue
+                if not any(dom_of[u] == dom
+                           for u in victim.system.device_uids):
+                    continue
+                freed = sched.evict(victim, now, for_job=job.name)
+                acted = acted or freed > 0
+        return acted
+
+
+POLICIES = ("easy", "fair_share", "priority_preempt")
+
+
+def make_policy(name: str,
+                tenant_weights: Optional[Mapping[str, float]] = None
+                ) -> Policy:
+    """Policy factory used by ``Scheduler`` and ``TraceConfig``."""
+    if name == "easy":
+        return EasyPolicy()
+    if name == "fair_share":
+        return FairSharePolicy(tenant_weights)
+    if name == "priority_preempt":
+        return PriorityPreemptPolicy()
+    raise ValueError(f"unknown policy {name!r}; known: {POLICIES}")
+
+
 class Scheduler:
-    """Priority-FIFO + EASY-backfill scheduler with elastic failure handling."""
+    """Policy-driven multi-tenant scheduler with elastic failure handling."""
 
     def __init__(self, pool: DevicePool, telemetry: Optional[Telemetry] = None,
                  backfill: bool = True, calibration=None,
-                 storage: Optional[StoragePool] = None):
+                 storage: Optional[StoragePool] = None,
+                 policy: "Policy | str" = "easy",
+                 tenant_weights: Optional[Mapping[str, float]] = None):
         self.pool = pool
         self.telemetry = telemetry or Telemetry(len(pool.devices))
         self.backfill = backfill
@@ -189,6 +406,19 @@ class Scheduler:
         # it stays bounded by the running set even when nothing drains it;
         # entries are dropped when a job stops running.
         self.stall_dirty: Dict[str, Tuple[Job, float]] = {}
+        # pluggable queue policy (see Policy subclasses above)
+        self.policy = policy if isinstance(policy, Policy) \
+            else make_policy(policy, tenant_weights)
+        # fair-share bookkeeping: tenant -> device-seconds of running
+        # leases, integrated lazily up to _usage_t
+        self.tenant_usage: Dict[str, float] = {}
+        self._usage_t = 0.0
+        # jobs the policy shrank or evicted this poll, drained by the
+        # simulator (mirrors stall_dirty) to fix rates/events
+        self.policy_victims: List[Job] = []
+        # optional hook the simulator installs so policy preemptions see
+        # exact steps_done before checkpointing (lazy progress accrual)
+        self.sync_progress: Optional[Callable[[Job, float], None]] = None
 
     @property
     def calibration(self):
@@ -201,6 +431,17 @@ class Scheduler:
         cfg = get_config(job.arch)
         shape = SHAPES[job.shape_name]
         n = n_chips or job.n_chips
+        if job.n_pods > 1:
+            # gang admission: (dp, tp) factorizations of the per-pod
+            # budget, with the pod axis's collective traffic priced on
+            # the pool's actual DCN links (Candidate.wire_bytes["pod"])
+            dcn_bw = self.pool.links[LinkClass.DCN].bandwidth
+            return [recommend.calibrate_candidate(
+                        recommend._estimate(cfg, shape, dp, tp,
+                                            pods=job.n_pods, dcn_bw=dcn_bw),
+                        cfg, job.arch, job.shape_name, shape,
+                        self.calibration)
+                    for dp, tp in recommend.candidates(n // job.n_pods)]
         return [recommend.calibrate_candidate(
                     recommend._estimate(cfg, shape, dp, tp), cfg, job.arch,
                     job.shape_name, shape, self.calibration)
@@ -261,6 +502,16 @@ class Scheduler:
             job.state = REJECTED
             job.why_rejected = (f"requests {job.n_chips} chips; pool has "
                                 f"{len(self.pool.devices)}")
+        elif job.n_pods > 1 and job.n_chips % job.n_pods:
+            job.state = REJECTED
+            job.why_rejected = (f"{job.n_chips} chips do not divide over "
+                                f"{job.n_pods} gang pods")
+        elif job.n_pods > 1 and (gang_why := self._gang_impossible(job)):
+            # a gang that can never place (more pods than the pool has
+            # domains, or a member clique larger than every domain) must
+            # reject at submit instead of stranding at the queue head
+            job.state = REJECTED
+            job.why_rejected = gang_why
         elif self._storage_request(job) > max_tranche:
             # a dataset no tranche can EVER host must reject at submit,
             # not livelock at the head of the queue raising storage
@@ -290,25 +541,49 @@ class Scheduler:
                            f"{job.arch}/{job.shape_name} x{job.n_chips}")
         return True
 
+    def _gang_impossible(self, job: Job) -> str:
+        """Why a gang can never place on this pool ("" = it can): the
+        static analogue of ``_fits_now``'s per-domain rule."""
+        per_pod = job.n_chips // job.n_pods
+        hosts = len(hosting_domains(self.pool.devices, per_pod))
+        if hosts < job.n_pods:
+            n_domains = len(domain_counts(self.pool.devices))
+            return (f"gang needs {job.n_pods} domains of {per_pod} chips; "
+                    f"only {hosts} of {n_domains} domains are large "
+                    "enough")
+        return ""
+
     # ------------------------------------------------------------- start --
     def _storage_request(self, job: Job) -> float:
         return job.io.dataset_bytes() if job.io is not None else 0.0
 
     def _start(self, job: Job, now: float) -> bool:
         dp, tp = job.dp_tp
+        gang: Optional[GangPlan] = None
         try:
-            plan = plan_placement(self.pool, dp, tp)
+            if job.n_pods > 1:
+                # all-or-nothing gang: co-select one pod-sized clique per
+                # member domain, minimizing the DCN hop span; the whole
+                # selection (every member + the tranche) is claimed in
+                # one atomic compose() below
+                gang = plan_gang(self.pool, job.n_pods, dp, tp)
+                uids, axis_links = gang.uids, gang.axis_links
+                names: Tuple[str, ...] = ("pod", "data", "model")
+                sizes: Tuple[int, ...] = (job.n_pods, dp, tp)
+            else:
+                plan = plan_placement(self.pool, dp, tp)
+                uids, axis_links = plan.uids, plan.axis_links
+                names, sizes = ("data", "model"), (dp, tp)
             # a composition is devices + storage: running requires an NVMe
             # tranche lease alongside the chip claim, placed local-first
             # (plan_tranche) and claimed atomically inside compose()
-            domain = {d.uid: d.domain for d in self.pool.devices}[
-                plan.uids[0]]
+            domain = {d.uid: d.domain for d in self.pool.devices}[uids[0]]
             tranche = plan_tranche(
                 self.storage, capacity_bytes=self._storage_request(job),
                 prefer_domain=domain)
             job.system = compose(
-                self.pool, job.name, ("data", "model"), (dp, tp),
-                plan.axis_links, uids=plan.uids,
+                self.pool, job.name, names, sizes,
+                axis_links, uids=uids,
                 storage_pool=self.storage, tranche=tranche.name,
                 storage_capacity=self._storage_request(job))
         except CompositionError as e:
@@ -323,6 +598,7 @@ class Scheduler:
         job.state = RUNNING
         job.start_t = now
         job.progress_t = now
+        job.gang_domains = gang.domains if gang is not None else ()
         job.run = elastic.ElasticRun(job.system, ckpt_dir="")
         self.running.append(job)
         st = self.telemetry.tranche_stats(tranche.name, tranche.attach.value)
@@ -330,8 +606,8 @@ class Scheduler:
         self.update_stalls()
         # wait = time spent in the queue since the last (re)queueing; run
         # time before a preemption is not wait
-        self.telemetry.job_waited(now - job.queued_t)
-        detail = (f"mesh={dp}x{tp} links=" +
+        self.telemetry.job_waited(now - job.queued_t, job.tenant_key)
+        detail = (f"mesh={'x'.join(str(s) for s in sizes)} links=" +
                   ",".join(f"{a}:{c.value}"
                            for a, c in job.system.fabric.axis_links.items()))
         detail += (f" tranche={tranche.name}"
@@ -339,6 +615,13 @@ class Scheduler:
         if isinstance(job, ServeJob):
             detail += f" serve={job.tokens_per_s:.0f}tok/s"
         self.telemetry.log(now, "start", job.name, detail)
+        if gang is not None:
+            self.telemetry.gang_started(gang.dcn_hops)
+            self.telemetry.log(
+                now, "gang", job.name,
+                f"start pods={job.n_pods} domains="
+                + ",".join(str(d) for d in gang.domains)
+                + f" span={gang.dcn_hops}")
         return True
 
     # ----------------------------------------------------- storage stalls --
@@ -370,9 +653,50 @@ class Scheduler:
         self.stall_dirty.clear()
         return out
 
+    def restore_s(self, job: Job) -> float:
+        """Checkpoint-restore time on the job's *actual* storage.
+
+        A resumed job reads its fp32 parameters back through the tranche
+        it holds — at the tranche's **contended** per-lessee bandwidth
+        (``StoragePool.read_bw``), not the uncontended tier rate
+        ``Job.est_restore_s`` assumes: a restore on a shared drawer
+        contends with its co-tenants' input streams exactly like the
+        steady-state reads do.  Falls back to the job's own uncontended
+        estimate while it holds no tranche (still queued).
+        """
+        if job.steps_done <= 0:
+            return 0.0
+        if job.system is not None and job.system.tranche is not None:
+            pbytes = get_config(job.arch).param_count() * 4.0
+            return pbytes / self.storage.read_bw(job.system.tranche)
+        return job.est_restore_s()
+
+    # ---------------------------------------------------------- fairness --
+    def _accrue_usage(self, now: float) -> None:
+        """Integrate running device-seconds per tenant up to ``now`` —
+        the fair-share deficit input.  Lazy and idempotent (dt = 0 on
+        repeated calls at one event time)."""
+        dt = now - self._usage_t
+        if dt > 0:
+            for job in self.running:
+                if job.system is not None:
+                    key = job.tenant_key
+                    self.tenant_usage[key] = (
+                        self.tenant_usage.get(key, 0.0)
+                        + dt * job.system.n_devices)
+        self._usage_t = max(self._usage_t, now)
+
     # ---------------------------------------------------------- schedule --
-    def _sorted_queue(self) -> List[Job]:
-        return sorted(self.queue, key=lambda j: (-j.priority, j.submit_t))
+    @staticmethod
+    def _fits_now(job: Job, free: List[Device]) -> bool:
+        """Can ``job`` be placed from the ``free`` devices right now?
+        Plain jobs fit by count; a gang additionally needs ``n_pods``
+        distinct domains with a full member clique free in each (mirrors
+        ``plan_gang``'s eligibility rule, without planning)."""
+        if job.n_pods <= 1:
+            return job.n_chips <= len(free)
+        per_pod = job.n_chips // job.n_pods
+        return len(hosting_domains(free, per_pod)) >= job.n_pods
 
     def _reservation_t(self, need: int, now: float) -> float:
         """Earliest time ``need`` devices can be free, from running jobs'
@@ -389,35 +713,49 @@ class Scheduler:
     def poll(self, now: float) -> List[Job]:
         """Start every job the policy admits right now; returns them."""
         started: List[Job] = []
+        self._accrue_usage(now)
         while True:
-            order = self._sorted_queue()
+            order = self.policy.order(self, now)
             if not order:
                 break
             head = order[0]
-            free = len(self.pool.available())
+            free = self.pool.available()
             picked: Optional[Job] = None
-            if head.n_chips <= free:
+            if self._fits_now(head, free):
                 picked = head
-            elif self.backfill:
-                reserve_t = self._reservation_t(head.n_chips, now)
-                for job in order[1:]:
-                    if (job.n_chips <= free
-                            and now + job.est_restore_s()
-                            + job.est_duration_s() <= reserve_t):
-                        picked = job
-                        break
+            else:
+                if self.policy.make_room(self, head, now):
+                    continue    # devices were freed: re-evaluate the queue
+                if self.backfill:
+                    reserve_t = self._reservation_t(head.n_chips, now)
+                    for job in order[1:]:
+                        if (self._fits_now(job, free)
+                                and now + job.est_restore_s()
+                                + job.est_duration_s() <= reserve_t):
+                            picked = job
+                            break
             if picked is None or not self._start(picked, now):
                 break
             self.queue.remove(picked)
             started.append(picked)
         return started
 
+    def drain_policy_victims(self) -> List[Job]:
+        """Jobs the policy shrank or evicted since the last drain (the
+        simulator re-prices their traffic rates and completion events)."""
+        out = list(self.policy_victims)
+        self.policy_victims.clear()
+        return out
+
     # ---------------------------------------------------------- complete --
     def on_complete(self, job: Job, now: float) -> None:
         assert job.state == RUNNING
+        self._accrue_usage(now)
         job.steps_done = job.steps
         job.state = DONE
         job.end_t = now
+        if job.n_pods > 1:
+            self.telemetry.log(now, "gang", job.name, "stop")
         self.running.remove(job)
         self.done.append(job)
         release(self.pool, job.system)
@@ -447,6 +785,7 @@ class Scheduler:
                    ) -> List[Job]:
         """Handle device failures; returns every job that was recomposed
         or preempted (the caller must re-estimate completion times)."""
+        self._accrue_usage(now)
         self.pool.mark_failed(failed_uids)
         self.telemetry.log(now, "fail", "",
                            f"{len(failed_uids)} device(s) down")
@@ -455,6 +794,13 @@ class Scheduler:
         for job in list(self.running):
             hit = failed & set(job.system.device_uids)
             if not hit:
+                continue
+            if job.n_pods > 1:
+                # a gang is all-or-nothing at runtime too: losing any
+                # member device preempts the whole gang (a cross-pod
+                # shrink would break the pod-symmetric mesh)
+                self._preempt(job, now)
+                changed.append(job)
                 continue
             old_shape = job.system.axis_sizes
             try:
@@ -504,8 +850,13 @@ class Scheduler:
         self.update_stalls()         # shrunk meshes re-derive their stalls
         return changed
 
-    def _preempt(self, job: Job, now: float) -> None:
-        """Shrink impossible: release everything and requeue the job."""
+    def _preempt(self, job: Job, now: float,
+                 why: str = "pool too small; requeued") -> None:
+        """Release everything and requeue the job (failure shrink
+        impossible, or a policy eviction — ``why`` says which)."""
+        self._accrue_usage(now)
+        if job.n_pods > 1:
+            self.telemetry.log(now, "gang", job.name, "stop (preempted)")
         elastic.preempt(job.run, self.pool, step=int(job.steps_done))
         self.manager.release(job.name)       # devices + storage tranche
         self.running.remove(job)
@@ -513,6 +864,7 @@ class Scheduler:
         job.run = None
         job.state = QUEUED
         job.epoch += 1
+        job.gang_domains = ()
         job.input_stall_s = 0.0
         self.stall_dirty.pop(job.name, None)
         self.update_stalls()
@@ -524,8 +876,73 @@ class Scheduler:
         job.queued_t = now
         self.queue.append(job)
         self.telemetry.jobs_preempted += 1
-        self.telemetry.log(now, "preempt", job.name,
-                           "pool too small; requeued")
+        self.telemetry.log(now, "preempt", job.name, why)
+
+    # ------------------------------------------------- policy preemption --
+    def evict(self, job: Job, now: float, for_job: str = "") -> int:
+        """Policy-driven full preemption of a running job (the
+        ``priority_preempt`` eviction path).  The victim checkpoints at
+        the last integer step, releases devices + tranche, and requeues;
+        returns the number of devices freed."""
+        if self.sync_progress is not None:
+            self.sync_progress(job, now)
+        freed = job.system.n_devices if job.system is not None else 0
+        why = f"preempted for {for_job or 'higher priority'}"
+        self._preempt(job, now, why=why)
+        self.telemetry.jobs_evicted += 1
+        self.telemetry.log(now, "evict", job.name, why)
+        self.policy_victims.append(job)
+        return freed
+
+    def preempt_to_shrink(self, job: Job, now: float) -> int:
+        """Halve a running victim's data axis in place, freeing half its
+        devices for a higher-priority job; returns the devices freed (0
+        when the victim cannot shrink: gangs, dp == 1, infeasible halved
+        mesh, or a recompose conflict)."""
+        if job.n_pods > 1 or job.system is None:
+            return 0
+        dp, tp = job.dp_tp
+        if dp < 2:
+            return 0
+        cfg = get_config(job.arch)
+        new_plan = recommend.calibrate_candidate(
+            recommend._estimate(cfg, SHAPES[job.shape_name], dp // 2, tp),
+            cfg, job.arch, job.shape_name, SHAPES[job.shape_name],
+            self.calibration)
+        if not new_plan.feasible:
+            return 0
+        if self.sync_progress is not None:
+            self.sync_progress(job, now)
+        self._accrue_usage(now)
+        old_n = job.system.n_devices
+        old_shape = job.system.axis_sizes
+        try:
+            new_sys = recompose(self.pool, job.system,
+                                axis_sizes=(dp // 2, tp))
+        except CompositionError:
+            return 0                 # recompose restored the old claim
+        links = derive_axis_links(self.pool, new_sys.device_uids, tp)
+        if dict(new_sys.fabric.axis_links) != links:
+            new_sys = dataclasses.replace(
+                new_sys, fabric=dataclasses.replace(
+                    new_sys.fabric, axis_links=links))
+        job.system = new_sys
+        if job.run is not None:
+            job.run.system = new_sys
+        job.plan = self._repriced(new_plan, new_sys)
+        self.manager.forget(job.name)
+        self.manager.adopt(new_sys, now)
+        # resume from the checkpoint boundary in the halved shape
+        job.steps_done = float(int(job.steps_done))
+        job.recompositions += 1
+        job.epoch += 1               # invalidates scheduled completions
+        self.telemetry.jobs_shrunk += 1
+        self.telemetry.log(now, "shrink", job.name,
+                           f"{old_shape}->{new_sys.axis_sizes} "
+                           "(policy preempt-to-shrink)")
+        self.policy_victims.append(job)
+        self.update_stalls()
+        return old_n - new_sys.n_devices
 
     # ----------------------------------------------------------- queries --
     def busy_equiv(self) -> float:

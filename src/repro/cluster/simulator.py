@@ -20,8 +20,31 @@ Time accounting per event pop:
   4. integrate occupancy into telemetry (utilization + AUU).
 
 Recomposition overhead models the checkpoint round-trip: parameter
-bytes over the composition's storage tier, plus the compose latency —
-the operational cost of the paper's attach/detach knob.
+bytes over the composition's storage tier — priced at the tranche's
+*contended* per-lessee bandwidth (``Scheduler.restore_s``) — plus the
+compose latency: the operational cost of the paper's attach/detach knob.
+
+Gang jobs (``JobTemplate.n_pods > 1``) replay deterministically like
+everything else: gang start/stop events carry the member domains and
+DCN hop span, the gang's pod-axis collective traffic is attributed to
+the DCN link class through the same incremental per-link rate
+accumulators, and policy evictions/shrinks (``TraceConfig.policy``)
+re-price victims' completion events exactly like failure preemptions.
+
+Invariants:
+
+  * **Determinism** — ``report()`` is bit-identical for a given
+    ``TraceConfig`` (wall-clock telemetry deliberately lives outside
+    it); the rng is consumed in a fixed order (batch trace, then
+    failures, then services), so adding gang/policy fields does not
+    shift pre-existing traces.
+  * **Stall re-derivation** — whenever the scheduler marks a running
+    job's input stall dirty, the simulator re-schedules its completion:
+    progress already made is accrued at the *old* effective step time,
+    remaining steps at the new one (``_resync_stalls``).
+  * **Event epochs** — every completion/rate event carries the job's
+    epoch; preemption, shrink, and recompose bump it, so stale events
+    are dropped instead of double-completing.
 """
 from __future__ import annotations
 
@@ -54,6 +77,12 @@ class JobTemplate:
     # explicit I/O shape (None -> lm_io_workload(arch, shape) at submit);
     # input-heavy mixes use this to stress the storage tranches
     io: Optional[IOWorkload] = None
+    # gang scheduling / policy knobs: n_pods > 1 makes every job drawn
+    # from this template a multi-pod gang; tenant feeds fair-share
+    # accounting; priority feeds the queue order + priority_preempt
+    n_pods: int = 1
+    tenant: str = ""
+    priority: int = 0
 
 
 # A mixed train/serve diet over small-to-mid archs: feasible on modest
@@ -157,11 +186,27 @@ class TraceConfig:
     # storage inventory: explicit tranche set, or None for the default
     # make_storage_pool() (4 local + 2 switch-attached NVMe tranches)
     storage_tranches: Optional[Tuple[StorageTranche, ...]] = None
+    # scheduling policy (see cluster.scheduler.POLICIES) and per-tenant
+    # fair-share weights as (tenant, weight) pairs (frozen-hashable)
+    policy: str = "easy"
+    tenant_weights: Tuple[Tuple[str, float], ...] = ()
+    # deterministic arrivals appended after the Poisson trace: explicit
+    # (arrival_time_s, template) pairs consume no rng, so skewed-tenant
+    # and gang scenarios can be scripted exactly
+    arrivals: Tuple[Tuple[float, JobTemplate], ...] = ()
 
 
-def restore_overhead_s(job: Job) -> float:
-    """Checkpoint round-trip cost of (re)forming ``job``'s composition —
-    the same estimate the scheduler's backfill guard uses."""
+def restore_overhead_s(job: Job,
+                       scheduler: Optional[Scheduler] = None) -> float:
+    """Checkpoint round-trip cost of (re)forming ``job``'s composition.
+
+    With a ``scheduler``, the restore read is priced at the contended
+    per-lessee bandwidth of the tranche the job actually holds
+    (``Scheduler.restore_s``); without one it falls back to the job's
+    uncontended tier estimate (the backfill guard's placement-unknown
+    view)."""
+    if scheduler is not None:
+        return scheduler.restore_s(job)
     return job.est_restore_s()
 
 
@@ -179,7 +224,11 @@ class ClusterSimulator:
         self.scheduler = Scheduler(self.pool, self.telemetry,
                                    backfill=cfg.backfill,
                                    calibration=cfg.calibration,
-                                   storage=storage)
+                                   storage=storage, policy=cfg.policy,
+                                   tenant_weights=dict(cfg.tenant_weights))
+        # policy preemptions checkpoint at exact progress: let the
+        # scheduler pull lazy step accrual up to the eviction time
+        self.scheduler.sync_progress = self._sync_steps
         # pre-create per-tranche stats so occupancy spans the whole trace
         for tr in storage.tranches.values():
             self.telemetry.tranche_stats(tr.name, tr.attach.value)
@@ -214,14 +263,25 @@ class ClusterSimulator:
     def _gen_trace(self) -> None:
         t = 0.0
         weights = [tpl.weight for tpl in self.cfg.templates]
-        for i in range(self.cfg.n_jobs):
+        def add_job(t_arr: float, tpl: JobTemplate, who: str) -> None:
+            i = len(self.jobs)
+            job = Job(name=f"job-{i:03d}-{who}-{tpl.shape_name}",
+                      arch=tpl.arch, shape_name=tpl.shape_name,
+                      n_chips=tpl.n_chips, steps=tpl.steps, io=tpl.io,
+                      n_pods=tpl.n_pods, tenant=tpl.tenant,
+                      priority=tpl.priority)
+            self.jobs[job.name] = job
+            self._push(t_arr, "arrival", job.name)
+
+        for _ in range(self.cfg.n_jobs):
             t += self.rng.expovariate(self.cfg.arrival_rate_hz)
             tpl = self.rng.choices(self.cfg.templates, weights=weights)[0]
-            job = Job(name=f"job-{i:03d}-{tpl.arch}-{tpl.shape_name}",
-                      arch=tpl.arch, shape_name=tpl.shape_name,
-                      n_chips=tpl.n_chips, steps=tpl.steps, io=tpl.io)
-            self.jobs[job.name] = job
-            self._push(t, "arrival", job.name)
+            add_job(t, tpl, tpl.arch)
+        # scripted arrivals (gang / skewed-tenant scenarios): appended
+        # after the Poisson trace and rng-free, so batch-only configs
+        # consume the rng identically with or without them
+        for t_arr, tpl in self.cfg.arrivals:
+            add_job(t_arr, tpl, tpl.tenant or tpl.arch)
         for t_fail, n in self.cfg.failures:
             self._push(t_fail, "fail", n)
         # serving trace: replicas arrive as jobs, requests as events.
@@ -241,6 +301,7 @@ class ClusterSimulator:
                     shape_name=svc_cfg.shape_name,
                     n_chips=svc_cfg.chips_per_replica, steps=steps_est,
                     priority=svc_cfg.priority, service=svc_cfg.name,
+                    tenant=svc_cfg.name,
                     replica=i, ttft_slo_s=svc_cfg.ttft_slo_s,
                     tpot_slo_s=svc_cfg.tpot_slo_s,
                     prefill_chunk=svc_cfg.prefill_chunk)
@@ -350,16 +411,42 @@ class ClusterSimulator:
         self._push(start + job.est_duration_s(), "complete",
                    (job.name, job.epoch))
 
+    def _reschedule_victim(self, job: Job, now: float) -> None:
+        """A running job lost devices (failure recompose/preempt or
+        policy shrink/evict): its old traffic rates come off and, if it
+        kept running in a smaller shape, its events re-price after the
+        checkpoint restore; an evicted replica's load re-routes."""
+        self._rate_off(job.name)
+        if isinstance(job, ServeJob):
+            if job.state == RUNNING:          # shrunk in place: serve on
+                self._push(now + restore_overhead_s(job, self.scheduler),
+                           "rate", (job.name, job.epoch))
+            else:                              # preempted: re-route load
+                self._reassign_replica_requests(job, now)
+        elif job.state == RUNNING:            # shrunk in place
+            self._schedule_completion(
+                job, now, restore_overhead_s(job, self.scheduler))
+
     def _start_newly_scheduled(self, now: float) -> None:
         started = self.scheduler.poll(now)
+        names = {j.name for j in started}
+        victims = self.scheduler.drain_policy_victims()
+        for job in victims:
+            if job.name in names:
+                # evicted and restarted within one poll: only the stale
+                # rates come off; the started loop below reschedules it
+                self._rate_off(job.name)
+                continue
+            self._reschedule_victim(job, now)
         for job in started:
             if isinstance(job, ServeJob):
                 self._replica_started(job, now)
                 continue
             # a preempted job resuming from a checkpoint pays the restore
-            overhead = restore_overhead_s(job)
+            # (read back at the contended bandwidth of its new tranche)
+            overhead = restore_overhead_s(job, self.scheduler)
             self._schedule_completion(job, now, overhead)
-        self._resync_stalls(now, exclude={j.name for j in started})
+        self._resync_stalls(now, exclude=names | {j.name for j in victims})
 
     def _resync_stalls(self, now: float, exclude=frozenset()) -> None:
         """Tranche contention changed: re-schedule the completion of every
@@ -389,6 +476,11 @@ class ClusterSimulator:
         collective traffic, and drain the service backlog onto it.  No
         completion event — replicas run until their request trace drains."""
         job.progress_t = now
+        old = self.replicas.get(job.name)
+        if old is not None:
+            # evicted and restarted within one poll: bank the retiring
+            # incarnation's counters before replacing it
+            self._stash_counters(old)
         self.replicas[job.name] = _Replica(job)
         self._push(now + self.cfg.compose_latency_s, "rate",
                    (job.name, job.epoch))
@@ -547,16 +639,7 @@ class ClusterSimulator:
                 down = self.rng.sample(healthy, n)
                 changed = self.scheduler.on_failure(down, now)
                 for job in changed:
-                    self._rate_off(job.name)      # re-enabled at restart
-                    if isinstance(job, ServeJob):
-                        if job.state == RUNNING:  # shrunk in place: serve on
-                            self._push(now + restore_overhead_s(job), "rate",
-                                       (job.name, job.epoch))
-                        else:                     # preempted: re-route load
-                            self._reassign_replica_requests(job, now)
-                    elif job.state == RUNNING:    # shrunk in place
-                        self._schedule_completion(
-                            job, now, restore_overhead_s(job))
+                    self._reschedule_victim(job, now)
                 # changed jobs were just rescheduled (restore overhead
                 # included); only their co-tenants need a stall resync
                 self._resync_stalls(now, exclude={j.name for j in changed})
@@ -589,12 +672,15 @@ class ClusterSimulator:
         rep["recompositions_per_job"] = {
             j.name: j.recompositions for j in sched.done
             if j.recompositions}
+        rep["policy"] = self.scheduler.policy.name
         rep["config"] = {
             "n_jobs": self.cfg.n_jobs,
             "pool_devices": len(self.pool.devices),
             "arrival_rate_hz": self.cfg.arrival_rate_hz,
             "failures": list(self.cfg.failures),
             "seed": self.cfg.seed,
+            "policy": self.cfg.policy,
+            "n_scripted_arrivals": len(self.cfg.arrivals),
         }
         if self.services:
             rep["serving"] = {

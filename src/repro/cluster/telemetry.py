@@ -17,10 +17,23 @@ can state:
     systems after failures (Fig 11's switch-overhead, made operational).
 
 Event schema (``ClusterEvent``): ``t`` (simulated seconds), ``kind`` (one
-of submit / reject / start / complete / fail / repair / recompose /
-preempt / conflict), ``job`` (job name or "" for pool-level events), and
-``detail`` (human-readable payload).  ``Telemetry.report()`` returns a
-JSON-serializable dict with the schema used by ``benchmarks/cluster_sim``.
+of ``EVENT_KINDS`` below), ``job`` (job name or "" for pool-level
+events), and ``detail`` (human-readable payload).
+``Telemetry.report()`` returns a JSON-serializable dict with the schema
+used by ``benchmarks/cluster_sim`` — the canonical field-by-field
+reference is ``docs/telemetry.md``.
+
+Invariants:
+
+  * ``observe(t, ...)`` integrates the *previous* occupancy over
+    ``[last_t, t]``; callers must invoke it after every state change
+    with the post-change values, and ``t`` never moves backwards.
+  * Every control-plane action logs exactly one event with a ``kind``
+    from ``EVENT_KINDS`` (asserted in ``log``); policy evictions log
+    both the generic ``preempt`` and the attributing ``evict`` event.
+  * Per-tenant wait samples (``job_waited``) and gang spans
+    (``gang_started``) are append-only counters — ``report()`` is a
+    pure function of them, so two identical traces report identically.
 """
 from __future__ import annotations
 
@@ -31,7 +44,8 @@ from typing import Dict, List, Optional
 from repro.core.topology import LinkClass
 
 EVENT_KINDS = ("submit", "reject", "start", "complete", "fail", "repair",
-               "recompose", "preempt", "conflict", "storage")
+               "recompose", "preempt", "conflict", "storage", "evict",
+               "shrink", "gang")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -199,7 +213,14 @@ class Telemetry:
         self.jobs_completed = 0
         self.jobs_rejected = 0
         self.jobs_preempted = 0
+        self.jobs_evicted = 0           # policy-driven preemptions (subset)
+        self.jobs_shrunk = 0            # policy-driven preempt-to-shrink
         self.storage: Dict[str, StorageStats] = {}   # tranche -> stats
+        # gang scheduling: one span sample per gang start (DCN hop span)
+        self.gang_spans: List[int] = []
+        # fairness: queue-wait samples keyed by tenant (insertion order
+        # follows first wait per tenant -> deterministic report)
+        self.waits_by_tenant: Dict[str, List[float]] = {}
         # time-weighted integrals
         self._t: Optional[float] = None
         self._t0: Optional[float] = None
@@ -240,8 +261,13 @@ class Telemetry:
     def add_link_traffic(self, link: LinkClass, nbytes: float) -> None:
         self.link_traffic_bytes[link.value] += nbytes
 
-    def job_waited(self, seconds: float) -> None:
+    def job_waited(self, seconds: float, tenant: str = "") -> None:
         self.waits_s.append(seconds)
+        if tenant:
+            self.waits_by_tenant.setdefault(tenant, []).append(seconds)
+
+    def gang_started(self, span: int) -> None:
+        self.gang_spans.append(span)
 
     def add_recomposition(self, overhead_s: float) -> None:
         self.recompositions += 1
@@ -272,9 +298,30 @@ class Telemetry:
             return 0.0
         return max(0.0, 1.0 - self._busy_area / self._leased_area)
 
+    @staticmethod
+    def _wait_dist(xs: List[float]) -> Dict[str, float]:
+        s = sorted(xs)
+        return {"p50": _percentile(s, 50.0), "p95": _percentile(s, 95.0),
+                "p99": _percentile(s, 99.0),
+                "mean": sum(s) / len(s) if s else 0.0}
+
+    def fairness(self) -> Dict[str, object]:
+        """Per-tenant queue-wait distributions plus the scalar the policy
+        sweep compares: the mean over tenants of each tenant's p95 wait
+        (tenant-weighted, so a flooding tenant cannot drown the small
+        tenants' experience the way a job-weighted p95 would)."""
+        tenants = {t: dict(wait_s=self._wait_dist(w), n_waits=len(w))
+                   for t, w in sorted(self.waits_by_tenant.items())}
+        p95s = [row["wait_s"]["p95"] for row in tenants.values()]
+        return {
+            "tenants": tenants,
+            "tenant_p95_wait_mean_s": sum(p95s) / len(p95s) if p95s else 0.0,
+        }
+
     def report(self) -> Dict[str, object]:
         waits = sorted(self.waits_s)
         span = max(self.span_s, 1e-12)
+        spans = self.gang_spans
         return {
             "span_s": self.span_s,
             "pool_utilization": self.pool_utilization(),
@@ -300,7 +347,15 @@ class Telemetry:
                 "completed": self.jobs_completed,
                 "rejected": self.jobs_rejected,
                 "preempted": self.jobs_preempted,
+                "evicted": self.jobs_evicted,
+                "shrunk": self.jobs_shrunk,
             },
+            "gangs": {
+                "started": len(spans),
+                "max_span": max(spans) if spans else 0,
+                "mean_span": sum(spans) / len(spans) if spans else 0.0,
+            },
+            "fairness": self.fairness(),
             "lease_conflicts": self.lease_conflicts,
             "n_events": len(self.events),
             "storage": {name: st.report()

@@ -24,6 +24,27 @@ A composition is then *devices + storage*: ``core.compose.compose()``
 accepts a ``(storage_pool, tranche)`` pair and leases the tranche under
 the composition's name, and ``repro.cluster`` admission requires a
 storage lease before a job may start (see ``cluster.scheduler``).
+
+Invariants:
+
+  * **Atomic claims** — ``StoragePool.lease`` either records the lease
+    or raises ``CompositionError`` leaving the pool untouched; inside
+    ``compose(..., storage_pool=, tranche=)`` a storage conflict rolls
+    the device claim back too, so a composition is never half-formed.
+  * **CompositionError conditions** — unknown tranche; a double claim
+    by the same holder (storage leases don't stack); an exclusive
+    claim meeting existing lessees, or any claim meeting an exclusive
+    lease; capacity oversubscription.
+  * **Equal partitioning** — a tranche's read/write bandwidth divides
+    equally across its current lessees after the attach fabric's
+    ceiling (``topology.partitioned_bw``); there is no QoS weighting
+    yet (ROADMAP follow-up).
+  * **Stall re-derivation** — consumers must re-derive input stalls
+    whenever ``n_lessees`` changes on a tranche; the cluster scheduler
+    does this on every start/complete/preempt/shrink
+    (``Scheduler.update_stalls``), and checkpoint *restores* are priced
+    at the same contended per-lessee bandwidth
+    (``Scheduler.restore_s``), not the uncontended tier rate.
 """
 from __future__ import annotations
 

@@ -77,6 +77,53 @@ def test_multi_pod_cells_exercise_the_pod_axis():
 
 
 # ---------------------------------------------------------------------------
+# cluster-sim artifact (results/cluster_sim.json)
+# ---------------------------------------------------------------------------
+CLUSTER_SIM = os.path.join(RESULTS_DIR, "cluster_sim.json")
+
+_SIM_REPORT_KEYS = ("span_s", "pool_utilization", "auu",
+                    "accelerator_utilization", "link_traffic_gb",
+                    "recomposition", "job_wait_s", "jobs", "gangs",
+                    "fairness", "lease_conflicts", "storage", "policy")
+
+
+@pytest.mark.skipif(
+    not os.path.exists(CLUSTER_SIM),
+    reason="cluster_sim artifact not generated "
+           "(run benchmarks/run.py --bench cluster_sim)")
+def test_cluster_sim_artifact_schema():
+    with open(CLUSTER_SIM) as f:
+        js = json.load(f)
+    assert js["bench"] == "cluster_sim"
+    # base trace: the PR-1 regression anchor stays healthy
+    jobs = js["jobs"]
+    assert jobs["completed"] + jobs["rejected"] == jobs["submitted"]
+    assert jobs["stranded"] == 0
+    assert js["lease_conflicts"] == 0
+    # per-policy sweep: every policy ran the gang scenario
+    assert set(js["policies"]) == {"easy", "fair_share", "priority_preempt"}
+    for name, rep in js["policies"].items():
+        for k in _SIM_REPORT_KEYS:
+            assert k in rep, (name, k)
+        assert rep["policy"] == name
+        assert rep["gangs"]["started"] >= 1, name
+        assert rep["jobs"]["stranded"] == 0, name
+        ten = rep["fairness"]["tenants"]
+        assert set(ten) >= {"heavy", "blue", "green", "gang"}, name
+        for row in ten.values():
+            for q in ("p50", "p95", "p99", "mean"):
+                assert row["wait_s"][q] >= 0
+    # acceptance: the headline policy claims hold in the shipped artifact
+    acc = js["acceptance"]
+    assert acc["fair_share_improves_tenant_p95_wait"] is True
+    assert acc["fair_share_tenant_p95_wait_mean_s"] < \
+        acc["easy_tenant_p95_wait_mean_s"]
+    assert acc["priority_preempt_evictions"] >= 1
+    assert acc["priority_preempt_starts_gang_sooner"] is True
+    assert all(n >= 1 for n in acc["gangs_started_per_policy"].values())
+
+
+# ---------------------------------------------------------------------------
 # serving benchmark artifact (results/serve_bench.json)
 # ---------------------------------------------------------------------------
 SERVE_BENCH = os.path.join(RESULTS_DIR, "serve_bench.json")

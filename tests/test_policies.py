@@ -1,0 +1,385 @@
+"""Gang scheduling + pluggable policy coverage.
+
+Pins the four tentpole behaviors of the PR-5 control-plane change:
+
+  * ``policy="easy"`` without gangs reproduces the PR-4 scheduling
+    order bit-for-bit (golden start order of the benchmark trace);
+  * ``fair_share`` beats ``easy`` on the skewed-tenant scenario the
+    ``cluster_sim`` artifact ships;
+  * ``priority_preempt`` evicts exactly the lowest-priority gang;
+  * gang leases are all-or-nothing (an induced partial-claim failure
+    leaves the pool unchanged) and simulator replay is deterministic
+    per policy.
+"""
+import json
+
+import pytest
+
+from benchmarks.cluster_sim import BENCH_CFG, SKEW_CFG, policy_report
+from repro.cluster import (ClusterSimulator, Job, JobTemplate, LeaseManager,
+                           Scheduler, TraceConfig, make_policy, plan_gang)
+from repro.cluster.scheduler import DONE, POLICIES, QUEUED, RUNNING
+from repro.core.compose import CompositionError
+from repro.core.topology import LinkClass, make_pool
+
+
+def _gang(name, n_chips=64, n_pods=2, priority=0, steps=10,
+          arch="qwen2-0.5b", shape="train_4k"):
+    return Job(name=name, arch=arch, shape_name=shape, n_chips=n_chips,
+               steps=steps, n_pods=n_pods, priority=priority)
+
+
+# ---------------------------------------------------------------------------
+# easy must stay bit-compatible with the pre-policy scheduler (PR 4)
+# ---------------------------------------------------------------------------
+# start order of benchmarks.cluster_sim.BENCH_CFG captured on the PR-4
+# code (before Policy/gangs existed); job names encode arch/shape
+PR4_START_ORDER = [
+    "qwen2-0.5b-train_4k", "qwen2-0.5b-train_4k", "mamba2-780m-train_4k",
+    "llama3.2-3b-train_4k", "llama3.2-3b-train_4k", "qwen2-0.5b-train_4k",
+    "llama3.2-3b-decode_32k", "qwen2-0.5b-train_4k",
+    "moonshot-v1-16b-a3b-train_4k", "llama3.2-3b-train_4k",
+    "qwen2-0.5b-train_4k", "mamba2-780m-train_4k", "qwen2-0.5b-train_4k",
+    "llama3.2-3b-decode_32k", "llama3.2-3b-prefill_32k",
+    "mamba2-780m-train_4k", "qwen2-0.5b-train_4k", "qwen2-0.5b-train_4k",
+    "llama3.2-3b-train_4k", "llama3.2-3b-prefill_32k",
+    "mamba2-780m-train_4k", "llama3.2-3b-decode_32k",
+    "llama3.2-3b-prefill_32k", "stablelm-12b-prefill_32k",
+]
+
+
+def test_easy_reproduces_pr4_start_order():
+    sim = ClusterSimulator(BENCH_CFG)
+    rep = sim.run()
+    assert rep["policy"] == "easy"
+    starts = [e.job for e in sim.telemetry.events if e.kind == "start"]
+    assert [s.split("-", 2)[2] for s in starts] == PR4_START_ORDER
+    # ... and the PR-4 job names themselves still arrive in index order
+    assert [int(s.split("-")[1]) for s in starts] == list(range(24))
+    assert rep["jobs"]["completed"] == 24
+    assert rep["lease_conflicts"] == 0
+
+
+def test_make_policy_factory():
+    assert set(POLICIES) == {"easy", "fair_share", "priority_preempt"}
+    for name in POLICIES:
+        assert make_policy(name).name == name
+    with pytest.raises(ValueError):
+        make_policy("srtf")
+
+
+# ---------------------------------------------------------------------------
+# fair_share vs easy on the skewed-tenant trace
+# ---------------------------------------------------------------------------
+def test_fair_share_beats_easy_on_skewed_trace():
+    easy = policy_report("easy")
+    fair = policy_report("fair_share")
+    # all work completes under both policies (fair share is reordering,
+    # not starvation)
+    for rep in (easy, fair):
+        assert rep["jobs"]["completed"] == rep["jobs"]["submitted"]
+        assert rep["jobs"]["stranded"] == 0
+        assert rep["lease_conflicts"] == 0
+        assert rep["gangs"]["started"] >= 1
+    # the headline artifact claim: mean per-tenant p95 queue wait drops
+    assert fair["fairness"]["tenant_p95_wait_mean_s"] < \
+        easy["fairness"]["tenant_p95_wait_mean_s"]
+    # ... because the light tenants stop queueing behind the flood
+    for tenant in ("blue", "green"):
+        assert fair["fairness"]["tenants"][tenant]["wait_s"]["p95"] < \
+            easy["fairness"]["tenants"][tenant]["wait_s"]["p95"]
+
+
+def test_fair_share_weights_shift_the_order():
+    """A tenant with a large weight is entitled to more device-seconds
+    before losing its place, so it orders ahead of an equal-usage
+    tenant with a smaller weight."""
+    pool = make_pool(n_local=32, n_switch=0, pods=1)
+    sched = Scheduler(pool, policy="fair_share",
+                      tenant_weights={"vip": 8.0, "std": 1.0})
+    sched.tenant_usage.update({"vip": 80.0, "std": 40.0})
+    a = Job(name="a", arch="qwen2-0.5b", shape_name="train_4k",
+            n_chips=16, tenant="std")
+    b = Job(name="b", arch="qwen2-0.5b", shape_name="train_4k",
+            n_chips=16, tenant="vip")
+    sched.submit(a, 0.0)
+    sched.submit(b, 1.0)
+    # vip deficit 80/8=10 < std 40/1=40 -> b first despite arriving later
+    order = sched.policy.order(sched, 1.0)
+    assert [j.name for j in order] == ["b", "a"]
+
+
+# ---------------------------------------------------------------------------
+# priority preemption: evict exactly the lowest-priority gang
+# ---------------------------------------------------------------------------
+def test_priority_preempt_evicts_exactly_lowest_priority_gang():
+    pool = make_pool(n_local=128, n_switch=128, pods=2)
+    sched = Scheduler(pool, policy="priority_preempt")
+    lo = _gang("gang-lo", n_chips=128, priority=1, steps=200)
+    mid = _gang("gang-mid", n_chips=128, priority=2, steps=200)
+    assert sched.submit(lo, 0.0) and sched.submit(mid, 0.0)
+    assert {j.name for j in sched.poll(0.0)} == {"gang-lo", "gang-mid"}
+    hi = Job(name="hi", arch="qwen2-0.5b", shape_name="train_4k",
+             n_chips=128, steps=5, priority=5)
+    sched.submit(hi, 10.0)
+    started = sched.poll(10.0)
+    assert [j.name for j in started] == ["hi"]
+    assert lo.state == QUEUED            # exactly the lowest gang evicted
+    assert mid.state == RUNNING          # higher-priority gang untouched
+    assert hi.state == RUNNING
+    assert sched.telemetry.jobs_evicted == 1
+    assert sched.telemetry.jobs_preempted == 1
+    assert [j.name for j in sched.drain_policy_victims()] == ["gang-lo"]
+    sched.manager.check_exclusive()
+    # the evicted gang resumes once the preemptor finishes
+    sched.on_complete(hi, 20.0)
+    assert [j.name for j in sched.poll(20.0)] == ["gang-lo"]
+    assert lo.system.axis_sizes == (2, 64, 1)
+
+
+def test_priority_preempt_shrinks_when_half_a_victim_suffices():
+    pool = make_pool(n_local=32, n_switch=0, pods=1)
+    sched = Scheduler(pool, policy="priority_preempt")
+    lo = Job(name="lo", arch="qwen2-0.5b", shape_name="train_4k",
+             n_chips=32, steps=100, priority=0)
+    sched.submit(lo, 0.0)
+    sched.poll(0.0)
+    hi = Job(name="hi", arch="qwen2-0.5b", shape_name="train_4k",
+             n_chips=16, steps=5, priority=5)
+    sched.submit(hi, 5.0)
+    assert [j.name for j in sched.poll(5.0)] == ["hi"]
+    # the victim kept running at half width instead of losing its slot
+    assert lo.state == RUNNING
+    assert lo.system.shape["data"] == 16
+    assert sched.telemetry.jobs_shrunk == 1
+    assert sched.telemetry.jobs_evicted == 0
+    sched.manager.check_exclusive()
+
+
+def test_priority_preempt_defragments_domains_for_gang():
+    """A gang can be blocked by domain fragmentation with a raw chip
+    surplus: enough chips free in total, but no n_pods domains holding a
+    full member each.  The policy must evict by member-domain deficit,
+    not by chip count (which is already <= 0 here)."""
+    pool = make_pool(n_local=64, n_switch=0, pods=4)     # 16 chips/domain
+    sched = Scheduler(pool, policy="priority_preempt")
+    lows = [Job(name=f"lo{i}", arch="qwen2-0.5b", shape_name="train_4k",
+                n_chips=8, steps=200, priority=0) for i in range(3)]
+    for j in lows:
+        sched.submit(j, 0.0)
+    sched.poll(0.0)
+    assert all(j.state == RUNNING for j in lows)         # doms 0,1,2 half-full
+    gang = _gang("g", n_chips=32, n_pods=2, priority=5, steps=5)
+    sched.submit(gang, 1.0)
+    # 40 chips free (> 32 requested) but only domain 3 holds a full
+    # 16-chip member: one low job must be evicted to free a second one
+    started = sched.poll(1.0)
+    assert started[0].name == "g"
+    assert gang.state == RUNNING
+    assert sched.telemetry.jobs_evicted == 1
+    # the evicted job restarts right away on the leftover fragments (8
+    # free chips remain in two other domains) — nothing is stranded
+    assert [j.name for j in started[1:]] == ["lo0"]
+    assert all(j.state == RUNNING for j in lows)
+    sched.manager.check_exclusive()
+
+
+def test_gang_with_oversized_member_clique_rejected_at_submit():
+    """A member clique larger than every locality domain can never
+    place; it must reject at submit instead of stranding at the queue
+    head forever."""
+    pool = make_pool(n_local=64, n_switch=0, pods=4)     # 16 chips/domain
+    sched = Scheduler(pool)
+    job = _gang("g", n_chips=64, n_pods=2)               # 32-chip members
+    assert not sched.submit(job, 0.0)
+    assert "large enough" in job.why_rejected
+
+
+def test_no_eviction_when_head_cannot_fit_anyway():
+    """Livelock regression: a head pinned by an equal-priority job must
+    not trigger evictions of lower-priority work — backfill would
+    restart the victim and the same poll iteration would evict it
+    again, forever, at one simulated timestamp."""
+    pool = make_pool(n_local=32, n_switch=0, pods=1)
+    sched = Scheduler(pool, policy="priority_preempt")
+    blocker = Job(name="blocker", arch="qwen2-0.5b", shape_name="train_4k",
+                  n_chips=16, steps=200, priority=5)
+    victim = Job(name="victim", arch="qwen2-0.5b", shape_name="train_4k",
+                 n_chips=8, steps=200, priority=0)
+    sched.submit(blocker, 0.0)
+    sched.submit(victim, 0.0)
+    sched.poll(0.0)
+    assert blocker.state == RUNNING and victim.state == RUNNING
+    head = Job(name="head", arch="qwen2-0.5b", shape_name="train_4k",
+               n_chips=32, steps=5, priority=5)
+    sched.submit(head, 1.0)
+    started = sched.poll(1.0)            # must terminate, evicting nothing
+    assert started == []
+    assert head.state == QUEUED
+    assert victim.state == RUNNING       # pointless eviction avoided
+    assert sched.telemetry.jobs_evicted == 0
+    assert sched.telemetry.jobs_preempted == 0
+
+
+def test_no_gang_eviction_when_domains_cannot_complete_a_clique():
+    """Same livelock guard on the gang path: a member domain is only a
+    target if evicting every victim there completes a clique."""
+    pool = make_pool(n_local=32, n_switch=0, pods=2)     # 16 chips/domain
+    sched = Scheduler(pool, policy="priority_preempt")
+    blocker = Job(name="blocker", arch="qwen2-0.5b", shape_name="train_4k",
+                  n_chips=16, steps=200, priority=5)     # pins domain 0
+    victim = Job(name="victim", arch="qwen2-0.5b", shape_name="train_4k",
+                 n_chips=8, steps=200, priority=0)       # half of domain 1
+    sched.submit(blocker, 0.0)
+    sched.submit(victim, 0.0)
+    sched.poll(0.0)
+    gang = _gang("g", n_chips=32, n_pods=2, priority=5, steps=5)
+    sched.submit(gang, 1.0)
+    started = sched.poll(1.0)
+    # domain 0 cannot reach 16 free even evicting everything evictable:
+    # no eviction may happen and poll must terminate
+    assert started == []
+    assert gang.state == QUEUED and victim.state == RUNNING
+    assert sched.telemetry.jobs_evicted == 0
+
+
+def test_equal_priority_never_preempts():
+    pool = make_pool(n_local=32, n_switch=0, pods=1)
+    sched = Scheduler(pool, policy="priority_preempt")
+    a = Job(name="a", arch="qwen2-0.5b", shape_name="train_4k",
+            n_chips=32, steps=100, priority=3)
+    sched.submit(a, 0.0)
+    sched.poll(0.0)
+    b = Job(name="b", arch="qwen2-0.5b", shape_name="train_4k",
+            n_chips=32, steps=5, priority=3)
+    sched.submit(b, 1.0)
+    assert sched.poll(1.0) == []
+    assert a.state == RUNNING and b.state == QUEUED
+    assert sched.telemetry.jobs_evicted == 0
+
+
+# ---------------------------------------------------------------------------
+# gang leases: planning + all-or-nothing acquisition
+# ---------------------------------------------------------------------------
+def test_gang_plan_confines_members_and_minimizes_span():
+    pool = make_pool(n_local=256, n_switch=0, pods=4)
+    # domain 1 is fully busy: the closest eligible window is (2, 3)
+    busy = [d.uid for d in pool.devices if d.domain == 1]
+    pool.lease(busy, "blocker")
+    gang = plan_gang(pool, 2, dp=16, tp=2)
+    assert gang.domains == (2, 3)
+    assert gang.dcn_hops == 1
+    dom = {d.uid: d.domain for d in pool.devices}
+    for member, want in zip(gang.members, gang.domains):
+        assert {dom[u] for u in member.uids} == {want}
+    assert gang.axis_links["pod"] == LinkClass.DCN
+
+
+def test_gang_acquire_is_all_or_nothing():
+    pool = make_pool(n_local=128, n_switch=0, pods=2)
+    manager = LeaseManager(pool)
+    gang = plan_gang(pool, 2, dp=8, tp=4)
+    # induce a partial-claim failure: one device of the SECOND member is
+    # grabbed between planning and acquisition
+    intruder_uid = gang.members[1].uids[0]
+    pool.lease([intruder_uid], "intruder")
+    before = dict(pool.leases)
+    with pytest.raises(CompositionError, match="rolled back"):
+        manager.acquire_gang("gang-job", gang)
+    assert pool.leases == before         # first member fully rolled back
+    assert manager.conflicts == 1
+    assert manager.active() == []
+    # with the intruder gone, the same plan acquires atomically
+    pool.release([intruder_uid])
+    lease = manager.acquire_gang("gang-job", gang)
+    assert set(lease.uids) == set(gang.uids)
+    manager.check_exclusive()
+
+
+def test_gang_needs_enough_domains():
+    pool = make_pool(n_local=64, n_switch=0, pods=2)
+    with pytest.raises(CompositionError, match="domains"):
+        plan_gang(pool, 4, dp=8, tp=1)   # only 2 domains exist
+    with pytest.raises(CompositionError):
+        plan_gang(pool, 1, dp=8, tp=1)   # a gang is >= 2 pods
+
+
+def test_gang_admission_prices_pod_axis_on_dcn():
+    pool = make_pool(n_local=128, n_switch=128, pods=2)
+    sched = Scheduler(pool)
+    job = _gang("g", n_chips=64)
+    assert sched.submit(job, 0.0)
+    assert job.plan.shape[0] == 2            # (pod, dp, tp)
+    assert job.plan.wire_bytes.get("pod", 0.0) > 0
+    assert sched.poll(0.0) == [job]
+    assert job.system.axis_names == ("pod", "data", "model")
+    assert job.system.fabric.axis_links["pod"] == LinkClass.DCN
+    assert job.gang_domains == (0, 1)
+    # indivisible chip budgets are rejected at submit, not at compose
+    bad = _gang("bad", n_chips=65, n_pods=2)
+    assert not sched.submit(bad, 0.0)
+    assert "divide" in bad.why_rejected
+    # ... as is a gang spanning more pods than the pool has domains
+    wide = _gang("wide", n_chips=64, n_pods=4)
+    assert not sched.submit(wide, 0.0)
+    assert "domains" in wide.why_rejected
+
+
+def test_gang_member_failure_preempts_whole_gang():
+    pool = make_pool(n_local=128, n_switch=128, pods=2)
+    sched = Scheduler(pool)
+    job = _gang("g", n_chips=64, steps=50)
+    sched.submit(job, 0.0)
+    sched.poll(0.0)
+    assert job.state == RUNNING
+    changed = sched.on_failure([job.system.device_uids[0]], now=5.0)
+    assert changed == [job]
+    assert job.state == QUEUED           # no cross-pod shrink: all or nothing
+    assert not pool.leases
+    assert sched.telemetry.jobs_preempted == 1
+
+
+# ---------------------------------------------------------------------------
+# simulator: gang traffic on the DCN + per-policy determinism
+# ---------------------------------------------------------------------------
+def test_gang_trace_attributes_dcn_traffic():
+    tpl = JobTemplate("qwen2-0.5b", "train_4k", 64, 10, n_pods=2,
+                      tenant="gang")
+    cfg = TraceConfig(n_jobs=0, seed=1, failures=(),
+                      arrivals=((0.0, tpl), (1.0, tpl)))
+    rep = ClusterSimulator(cfg).run()
+    assert rep["jobs"]["completed"] == 2
+    assert rep["gangs"]["started"] == 2
+    assert rep["gangs"]["max_span"] >= 1
+    assert rep["link_traffic_gb"]["dcn"] > 0
+    json.dumps(rep)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_simulator_replay_is_deterministic_per_policy(policy):
+    a = policy_report(policy)
+    b = policy_report(policy)
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+    assert a["policy"] == policy
+
+
+def test_policies_actually_diverge_on_the_skewed_trace():
+    reports = {p: json.dumps(policy_report(p), sort_keys=True)
+               for p in POLICIES}
+    assert len(set(reports.values())) == len(POLICIES)
+
+
+def test_policy_sweep_survives_failure_waves():
+    """Evictions, gang preemptions, and failure recomposition compose:
+    nothing strands and leases stay exclusive under every policy."""
+    import dataclasses
+    cfg = dataclasses.replace(SKEW_CFG, failures=((30.0, 16),),
+                              repair_after_s=60.0)
+    for policy in POLICIES:
+        rep = ClusterSimulator(
+            dataclasses.replace(cfg, policy=policy)).run()
+        jobs = rep["jobs"]
+        assert jobs["completed"] + jobs["rejected"] == jobs["submitted"], \
+            policy
+        assert jobs["stranded"] == 0, policy
+        assert rep["lease_conflicts"] == 0, policy

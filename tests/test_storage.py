@@ -312,6 +312,69 @@ def test_scheduler_co_tenants_stall_more_than_solo():
     assert jobs[0].input_stall_s == pytest.approx(solo_stall)
 
 
+def test_restore_priced_against_contended_tranche():
+    """Regression (ROADMAP storage follow-up): a checkpoint restore
+    reads through the tranche the job holds, at the *contended*
+    per-lessee bandwidth — not the uncontended tier rate Job.est_restore_s
+    assumes.  With 2 lessees on one tranche the restore takes 2x."""
+    dev = make_pool(n_local=64, n_switch=0, pods=1)
+    one_tranche = StoragePool([StorageTranche("shared")])
+    sched = Scheduler(dev, storage=one_tranche)
+    jobs = [Job(name=f"j{i}", arch="qwen2-0.5b", shape_name="train_4k",
+                n_chips=16, steps=10) for i in range(2)]
+    for j in jobs:
+        sched.submit(j, 0.0)
+    sched.poll(0.0)
+    assert one_tranche.n_lessees("shared") == 2
+    job = jobs[0]
+    job.steps_done = 4.0                 # a resume has progress to restore
+    uncontended = job.est_restore_s()
+    contended = sched.restore_s(job)
+    assert uncontended > 0
+    assert contended == pytest.approx(2.0 * uncontended)
+    # the simulator prices restores through the scheduler's view
+    from repro.cluster.simulator import restore_overhead_s
+    assert restore_overhead_s(job, sched) == pytest.approx(contended)
+    assert restore_overhead_s(job) == pytest.approx(uncontended)
+    # a job with no progress restores nothing; a queued job (no tranche)
+    # falls back to the uncontended placement-unknown estimate
+    job.steps_done = 0.0
+    assert sched.restore_s(job) == 0.0
+    queued = Job(name="q", arch="qwen2-0.5b", shape_name="train_4k",
+                 n_chips=16, steps=10, steps_done=4.0)
+    assert sched.restore_s(queued) == pytest.approx(queued.est_restore_s())
+
+
+def test_preempt_restart_pays_contended_restore_in_simulator():
+    """End-to-end: preempted jobs resume later when their restores are
+    priced on a shared (contended) tranche than on idle per-tenant
+    tranches.  The I/O is deliberately stall-free and both configs use
+    the same LOCAL attach tier, so the *only* difference between the
+    runs is the per-lessee restore bandwidth — the pre-fix uncontended
+    pricing made these makespans identical."""
+    # reads so small the prefetcher always hides them (zero steady-state
+    # stall at any lessee count), no checkpoint write bursts
+    tiny_io = IOWorkload("tiny", 1.0, 0.0, batch_size=1,
+                         samples_per_epoch=1024)
+    tmpl = (JobTemplate("qwen2-0.5b", "train_4k", 16, 30, io=tiny_io),)
+
+    def makespan(tranches):
+        cfg = TraceConfig(n_jobs=4, arrival_rate_hz=5.0, seed=1,
+                          n_local=64, n_switch=0, pods=1, templates=tmpl,
+                          failures=((5.0, 64),), repair_after_s=20.0,
+                          storage_tranches=tranches)
+        rep = ClusterSimulator(cfg).run()
+        assert rep["jobs"]["completed"] == 4
+        assert rep["jobs"]["preempted"] >= 1     # the wave hit everyone
+        for st in rep["storage"].values():
+            assert st["input_stall_s"] == 0.0    # restores only
+        return rep["makespan_s"]
+
+    shared = (StorageTranche("shared"),)         # 4 lessees, LOCAL attach
+    separate = tuple(StorageTranche(f"local-{i}") for i in range(4))
+    assert makespan(shared) > makespan(separate)
+
+
 def test_preempt_releases_tranche_and_clears_stall():
     dev = make_pool(n_local=8, n_switch=0, pods=1)
     sched = Scheduler(dev, storage=_pool())
