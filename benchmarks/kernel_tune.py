@@ -26,6 +26,27 @@ ITERS = 2
 DEMO_ARCH, DEMO_SHAPE, DEMO_CHIPS = "qwen2-0.5b", "train_4k", 64
 
 
+# Perf-trajectory spec for results/BENCH_kernel_tune.json (see
+# docs/tracking.md).  This bench measures wall-clock kernel timings, so
+# everything host-dependent is info-only; only sweep coverage is gated.
+TRAJECTORY = {
+    "n_cases": {"direction": "up"},
+    "n_non_default": {"direction": "info"},
+    "registry_size": {"direction": "info"},
+    "kernel_speedup_mean": {"direction": "info"},
+    "sweep_wall_s": {"direction": "info"},
+}
+
+
+def trajectory_row(rep: Dict[str, object]) -> Dict[str, float]:
+    """Flatten one report() into the gated summary-row metrics."""
+    speedups = rep["kernel_speedup"] or {}   # per-kernel dict -> scalar
+    row = {k: float(rep[k]) for k in TRAJECTORY if k in rep}
+    row["kernel_speedup_mean"] = (
+        sum(speedups.values()) / len(speedups) if speedups else 1.0)
+    return row
+
+
 def _recommend_demo(cal: CalibratedCost) -> Dict[str, object]:
     """Analytic vs calibrated top-3 for one cell (the feedback loop)."""
     plain = recommend.recommend(DEMO_ARCH, DEMO_SHAPE, n_chips=DEMO_CHIPS,

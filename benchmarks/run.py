@@ -4,8 +4,15 @@ Usage: PYTHONPATH=src python -m benchmarks.run [--only fig11]
 Prints ``name,us_per_call,derived`` CSV per row.
 
 ``--bench <name>`` runs one module and, when it exposes ``report()``,
-emits the JSON artifact to stdout and ``results/<name>.json`` (the
-machine-readable perf trajectory; currently ``cluster_sim``).
+emits the JSON artifact to stdout and ``results/<name>.json``.  Every
+``--bench`` invocation is a **tracked run** (``repro.tracking``): the
+report is produced under an active ``tracking.init(...)`` scope (so the
+simulator/engine mirror their telemetry into the run's
+``events.jsonl``), the artifact is stamped with ``schema_version`` and
+``run_id``, and — when the module declares a ``TRAJECTORY`` metric spec
+plus ``trajectory_row()`` — exactly one summary row is appended to
+``results/BENCH_<name>.json`` for ``scripts/check_perf.py`` to gate.
+Pass ``--no-track`` to skip tracking (pure artifact regeneration).
 """
 from __future__ import annotations
 
@@ -14,6 +21,8 @@ import json
 import os
 import sys
 
+ARTIFACT_SCHEMA_VERSION = 1
+
 
 def main() -> int:
     ap = argparse.ArgumentParser()
@@ -21,6 +30,11 @@ def main() -> int:
     ap.add_argument("--bench", default="",
                     help="run one module; write its JSON report artifact")
     ap.add_argument("--out-dir", default="results")
+    ap.add_argument("--no-track", action="store_true",
+                    help="skip run tracking / trajectory append")
+    ap.add_argument("--run-id", default="",
+                    help="override the tracked run id (idempotent "
+                         "trajectory append per run id)")
     args = ap.parse_args()
 
     from benchmarks import (beyond_paper, cluster_sim, fig10_utilization,
@@ -55,7 +69,43 @@ def main() -> int:
             print(f"bench {args.bench!r} has no report(); use --only",
                   file=sys.stderr)
             return 2
-        rep = mod.report()
+
+        run = None
+        if not args.no_track:
+            import repro.tracking as tracking
+            run = tracking.init(
+                args.bench, config={"bench": args.bench},
+                tags=("bench",),
+                dir=os.path.join(args.out_dir, "runs"),
+                run_id=args.run_id or None,
+                samplers=[tracking.ProcSampler()])
+            run.log_system()
+
+        try:
+            rep = mod.report()
+            rep["schema_version"] = ARTIFACT_SCHEMA_VERSION
+            if run is not None:
+                rep["run_id"] = run.id
+                run.log_system()
+                spec = getattr(mod, "TRAJECTORY", None)
+                if spec is not None:
+                    from repro.tracking import trajectory
+                    row = mod.trajectory_row(rep)
+                    run.log_summary(row)
+                    trajectory.append_summary(
+                        trajectory.path_for(args.bench, args.out_dir),
+                        args.bench, spec, run_id=run.id,
+                        git_sha=run.git_sha, ts=run.clock(), metrics=row)
+                    print(f"appended trajectory row {run.id} to "
+                          f"{trajectory.path_for(args.bench, args.out_dir)}",
+                          file=sys.stderr)
+        except BaseException:
+            if run is not None:
+                run.finish("error")
+            raise
+        if run is not None:
+            run.finish()
+
         out = json.dumps(rep, indent=2, default=str)
         print(out)
         os.makedirs(args.out_dir, exist_ok=True)

@@ -38,6 +38,36 @@ PREFIX_LEN = 24
 MAX_NEW = 8
 
 
+# Perf-trajectory spec for results/BENCH_serve_bench.json (see
+# docs/tracking.md).  Gated metrics come from the deterministic cluster
+# layer (poisson arrivals) and the engine's exact cache-hit accounting;
+# the engine's wall-clock latencies vary by host and stay info-only.
+TRAJECTORY = {
+    "cluster_poisson_ttft_p99_s": {"direction": "down"},
+    "cluster_poisson_tpot_p50_s": {"direction": "down"},
+    "cluster_poisson_slo_attainment": {"direction": "up"},
+    "cluster_poisson_throughput_tok_s": {"direction": "up"},
+    "engine_burst_cache_hit_rate": {"direction": "up"},
+    "engine_burst_throughput_tok_s": {"direction": "info"},
+    "engine_burst_ttft_p50_s": {"direction": "info"},
+}
+
+
+def trajectory_row(rep: Dict[str, object]) -> Dict[str, float]:
+    """Flatten one report() into the gated summary-row metrics."""
+    svc = rep["cluster"]["poisson"]["serving"]["chat"]
+    eng = rep["engine"]["burst"]
+    return {
+        "cluster_poisson_ttft_p99_s": svc["ttft_s"]["p99"],
+        "cluster_poisson_tpot_p50_s": svc["tpot_s"]["p50"],
+        "cluster_poisson_slo_attainment": svc["slo_attainment"],
+        "cluster_poisson_throughput_tok_s": svc["throughput_tok_s"],
+        "engine_burst_cache_hit_rate": eng["kv_pages"]["hit_rate"],
+        "engine_burst_throughput_tok_s": eng["throughput_tok_s"],
+        "engine_burst_ttft_p50_s": eng["ttft_s"]["p50"],
+    }
+
+
 def _requests(vocab: int) -> List[ServeRequest]:
     """Shared-prefix request mix: two system prompts, per-request tails."""
     rng = np.random.RandomState(0)

@@ -45,6 +45,32 @@ HEAVY_IO = IOWorkload("heavy-input", 1e6, 0.3e6, batch_size=512,
 STEP_S = 0.25                       # representative compute step time
 
 
+# Perf-trajectory spec for results/BENCH_storage_bench.json (see
+# docs/tracking.md).  The whole bench is analytic + fixed-seed, so every
+# metric is machine-independent and gateable.
+TRAJECTORY = {
+    "shared_stall_s": {"direction": "down"},
+    "separate_stall_s": {"direction": "down"},
+    "contention_slowdown_t2": {"direction": "down"},
+    "contention_slowdown_t4": {"direction": "down"},
+    "makespan_gap_s": {"direction": "down"},
+}
+
+
+def trajectory_row(rep: Dict[str, object]) -> Dict[str, float]:
+    """Flatten one report() into the gated summary-row metrics."""
+    acc = rep["cluster"]["acceptance"]
+    return {
+        "shared_stall_s": acc["shared_stall_s"],
+        "separate_stall_s": acc["separate_stall_s"],
+        "contention_slowdown_t2":
+            rep["sweep"]["tenants_2"]["contention_slowdown"],
+        "contention_slowdown_t4":
+            rep["sweep"]["tenants_4"]["contention_slowdown"],
+        "makespan_gap_s": acc["makespan_gap_s"],
+    }
+
+
 def _tranche(attach: LinkClass, i: int = 0) -> StorageTranche:
     name = f"{'local' if attach == LinkClass.LOCAL else 'falcon'}-nvme-{i}"
     return StorageTranche(name, attach=attach)

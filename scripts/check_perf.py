@@ -1,0 +1,159 @@
+#!/usr/bin/env python3
+"""Perf-regression CI gate over ``results/BENCH_*.json`` trajectories.
+
+Compares each trajectory's newest row against the median of a trailing
+window of prior rows (see :mod:`repro.tracking.gate` for the
+direction-aware semantics: throughput-down and p95-wait-up are
+regressions; ``info`` metrics are recorded but never gated).
+
+Usage::
+
+    PYTHONPATH=src python scripts/check_perf.py                # gate
+    PYTHONPATH=src python scripts/check_perf.py --window 8 --band 0.15
+    PYTHONPATH=src python scripts/check_perf.py --update-baseline
+    PYTHONPATH=src python scripts/check_perf.py --demo-regression
+
+Exit status: 0 = every gated metric within its noise band (or fresh
+baseline); 1 = at least one regression, named in the printed table.
+
+``--update-baseline`` anchors each trajectory's baseline at its newest
+row (for intentional perf changes); ``--demo-regression`` proves the
+gate works by appending a synthetic 20% regression to a *temporary
+copy* of each trajectory and asserting the gate rejects it — the CI
+job runs this after the real gate so a silently-broken gate fails the
+build.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import shutil
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.tracking import gate, trajectory  # noqa: E402
+
+
+def _trajectories(results_dir: str):
+    return sorted(glob.glob(os.path.join(results_dir, "BENCH_*.json")))
+
+
+def run_gate(results_dir: str, window: int, band: float) -> int:
+    paths = _trajectories(results_dir)
+    if not paths:
+        print(f"check_perf: no BENCH_*.json trajectories in {results_dir!r}"
+              " — nothing to gate")
+        return 0
+    verdicts = []
+    for p in paths:
+        verdicts += gate.check_trajectory(trajectory.load(p),
+                                          window=window, band=band)
+    print(gate.format_table(verdicts))
+    bad = [v for v in verdicts if v.regressed]
+    if bad:
+        names = ", ".join(f"{v.bench}/{v.metric}" for v in bad)
+        print(f"\ncheck_perf: FAIL — {len(bad)} regressed metric(s): {names}")
+        return 1
+    gated = sum(1 for v in verdicts if v.direction != "info")
+    print(f"\ncheck_perf: OK ({len(paths)} trajectories, "
+          f"{gated} gated metrics within the noise band)")
+    return 0
+
+
+def update_baselines(results_dir: str) -> int:
+    for p in _trajectories(results_dir):
+        traj = gate.update_baseline(trajectory.load(p))
+        trajectory._write_atomic(p, traj)
+        print(f"check_perf: baseline for {traj['bench']} anchored at "
+              f"{traj['baseline_run_id']}")
+    return 0
+
+
+def _degrade(value: float, direction: str, frac: float) -> float:
+    # move the metric the *bad* way by `frac`; a zero value cannot be
+    # degraded multiplicatively, so nudge it additively past the gate's
+    # zero-baseline rule (any worsening movement at all is flagged)
+    if value == 0.0:
+        return -1.0 if direction == "up" else 1.0
+    return value * (1.0 - frac) if direction == "up" else \
+        value * (1.0 + frac)
+
+
+def demo_regression(results_dir: str, window: int, band: float,
+                    frac: float = 0.20) -> int:
+    """Self-test: a synthetic ``frac`` regression must trip the gate."""
+    paths = _trajectories(results_dir)
+    if not paths:
+        print("check_perf: no trajectories — demo skipped")
+        return 0
+    tmp = tempfile.mkdtemp(prefix="check_perf_demo_")
+    try:
+        failures = []
+        for p in paths:
+            dst = os.path.join(tmp, os.path.basename(p))
+            shutil.copy(p, dst)
+            traj = trajectory.load(dst)
+            rows = traj.get("rows", [])
+            spec = traj.get("metrics", {})
+            gated = {k: m for k, m in spec.items()
+                     if m.get("direction") in ("up", "down")}
+            if not rows or not gated:
+                continue
+            last = rows[-1]
+            bad_metrics = {
+                k: _degrade(float(last["metrics"][k]),
+                            spec[k]["direction"], frac)
+                for k in gated if k in last["metrics"]}
+            trajectory.append_summary(
+                dst, traj["bench"], spec, run_id="synthetic-regression",
+                git_sha="0000000", ts=float(last.get("ts", 0.0)) + 1.0,
+                metrics={**last["metrics"], **bad_metrics})
+            verdicts = gate.check_trajectory(trajectory.load(dst),
+                                             window=window, band=band)
+            tripped = sorted(v.metric for v in verdicts if v.regressed)
+            want = sorted(bad_metrics)
+            if tripped != want:
+                failures.append((traj["bench"], want, tripped))
+            else:
+                print(f"check_perf: demo OK — {traj['bench']}: synthetic "
+                      f"{frac:.0%} regression tripped "
+                      f"{len(tripped)} metric(s): {', '.join(tripped)}")
+        if failures:
+            for bench, want, got in failures:
+                print(f"check_perf: demo FAIL — {bench}: expected "
+                      f"{want} to regress, gate flagged {got}")
+            return 1
+        return 0
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--results-dir", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "results"))
+    ap.add_argument("--window", type=int, default=gate.DEFAULT_WINDOW,
+                    help="trailing-window size for the baseline median")
+    ap.add_argument("--band", type=float, default=gate.DEFAULT_BAND,
+                    help="default noise band (fraction, e.g. 0.10)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="anchor each baseline at the newest row")
+    ap.add_argument("--demo-regression", action="store_true",
+                    help="self-test: synthetic 20%% regression must trip "
+                         "the gate (on temp copies; trajectories untouched)")
+    args = ap.parse_args()
+    if args.update_baseline:
+        return update_baselines(args.results_dir)
+    if args.demo_regression:
+        return demo_regression(args.results_dir, args.window, args.band)
+    return run_gate(args.results_dir, args.window, args.band)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -111,6 +111,13 @@ class Job:
     gang_domains: Tuple[int, ...] = ()
     # fairness accounting tenant; "" bills the job to its own name
     tenant: str = ""
+    # anti-thrash: policy evictions consumed / allowed.  A job at its
+    # budget is pinned runnable — priority_preempt stops considering it
+    # a victim (counted as ``evictions_suppressed`` in telemetry) — so a
+    # low-priority job repeatedly evicted by arriving gangs still
+    # finishes.  Failure preemptions do not consume budget.
+    evictions: int = 0
+    max_evictions: int = 3
 
     @property
     def kind(self) -> str:
@@ -279,9 +286,19 @@ class PriorityPreemptPolicy(Policy):
         victims for a head that stays blocked anyway (e.g. pinned by an
         equal-priority job) would let backfill restart the victim and
         the next poll iteration evict it again: a livelock at one
-        simulated timestamp."""
+        simulated timestamp.
+
+        Victims at their eviction budget (``Job.max_evictions``) are
+        pinned runnable: excluded from candidacy (and counted in
+        ``telemetry.jobs_evictions_suppressed``), so repeated arrivals
+        cannot thrash one low-priority job forever."""
+        candidates = [r for r in sched.running if r.priority < job.priority]
+        pinned = sum(1 for r in candidates
+                     if r.evictions >= r.max_evictions)
+        if pinned:
+            sched.telemetry.jobs_evictions_suppressed += pinned
         victims = sorted(
-            (r for r in sched.running if r.priority < job.priority),
+            (r for r in candidates if r.evictions < r.max_evictions),
             key=lambda r: (r.priority, -r.start_t, r.name))
         if not victims:
             return False
@@ -671,6 +688,34 @@ class Scheduler:
             return pbytes / self.storage.read_bw(job.system.tranche)
         return job.est_restore_s()
 
+    def est_restore_for(self, job: Job) -> float:
+        """Policy-aware restore estimate for a job being *considered*
+        (the backfill guard's view).
+
+        A queued preempted job holds no tranche, but the tranche a
+        restart would lease is knowable — ``plan_tranche`` is the same
+        deterministic selection ``_start`` will make — and the restore
+        read contends with that tranche's existing lessees *plus the
+        restarting job itself*.  ``Job.est_restore_s``'s uncontended
+        tier rate under-prices exactly when the pool's tranches are
+        shared, letting backfill start restores that overrun the head
+        job's reservation.  Falls back to the job's own estimate when
+        no tranche currently fits (admission will conflict anyway).
+        """
+        if job.steps_done <= 0:
+            return 0.0
+        if job.system is not None and job.system.tranche is not None:
+            return self.restore_s(job)
+        try:
+            tranche = plan_tranche(
+                self.storage, capacity_bytes=self._storage_request(job))
+        except CompositionError:
+            return job.est_restore_s()
+        pbytes = get_config(job.arch).param_count() * 4.0
+        bw = tranche.effective_read_bw(
+            self.storage.links, self.storage.n_lessees(tranche.name) + 1)
+        return pbytes / bw
+
     # ---------------------------------------------------------- fairness --
     def _accrue_usage(self, now: float) -> None:
         """Integrate running device-seconds per tenant up to ``now`` —
@@ -729,8 +774,12 @@ class Scheduler:
                 if self.backfill:
                     reserve_t = self._reservation_t(head.n_chips, now)
                     for job in order[1:]:
+                        # restore priced policy-aware (est_restore_for):
+                        # a backfilled restart reads its checkpoint at the
+                        # contended bandwidth of the tranche it will
+                        # actually lease, not the uncontended tier rate
                         if (self._fits_now(job, free)
-                                and now + job.est_restore_s()
+                                and now + self.est_restore_for(job)
                                 + job.est_duration_s() <= reserve_t):
                             picked = job
                             break
@@ -889,6 +938,7 @@ class Scheduler:
         freed = job.system.n_devices if job.system is not None else 0
         why = f"preempted for {for_job or 'higher priority'}"
         self._preempt(job, now, why=why)
+        job.evictions += 1
         self.telemetry.jobs_evicted += 1
         self.telemetry.log(now, "evict", job.name, why)
         self.policy_victims.append(job)

@@ -83,6 +83,8 @@ class JobTemplate:
     n_pods: int = 1
     tenant: str = ""
     priority: int = 0
+    # anti-thrash eviction budget forwarded to Job.max_evictions
+    max_evictions: int = 3
 
 
 # A mixed train/serve diet over small-to-mid archs: feasible on modest
@@ -211,10 +213,21 @@ def restore_overhead_s(job: Job,
 
 
 class ClusterSimulator:
-    """Discrete-event loop over a shared pool; deterministic per seed."""
+    """Discrete-event loop over a shared pool; deterministic per seed.
 
-    def __init__(self, cfg: TraceConfig):
+    ``tracker`` is an optional ``repro.tracking.Run``; when omitted the
+    process-wide current run (``tracking.current_run()``) is used, so a
+    simulation executed under ``tracking.init(...)`` — e.g. by
+    ``benchmarks/run.py --bench`` — transparently mirrors its telemetry
+    event stream (evicts, shrinks, gang spans, storage stalls) and
+    occupancy summary into the run's ``events.jsonl``.  The mirror runs
+    after the event loop drains and never touches ``report()``, so the
+    bit-determinism contract is unchanged.
+    """
+
+    def __init__(self, cfg: TraceConfig, tracker: object = None):
         self.cfg = cfg
+        self.tracker = tracker
         self.pool = make_pool(n_local=cfg.n_local, n_switch=cfg.n_switch,
                               pods=cfg.pods)
         self.telemetry = Telemetry(len(self.pool.devices))
@@ -269,7 +282,8 @@ class ClusterSimulator:
                       arch=tpl.arch, shape_name=tpl.shape_name,
                       n_chips=tpl.n_chips, steps=tpl.steps, io=tpl.io,
                       n_pods=tpl.n_pods, tenant=tpl.tenant,
-                      priority=tpl.priority)
+                      priority=tpl.priority,
+                      max_evictions=tpl.max_evictions)
             self.jobs[job.name] = job
             self._push(t_arr, "arrival", job.name)
 
@@ -657,7 +671,42 @@ class ClusterSimulator:
         self.wall_s = time.perf_counter() - wall0
         self.events_per_s = (len(self.telemetry.events) / self.wall_s
                              if self.wall_s > 0 else 0.0)
-        return self.report()
+        rep = self.report()
+        self._mirror_to_tracker(rep)
+        return rep
+
+    def _mirror_to_tracker(self, rep: Dict[str, object]) -> None:
+        """Mirror the finished trace into the active tracking run (no-op
+        without one): the control-plane event stream as ``event``
+        records keyed by simulated time, plus one ``system`` sample of
+        the harness counters (AUU, per-link byte rates, pool util)."""
+        from repro import tracking
+        run = self.tracker or tracking.current_run()
+        if run is None:
+            return
+        for ev in self.telemetry.events:
+            if ev.kind in ("submit", "start", "complete"):
+                continue        # high-volume steady-state; keep the stream
+                                # focused on recomposition-plane events
+            run.log_event(f"sim.{ev.kind}",
+                          {"job": ev.job, "detail": ev.detail}, sim_t=ev.t)
+        counters = {"sim.auu": rep["auu"],
+                    "sim.pool_utilization": rep["pool_utilization"]}
+        for link, gbps in rep["link_traffic_gbps"].items():
+            counters[f"sim.link_gbps.{link}"] = gbps
+        for name, st in rep["storage"].items():
+            counters[f"sim.storage_stall_s.{name}"] = st["input_stall_s"]
+        run.log_system(counters)
+        run.log({
+            "makespan_s": rep["makespan_s"],
+            "auu": rep["auu"],
+            "pool_utilization": rep["pool_utilization"],
+            "jobs_evicted": rep["jobs"]["evicted"],
+            "jobs_shrunk": rep["jobs"]["shrunk"],
+            "gangs_started": rep["gangs"]["started"],
+            "recompositions": rep["recomposition"]["count"],
+            "sim_wall_s": self.wall_s,
+        })
 
     # ------------------------------------------------------------- report --
     def report(self) -> Dict[str, object]:

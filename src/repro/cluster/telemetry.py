@@ -215,6 +215,7 @@ class Telemetry:
         self.jobs_preempted = 0
         self.jobs_evicted = 0           # policy-driven preemptions (subset)
         self.jobs_shrunk = 0            # policy-driven preempt-to-shrink
+        self.jobs_evictions_suppressed = 0   # victims pinned at budget
         self.storage: Dict[str, StorageStats] = {}   # tranche -> stats
         # gang scheduling: one span sample per gang start (DCN hop span)
         self.gang_spans: List[int] = []
@@ -349,6 +350,7 @@ class Telemetry:
                 "preempted": self.jobs_preempted,
                 "evicted": self.jobs_evicted,
                 "shrunk": self.jobs_shrunk,
+                "evictions_suppressed": self.jobs_evictions_suppressed,
             },
             "gangs": {
                 "started": len(spans),

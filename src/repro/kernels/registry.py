@@ -19,6 +19,7 @@ Registry file schema (``results/tuned_configs.json`` by default, or
 ``$REPRO_TUNED_CONFIGS``):
 
     {"version": 1,
+     "schema_version": 1,
      "configs": {"<key>": {"blocks": {"block_q": 128, ...},
                            "us": 812.4,          # best measured us/call
                            "default_us": 991.2,  # default-config us/call
@@ -128,6 +129,7 @@ class Registry:
         path = path or self.path or DEFAULT_PATH
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         js = {"version": 1,
+              "schema_version": 1,
               "configs": {k: e.to_json()
                           for k, e in sorted(self.entries.items())}}
         with open(path, "w") as f:

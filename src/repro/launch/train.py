@@ -74,10 +74,25 @@ def main() -> int:
     ap.add_argument("--fail-at", type=int, default=0,
                     help="simulate a crash at this step (elastic test)")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--track", action="store_true",
+                    help="record the run via repro.tracking "
+                         "(results/runs/<run_id>/events.jsonl)")
     args = ap.parse_args()
 
     cfg, policy, optcfg, schedcfg = build(args)
     shape = ShapeConfig("cli", args.seq, args.batch, "train")
+
+    run = None
+    if args.track:
+        from repro import tracking
+        run = tracking.init(
+            f"train-{args.arch}",
+            config={"arch": args.arch, "preset": args.preset,
+                    "steps": args.steps, "batch": args.batch,
+                    "seq": args.seq, "lr": args.lr, "dtype": args.dtype,
+                    "zero": args.zero, "grad_accum": args.grad_accum},
+            tags=("train",), samplers=[tracking.ProcSampler()])
+        print(f"tracking run {run.id} -> {run.path}")
     print(f"training {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
           f"batch {args.batch} x seq {args.seq}, {args.steps} steps")
 
@@ -91,10 +106,12 @@ def main() -> int:
     step_fn = jax.jit(trainer.make_train_step(cfg, policy, optcfg,
                                               schedcfg, shape=shape))
     ds = SyntheticDataset(cfg, shape)
+    stepper = trainer.StepTracker(shape.tokens, run)
     t0 = time.time()
     for step in range(start, args.steps):
         batch = {k: jnp.asarray(v) for k, v in ds.batch_at(step).items()}
         state, metrics = step_fn(state, batch)
+        stepper.step(step, metrics)
         if args.ckpt and (step + 1) % args.ckpt_every == 0:
             checkpoint.save(args.ckpt, step + 1, state)
         if args.fail_at and step + 1 == args.fail_at:
@@ -102,6 +119,9 @@ def main() -> int:
                 checkpoint.save(args.ckpt, step + 1, state)
             print(f"simulated failure at step {step + 1} — restart with "
                   f"--resume auto")
+            if run is not None:
+                stepper.summary()
+                run.finish("failed")
             return 17
         if (step + 1) % args.log_every == 0 or step == start:
             toks = shape.tokens * (step + 1 - start)
@@ -110,6 +130,9 @@ def main() -> int:
                   f"  tok/s {toks / (time.time() - t0):.0f}")
     if args.ckpt:
         checkpoint.save(args.ckpt, args.steps, state)
+    if run is not None:
+        stepper.summary()
+        run.finish()
     print(f"done in {time.time() - t0:.1f}s")
     return 0
 

@@ -232,13 +232,20 @@ class AsyncServeEngine:
 
     ``mode="auto"`` picks per architecture.  ``clock`` is injectable for
     deterministic tests (defaults to ``time.monotonic``).
+
+    ``tracker`` is an optional ``repro.tracking.Run`` (default: the
+    process-wide ``tracking.current_run()``); with one active, every
+    ``track_every`` engine iterations one windowed metrics row is logged
+    (TTFT/TPOT percentiles so far, queue depth, SLO attainment,
+    window throughput) plus a system sample of KV-page occupancy.
     """
 
     def __init__(self, cfg: ModelConfig, params, policy: PolicyConfig, *,
                  n_slots: int = 4, max_seq: int = 512, page_size: int = 16,
                  n_pages: Optional[int] = None, prefill_chunk: int = 64,
                  prefill_batch: int = 2, sched_policy: str = "slo",
-                 mode: str = "auto", mesh=None, clock=None):
+                 mode: str = "auto", mesh=None, clock=None,
+                 tracker=None, track_every: int = 16):
         self.cfg = cfg
         self.params = params
         self.policy = policy
@@ -264,6 +271,11 @@ class AsyncServeEngine:
                            batch=n_slots)
         self.ctx = dataclasses.replace(ctx, cache_capacity=max_seq)
         self._iters = 0
+        self.tracker = tracker
+        self.track_every = max(int(track_every), 1)
+        self._win_completed = 0
+        self._win_tokens = 0
+        self._win_t: Optional[float] = None
         if self.mode == "paged":
             self.pool = kvcache.PagePool(
                 cfg,
@@ -480,7 +492,40 @@ class AsyncServeEngine:
         else:
             n = self._dense_prefill(now)
             n += self._dense_decode(now)
+        if self._iters % self.track_every == 0:
+            self._track_window(now)
         return n
+
+    def _track_window(self, now: float) -> None:
+        """Log one windowed metrics row to the active tracking run."""
+        from repro import tracking
+        run = self.tracker or tracking.current_run()
+        if run is None:
+            return
+        s = self.stats
+        dt = now - self._win_t if self._win_t is not None else 0.0
+        row = {
+            "iter": self._iters,
+            "queue_depth": len(self.sched.waiting),
+            "active": len(self.sched.active),
+            "completed": s.requests_completed,
+            "window_completed": s.requests_completed - self._win_completed,
+            "window_tok_s": ((s.output_tokens - self._win_tokens) / dt
+                             if dt > 0 else 0.0),
+            "slo_attainment": s.slo_met / max(s.requests_completed, 1),
+        }
+        if s.ttft_s:
+            row["ttft_p50_s"] = ServingStats._dist(s.ttft_s)["p50"]
+        if s.tpot_s:
+            row["tpot_p50_s"] = ServingStats._dist(s.tpot_s)["p50"]
+        run.log(row, step=self._iters)
+        if self.pool is not None:
+            kv = self.pool.stats()
+            run.log_system({"kv.pages_in_use": kv["in_use"],
+                            "kv.hit_rate": kv["hit_rate"]})
+        self._win_completed = s.requests_completed
+        self._win_tokens = s.output_tokens
+        self._win_t = now
 
     def run(self, max_iters: int = 1_000_000) -> None:
         """Drive until every submitted request finished or nothing moves."""

@@ -1,0 +1,30 @@
+"""repro.tracking — the wandb-style run-tracking plane.
+
+Public surface::
+
+    import repro.tracking as tracking
+
+    run = tracking.init("cluster_sim", config={...}, tags=("bench",))
+    run.log({"loss": 2.31}, step=10)
+    run.log_system({"sim.auu": 0.42})
+    run.log_summary({"makespan_s": 1234.5})
+    run.finish()
+
+Producers (trainer, serve engine, cluster simulator, bench harness)
+resolve :func:`current_run` as their default tracker, so running them
+under a ``tracking.init(...)`` scope transparently mirrors their
+telemetry into the run's ``events.jsonl``.  Trajectories
+(``results/BENCH_<bench>.json``) and the regression gate live in
+:mod:`repro.tracking.trajectory` / :mod:`repro.tracking.gate`;
+``scripts/check_perf.py`` is the CI front-end.
+"""
+from .run import (SCHEMA_VERSION, Run, current_run, git_sha, init,
+                  make_run_id, read_events)
+from .sampler import CounterSampler, ProcSampler
+from . import gate, trajectory
+
+__all__ = [
+    "SCHEMA_VERSION", "Run", "init", "current_run", "git_sha",
+    "make_run_id", "read_events", "ProcSampler", "CounterSampler",
+    "gate", "trajectory",
+]

@@ -1,0 +1,121 @@
+"""Direction-aware perf-regression gate over BENCH trajectories.
+
+The gate compares each trajectory's **newest** row to a baseline formed
+from the **median** of a trailing window of prior rows (median, not
+mean, so one noisy CI run cannot poison the baseline).  Per metric:
+
+  * ``direction: "down"`` — lower is better; a regression is
+    ``latest > baseline * (1 + band)`` (p95-wait-up is a regression);
+  * ``direction: "up"``   — higher is better; a regression is
+    ``latest < baseline * (1 - band)`` (throughput-down is a
+    regression);
+  * ``direction: "info"`` — recorded in the trajectory, never gated.
+
+The noise band defaults to ±10% and can be overridden per metric via
+``band`` in the trajectory's metric spec.  A trajectory with a single
+row (fresh baseline) or an empty window always passes — there is
+nothing to regress against yet.
+"""
+from __future__ import annotations
+
+import statistics
+from dataclasses import dataclass
+from typing import Dict, List, Mapping, Optional
+
+from . import trajectory as traj_mod
+
+DEFAULT_BAND = 0.10
+DEFAULT_WINDOW = 5
+
+
+@dataclass
+class Verdict:
+    """One metric's comparison against its trailing-window baseline."""
+    bench: str
+    metric: str
+    direction: str
+    latest: Optional[float]
+    baseline: Optional[float]
+    band: float
+    n_baseline: int
+    regressed: bool = False
+    note: str = ""
+
+    @property
+    def delta_pct(self) -> Optional[float]:
+        if self.latest is None or not self.baseline:
+            return None
+        return 100.0 * (self.latest - self.baseline) / abs(self.baseline)
+
+
+def check_trajectory(traj: Mapping[str, object], *,
+                     window: int = DEFAULT_WINDOW,
+                     band: float = DEFAULT_BAND) -> List[Verdict]:
+    """Gate one trajectory; returns a Verdict per (gated or info) metric."""
+    bench = traj.get("bench", "?")
+    spec: Dict[str, Mapping[str, object]] = dict(traj.get("metrics", {}))
+    rows = list(traj.get("rows", []))
+    verdicts: List[Verdict] = []
+    if not rows:
+        return verdicts
+    latest = rows[-1]
+    base_rows = traj_mod.window_rows(traj, window)
+    for name, m in spec.items():
+        direction = str(m.get("direction", "info"))
+        mband = float(m.get("band", band))
+        cur = latest.get("metrics", {}).get(name)
+        cur = float(cur) if cur is not None else None
+        history = [float(r["metrics"][name]) for r in base_rows
+                   if name in r.get("metrics", {})]
+        base = statistics.median(history) if history else None
+        v = Verdict(bench=bench, metric=name, direction=direction,
+                    latest=cur, baseline=base, band=mband,
+                    n_baseline=len(history))
+        if direction == "info":
+            v.note = "info (not gated)"
+        elif cur is None:
+            v.regressed = True
+            v.note = "metric missing from latest row"
+        elif base is None:
+            v.note = "fresh baseline"
+        elif base == 0.0:
+            # zero baseline: any worsening movement at all is flagged
+            v.regressed = (cur > 0.0) if direction == "down" else (cur < 0.0)
+            v.note = "zero baseline"
+        elif direction == "down":
+            v.regressed = cur > base * (1.0 + mband)
+        elif direction == "up":
+            v.regressed = cur < base * (1.0 - mband)
+        verdicts.append(v)
+    return verdicts
+
+
+def update_baseline(traj: Dict[str, object]) -> Dict[str, object]:
+    """Anchor the baseline at the newest row (accept an intentional perf
+    change): prior rows stop contributing to the trailing window."""
+    rows = list(traj.get("rows", []))
+    if rows:
+        traj["baseline_run_id"] = rows[-1].get("run_id")
+    return traj
+
+
+def format_table(verdicts: List[Verdict]) -> str:
+    """Readable fixed-width report naming every offending metric."""
+    header = (f"{'bench':<14} {'metric':<34} {'dir':<5} "
+              f"{'baseline':>12} {'latest':>12} {'delta':>8}  status")
+    lines = [header, "-" * len(header)]
+    for v in verdicts:
+        def fmt(x: Optional[float]) -> str:
+            return f"{x:.4g}" if x is not None else "-"
+        delta = v.delta_pct
+        dstr = f"{delta:+.1f}%" if delta is not None else "-"
+        if v.regressed:
+            status = f"REGRESSED (band ±{v.band:.0%})"
+        elif v.direction == "info":
+            status = "info"
+        else:
+            status = v.note or f"ok (band ±{v.band:.0%})"
+        lines.append(f"{v.bench:<14} {v.metric:<34} {v.direction:<5} "
+                     f"{fmt(v.baseline):>12} {fmt(v.latest):>12} "
+                     f"{dstr:>8}  {status}")
+    return "\n".join(lines)

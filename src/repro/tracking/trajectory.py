@@ -1,0 +1,115 @@
+"""Per-bench perf trajectories: ``results/BENCH_<bench>.json``.
+
+A trajectory is the cross-PR history of one benchmark's summary rows —
+the data the perf gate (:mod:`repro.tracking.gate`) regresses against.
+Top-level shape (documented in docs/artifacts.md, pinned by
+tests/test_artifacts.py):
+
+    {
+      "schema_version": 1,
+      "bench": "cluster_sim",
+      "metrics": {"makespan_s": {"direction": "down", "band": 0.10}, ...},
+      "baseline_run_id": null | "<run_id>",
+      "rows": [
+        {"run_id": "...", "git_sha": "...", "ts": 1754700000.0,
+         "metrics": {"makespan_s": 1234.5, ...}},
+        ...
+      ]
+    }
+
+``metrics`` is the gate spec: ``direction`` is ``"down"`` (lower is
+better — regressions are increases), ``"up"`` (higher is better), or
+``"info"`` (recorded, never gated — e.g. wall-clock on shared CI
+runners); ``band`` optionally overrides the gate's noise band for that
+metric.  ``baseline_run_id`` anchors the trailing window: rows at or
+before the anchor are excluded, so ``--update-baseline`` can accept an
+intentional perf change without rewriting history.
+
+Appends are **idempotent per run id** (re-running a bench under the same
+run id replaces its row instead of duplicating it) and atomic
+(temp-file + ``os.replace``).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Mapping, Optional
+
+SCHEMA_VERSION = 1
+
+Spec = Mapping[str, Mapping[str, object]]
+
+
+def path_for(bench: str, results_dir: str = "results") -> str:
+    return os.path.join(results_dir, f"BENCH_{bench}.json")
+
+
+def load(path: str) -> Dict[str, object]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _write_atomic(path: str, traj: Mapping[str, object]) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(traj, f, indent=2, sort_keys=False)
+        f.write("\n")
+    os.replace(tmp, path)
+
+
+def new_trajectory(bench: str, spec: Spec) -> Dict[str, object]:
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "bench": bench,
+        "metrics": {k: dict(v) for k, v in spec.items()},
+        "baseline_run_id": None,
+        "rows": [],
+    }
+
+
+def append_summary(path: str, bench: str, spec: Spec, *,
+                   run_id: str, git_sha: str, ts: float,
+                   metrics: Mapping[str, float]) -> Dict[str, object]:
+    """Append (or idempotently replace) one summary row.
+
+    Re-invoking with a ``run_id`` already present replaces that row in
+    place — a retried bench never double-counts.  The metric spec is
+    refreshed on every append so direction/band changes ship with the
+    code that defines them.
+    """
+    if os.path.exists(path):
+        traj = load(path)
+    else:
+        traj = new_trajectory(bench, spec)
+    traj["schema_version"] = SCHEMA_VERSION
+    traj["bench"] = bench
+    traj["metrics"] = {k: dict(v) for k, v in spec.items()}
+    traj.setdefault("baseline_run_id", None)
+    row = {"run_id": run_id, "git_sha": git_sha, "ts": ts,
+           "metrics": {k: metrics[k] for k in spec if k in metrics}}
+    rows: List[Dict[str, object]] = list(traj.get("rows", []))
+    for i, r in enumerate(rows):
+        if r.get("run_id") == run_id:
+            rows[i] = row
+            break
+    else:
+        rows.append(row)
+    traj["rows"] = rows
+    _write_atomic(path, traj)
+    return traj
+
+
+def window_rows(traj: Mapping[str, object], window: int,
+                *, exclude_last: bool = True) -> List[Dict[str, object]]:
+    """The trailing baseline window: up to ``window`` rows preceding the
+    newest one, starting after ``baseline_run_id`` (when set)."""
+    rows: List[Dict[str, object]] = list(traj.get("rows", []))
+    anchor: Optional[str] = traj.get("baseline_run_id")
+    if anchor is not None:
+        for i, r in enumerate(rows):
+            if r.get("run_id") == anchor:
+                rows = rows[i:]
+                break
+    if exclude_last and rows:
+        rows = rows[:-1]
+    return rows[-window:]

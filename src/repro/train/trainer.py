@@ -286,3 +286,60 @@ def jit_train_step(train_step, state: TrainState, cfg: ModelConfig,
                        lambda s: jax.sharding.NamedSharding(mesh, s)
                        if s is not None else None, out_shardings,
                        is_leaf=lambda x: isinstance(x, P) or x is None))
+
+
+# ---------------------------------------------------------------------------
+# run tracking — per-step loss / step_s / tokens-per-s into repro.tracking
+# ---------------------------------------------------------------------------
+class StepTracker:
+    """Adapter from the training loop to the tracking plane.
+
+    Call :meth:`step` once per optimizer step with the step's metrics
+    dict; it derives wall-clock ``step_s`` and ``tokens_per_s`` from an
+    injectable clock and logs one tracking row per step (plus a system
+    sample every ``system_every`` steps).  All methods are no-ops when
+    no run is active, so the loop needs no tracking conditionals.
+    """
+
+    def __init__(self, tokens_per_step: int, run=None, *,
+                 clock=None, system_every: int = 50):
+        import time as _time
+        from repro import tracking
+        self.run = run if run is not None else tracking.current_run()
+        self.tokens_per_step = tokens_per_step
+        self.clock = clock or _time.time
+        self.system_every = max(int(system_every), 1)
+        self._last_t: Optional[float] = None
+        self._n = 0
+        self._loss: Optional[float] = None
+        self._tok_s = 0.0
+
+    def step(self, step: int, metrics: Mapping[str, Any]) -> None:
+        if self.run is None:
+            return
+        now = self.clock()
+        row: Dict[str, Any] = {
+            k: float(v) for k, v in metrics.items()
+            if isinstance(v, (int, float)) or hasattr(v, "item")}
+        if self._last_t is not None:
+            step_s = now - self._last_t
+            row["step_s"] = step_s
+            row["tokens_per_s"] = (self.tokens_per_step / step_s
+                                   if step_s > 0 else 0.0)
+            self._tok_s = row["tokens_per_s"]
+        self._last_t = now
+        self._n += 1
+        self._loss = row.get("loss", self._loss)
+        self.run.log(row, step=step + 1)
+        if self._n % self.system_every == 0:
+            self.run.log_system()
+
+    def summary(self) -> Dict[str, Any]:
+        """Final-row metrics; also merged into the run summary."""
+        out: Dict[str, Any] = {"steps": self._n,
+                               "tokens_per_s": self._tok_s}
+        if self._loss is not None:
+            out["final_loss"] = self._loss
+        if self.run is not None:
+            self.run.log_summary(out)
+        return out

@@ -214,3 +214,104 @@ def test_storage_bench_artifact_schema():
     acc = cl["acceptance"]
     assert acc["contention_visible"] is True
     assert acc["shared_stall_s"] > acc["separate_stall_s"]
+
+
+# ---------------------------------------------------------------------------
+# schema_version + run provenance (the tracking plane's artifact stamp)
+# ---------------------------------------------------------------------------
+def _shipped_results():
+    return sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json")))
+
+
+@pytest.mark.parametrize("path", _shipped_results() or
+                         [pytest.param("", marks=pytest.mark.skip(
+                             reason="no shipped results/*.json"))])
+def test_every_result_artifact_is_schema_versioned(path):
+    with open(path) as f:
+        js = json.load(f)
+    assert js.get("schema_version") == 1, os.path.basename(path)
+
+
+@pytest.mark.parametrize("bench", ["cluster_sim", "serve_bench",
+                                   "storage_bench", "kernel_tune"])
+def test_bench_artifacts_record_their_run_id(bench):
+    path = os.path.join(RESULTS_DIR, f"{bench}.json")
+    if not os.path.exists(path):
+        pytest.skip(f"{bench} artifact not generated")
+    with open(path) as f:
+        js = json.load(f)
+    assert js["run_id"].startswith(f"{bench}-"), js["run_id"]
+
+
+@pytest.mark.skipif(
+    not os.path.exists(CLUSTER_SIM),
+    reason="cluster_sim artifact not generated")
+def test_cluster_sim_reports_eviction_suppression_telemetry():
+    with open(CLUSTER_SIM) as f:
+        js = json.load(f)
+    assert js["jobs"]["evictions_suppressed"] >= 0
+    for name, rep in js["policies"].items():
+        assert "evictions_suppressed" in rep["jobs"], name
+
+
+# ---------------------------------------------------------------------------
+# BENCH_<bench>.json perf trajectories (docs/tracking.md)
+# ---------------------------------------------------------------------------
+def _trajectories():
+    return sorted(glob.glob(os.path.join(RESULTS_DIR, "BENCH_*.json")))
+
+
+@pytest.mark.parametrize("path", _trajectories() or
+                         [pytest.param("", marks=pytest.mark.skip(
+                             reason="no BENCH_*.json trajectories shipped"))])
+def test_bench_trajectory_schema(path):
+    with open(path) as f:
+        js = json.load(f)
+    fname = os.path.basename(path)
+    assert js["schema_version"] == 1
+    assert fname == f"BENCH_{js['bench']}.json"
+    assert js["baseline_run_id"] is None or \
+        isinstance(js["baseline_run_id"], str)
+    assert js["metrics"], fname
+    for name, spec in js["metrics"].items():
+        assert spec["direction"] in ("up", "down", "info"), (fname, name)
+    assert js["rows"], f"{fname}: trajectory shipped with no baseline row"
+    gated = {k for k, m in js["metrics"].items()
+             if m["direction"] in ("up", "down")}
+    for row in js["rows"]:
+        assert row["run_id"] and row["ts"] > 0
+        assert "git_sha" in row
+        missing = gated - set(row["metrics"])
+        assert not missing, (fname, row["run_id"], missing)
+        for v in row["metrics"].values():
+            assert isinstance(v, (int, float)), (fname, row["run_id"])
+    # run ids are unique (appends are idempotent per run id)
+    ids = [r["run_id"] for r in js["rows"]]
+    assert len(ids) == len(set(ids)), fname
+
+
+@pytest.mark.parametrize("bench", ["cluster_sim", "serve_bench",
+                                   "storage_bench", "kernel_tune"])
+def test_each_shipped_bench_has_a_seeded_trajectory(bench):
+    art = os.path.join(RESULTS_DIR, f"{bench}.json")
+    traj = os.path.join(RESULTS_DIR, f"BENCH_{bench}.json")
+    if not os.path.exists(art):
+        pytest.skip(f"{bench} artifact not generated")
+    assert os.path.exists(traj), \
+        f"{bench}.json shipped without its BENCH_{bench}.json trajectory"
+    with open(art) as f:
+        run_id = json.load(f)["run_id"]
+    with open(traj) as f:
+        rows = json.load(f)["rows"]
+    # the artifact's producing run appears in its own trajectory
+    assert any(r["run_id"] == run_id for r in rows)
+
+
+def test_shipped_trajectories_pass_the_perf_gate():
+    if not _trajectories():
+        pytest.skip("no BENCH_*.json trajectories shipped")
+    from repro.tracking import gate, trajectory
+    for path in _trajectories():
+        verdicts = gate.check_trajectory(trajectory.load(path))
+        bad = [v for v in verdicts if v.regressed]
+        assert not bad, gate.format_table(bad)

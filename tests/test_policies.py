@@ -383,3 +383,70 @@ def test_policy_sweep_survives_failure_waves():
             policy
         assert jobs["stranded"] == 0, policy
         assert rep["lease_conflicts"] == 0, policy
+
+
+# ---------------------------------------------------------------------------
+# anti-thrash: the per-job eviction budget pins repeat victims runnable
+# ---------------------------------------------------------------------------
+def test_eviction_budget_pins_victim_after_max_evictions():
+    """A low-priority job repeatedly evicted by arriving high-priority
+    work must eventually finish: at ``max_evictions`` it becomes a
+    pinned-runnable non-candidate (counted in
+    ``telemetry.jobs_evictions_suppressed``) instead of thrashing
+    forever through checkpoint/restore cycles."""
+    pool = make_pool(n_local=32, n_switch=0, pods=1)
+    sched = Scheduler(pool, policy="priority_preempt")
+    lo = Job(name="lo", arch="qwen2-0.5b", shape_name="train_4k",
+             n_chips=32, steps=500, priority=0, max_evictions=2)
+    sched.submit(lo, 0.0)
+    sched.poll(0.0)
+    now = 1.0
+    for i in range(2):                       # two evictions consume budget
+        hi = Job(name=f"hi{i}", arch="qwen2-0.5b", shape_name="train_4k",
+                 n_chips=32, steps=5, priority=5)
+        sched.submit(hi, now)
+        assert [j.name for j in sched.poll(now)] == [f"hi{i}"]
+        assert lo.state == QUEUED and lo.evictions == i + 1
+        sched.on_complete(hi, now + 10.0)
+        assert [j.name for j in sched.poll(now + 10.0)] == ["lo"]
+        now += 20.0
+    assert sched.telemetry.jobs_evicted == 2
+    assert sched.telemetry.jobs_evictions_suppressed == 0
+    # budget exhausted: the next arrival cannot displace it
+    hi = Job(name="hi-final", arch="qwen2-0.5b", shape_name="train_4k",
+             n_chips=32, steps=5, priority=5)
+    sched.submit(hi, now)
+    assert sched.poll(now) == []
+    assert lo.state == RUNNING               # pinned runnable
+    assert hi.state == QUEUED
+    assert sched.telemetry.jobs_evicted == 2
+    assert sched.telemetry.jobs_evictions_suppressed >= 1
+    sched.manager.check_exclusive()
+    # ... and the suppression count lands in the telemetry report
+    rep = sched.telemetry.report()
+    assert rep["jobs"]["evictions_suppressed"] == \
+        sched.telemetry.jobs_evictions_suppressed
+
+
+def test_failure_preemption_does_not_consume_eviction_budget():
+    """Only *policy* evictions spend the anti-thrash budget — a device
+    failure preempting the job is not scheduler-inflicted thrash."""
+    pool = make_pool(n_local=32, n_switch=0, pods=1)
+    sched = Scheduler(pool, policy="priority_preempt")
+    job = Job(name="j", arch="qwen2-0.5b", shape_name="train_4k",
+              n_chips=32, steps=100, priority=0)
+    sched.submit(job, 0.0)
+    sched.poll(0.0)
+    sched.on_failure(list(job.system.device_uids), now=1.0)
+    assert job.state == QUEUED
+    assert job.evictions == 0                # budget untouched
+
+
+def test_job_template_forwards_max_evictions():
+    tmpl = JobTemplate("qwen2-0.5b", "train_4k", 16, 10, max_evictions=1)
+    cfg = TraceConfig(n_jobs=2, arrival_rate_hz=0.5, seed=1,
+                      templates=(tmpl,), failures=())
+    sim = ClusterSimulator(cfg)
+    sim.run()
+    jobs = list(sim.jobs.values())
+    assert jobs and all(j.max_evictions == 1 for j in jobs)

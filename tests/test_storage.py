@@ -450,3 +450,79 @@ def test_default_trace_still_completes_with_storage_layer():
     assert rep["storage"]                        # per-tranche stats present
     granted = sum(s["leases_granted"] for s in rep["storage"].values())
     assert granted >= rep["jobs"]["completed"]
+
+
+# ---------------------------------------------------------------------------
+# backfill guard: queued restores priced at the *contended* tranche rate
+# ---------------------------------------------------------------------------
+def test_est_restore_for_prices_queued_restore_contended():
+    """``est_restore_for`` must see through a queued job to the tranche
+    its restart would lease: two co-tenants already stream from the only
+    tranche, so the restore read runs at a 3-way split, not the
+    uncontended tier rate ``Job.est_restore_s`` assumes."""
+    dev = make_pool(n_local=64, n_switch=0, pods=1)
+    shared = StoragePool([StorageTranche("shared")])
+    sched = Scheduler(dev, storage=shared)
+    for i in range(2):
+        j = Job(name=f"t{i}", arch="qwen2-0.5b", shape_name="train_4k",
+                n_chips=16, steps=200)
+        sched.submit(j, 0.0)
+    sched.poll(0.0)
+    assert shared.n_lessees("shared") == 2
+    queued = Job(name="q", arch="qwen2-0.5b", shape_name="train_4k",
+                 n_chips=16, steps=10, steps_done=4.0)
+    uncontended = queued.est_restore_s()
+    assert uncontended > 0
+    # existing lessees + the restarting job itself = 3-way bandwidth split
+    assert sched.est_restore_for(queued) == pytest.approx(3 * uncontended)
+    # no progress -> nothing to restore; holding a tranche -> restore_s
+    fresh = Job(name="f", arch="qwen2-0.5b", shape_name="train_4k",
+                n_chips=16, steps=10)
+    assert sched.est_restore_for(fresh) == 0.0
+    running = next(j for j in sched.running)
+    running.steps_done = 4.0
+    assert sched.est_restore_for(running) == \
+        pytest.approx(sched.restore_s(running))
+
+
+def test_backfill_guard_rejects_restore_that_overruns_reservation():
+    """Regression for the backfill guard at the contended-restore
+    boundary: a preempted job whose *uncontended* restore estimate fits
+    inside the head's reservation — but whose actual (contended-tranche)
+    restore does not — must not backfill.  The pre-fix guard priced the
+    restore with ``Job.est_restore_s`` and started exactly this job."""
+    dev = make_pool(n_local=64, n_switch=0, pods=1)
+    shared = StoragePool([StorageTranche("shared")])
+    sched = Scheduler(dev, storage=shared)
+    runners = [Job(name=f"t{i}", arch="qwen2-0.5b", shape_name="train_4k",
+                   n_chips=16, steps=400) for i in range(2)]
+    for j in runners:
+        sched.submit(j, 0.0)
+    sched.poll(0.0)
+    head = Job(name="head", arch="qwen2-0.5b", shape_name="train_4k",
+               n_chips=64, steps=10)
+    cand = Job(name="cand", arch="qwen2-0.5b", shape_name="train_4k",
+               n_chips=16, steps=10)
+    now = 1.0
+    sched.submit(head, now)
+    sched.submit(cand, now)
+    # shape the candidate so its duration leaves a margin of exactly
+    # 2x the uncontended restore before the head's reservation: the
+    # uncontended guard would admit it (margin 2u >= u), the contended
+    # one must not (3-way split restore = 3u > 2u)
+    reserve_t = sched._reservation_t(head.n_chips, now)
+    assert reserve_t < float("inf")
+    cand.steps_done = 1.0
+    u = cand.est_restore_s()
+    cand.steps = cand.steps_done + \
+        (reserve_t - now - 2.0 * u) / cand.plan.step_s
+    assert now + cand.est_restore_s() + cand.est_duration_s() <= reserve_t
+    assert now + sched.est_restore_for(cand) + cand.est_duration_s() \
+        > reserve_t
+    assert sched.poll(now) == []             # contended pricing: no jump
+    assert cand.state == "queued"
+    # control: shrink the candidate until even the contended restore
+    # fits, and backfill admits it again
+    cand.steps = cand.steps_done + \
+        (reserve_t - now - 4.0 * u) / cand.plan.step_s
+    assert [j.name for j in sched.poll(now)] == ["cand"]
