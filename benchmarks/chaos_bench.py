@@ -1,0 +1,243 @@
+"""Chaos benchmark: fault injection, recovery, and serving resilience.
+
+Four deterministic scenarios over the cluster simulator's fault plane
+(``repro.cluster.faults``), one artifact
+(``results/chaos_bench.json``; schema in ``docs/artifacts.md``):
+
+  * **baseline identity** — the cluster_sim base trace replayed with
+    ``faults=None`` and with an *empty* ``FaultPlan()`` must produce
+    bit-identical reports: the fault plane is free when unused.
+  * **domain outage** — a whole locality domain (one side of the PCIe
+    switch fabric — the composable-infra failure unit) drops mid-trace
+    and is repaired a minute later.  Retry-with-backoff restarts every
+    surviving job; availability stays above 0.9 and nothing strands.
+  * **graceful degradation** — the switch link class loses half its
+    bandwidth and an NVMe tranche browns out.  Nobody is evicted: jobs
+    are repriced through the incremental accumulators and finish at the
+    degraded rate (longer makespan, zero preemptions).
+  * **serve failover** — a replica-killing device fault lands mid
+    request-burst.  With per-request timeouts + retries + health-check
+    failover the failed-request rate stays under 1%; with retries off
+    the requests on the dead replica hang unboundedly (stranded or
+    failed, never completed).
+
+A fifth *churn* scenario (MTBF-seeded ``device_down`` waves) supplies
+the headline availability / goodput / recovery-time distributions for
+the perf trajectory.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Dict, List, Tuple
+
+from benchmarks.cluster_sim import BENCH_CFG
+from repro.cluster.faults import FaultPlan, FaultSpec
+from repro.cluster.simulator import (ClusterSimulator, ServiceConfig,
+                                     TraceConfig)
+
+# -- domain outage: one drawer of the 2-pod pool gone for 60 s ------------
+OUTAGE_CFG = dataclasses.replace(
+    BENCH_CFG, failures=(),
+    faults=FaultPlan(
+        faults=(FaultSpec(kind="domain_outage", t=120.0, domain=1,
+                          t_clear=150.0, detect_s=2.0),),
+        retry_backoff_s=5.0))
+
+# -- graceful degradation: link at 50%, first tranche at 25% --------------
+DEGRADE_CFG = dataclasses.replace(
+    BENCH_CFG, failures=(),
+    faults=FaultPlan(faults=(
+        FaultSpec(kind="link_degrade", t=60.0, link="switch", frac=0.5,
+                  t_clear=300.0),
+        FaultSpec(kind="tranche_brownout", t=90.0, tranche="local-nvme-0",
+                  frac=0.25, t_clear=240.0),
+    )))
+
+# -- MTBF churn: repeated partial-pool failure waves ----------------------
+CHURN_CFG = TraceConfig(
+    n_jobs=24, arrival_rate_hz=0.25, seed=7, failures=(),
+    faults=FaultPlan(mtbf_s=90.0, mttr_s=60.0, horizon_s=360.0,
+                     mtbf_n=48, detect_s=2.0, retry_backoff_s=5.0))
+
+# -- serve burst + replica-killing fault ----------------------------------
+_SERVE_FAULT = FaultPlan(faults=(
+    FaultSpec(kind="device_down", t=30.0, n=64, t_clear=200.0,
+              detect_s=10.0),))
+
+
+def _serve_cfg(*, retries: int, health_s: float,
+               timeout_s: float) -> TraceConfig:
+    return TraceConfig(
+        n_jobs=0, seed=11, failures=(),
+        services=(ServiceConfig(
+            name="chat", arch="llama3.2-3b", shape_name="decode_32k",
+            n_replicas=3, chips_per_replica=64, n_requests=160,
+            arrival_rate_hz=4.0, prompt_len=2048, max_new=128,
+            request_timeout_s=timeout_s, max_request_retries=retries,
+            retry_backoff_s=0.5, health_check_s=health_s),),
+        faults=_SERVE_FAULT)
+
+
+SERVE_RESILIENT_CFG = _serve_cfg(retries=2, health_s=2.0, timeout_s=15.0)
+SERVE_NO_RETRY_CFG = _serve_cfg(retries=0, health_s=0.0, timeout_s=15.0)
+SERVE_NO_RESILIENCE_CFG = _serve_cfg(retries=0, health_s=0.0, timeout_s=0.0)
+
+
+# Perf-trajectory spec for results/BENCH_chaos_bench.json (see
+# docs/tracking.md).  All metrics come from fixed-seed deterministic
+# replays, so the gate is machine-independent.
+TRAJECTORY = {
+    "availability": {"direction": "up"},
+    "goodput_fraction": {"direction": "up"},
+    "recovery_mean_s": {"direction": "down"},
+    "recovery_p95_s": {"direction": "down"},
+    "outage_availability": {"direction": "up"},
+    "serve_failed_request_rate": {"direction": "down"},
+    "baseline_identical": {"direction": "up"},
+}
+
+
+def trajectory_row(rep: Dict[str, object]) -> Dict[str, float]:
+    """Flatten one report() into the gated summary-row metrics."""
+    return {
+        "availability": rep["availability"],
+        "goodput_fraction": rep["goodput_fraction"],
+        "recovery_mean_s": rep["recovery"]["mean_s"],
+        "recovery_p95_s": rep["recovery"]["p95_s"],
+        "outage_availability":
+            rep["scenarios"]["domain_outage"]["faults"]["availability"],
+        "serve_failed_request_rate":
+            rep["serve"]["resilient"]["failed_request_rate"],
+        "baseline_identical": float(rep["baseline_identical"]),
+    }
+
+
+def _canon(rep: Dict[str, object]) -> str:
+    return json.dumps(rep, sort_keys=True, default=str)
+
+
+def _scenario(cfg: TraceConfig) -> Dict[str, object]:
+    """One fault scenario, trimmed to the fields the artifact keeps."""
+    rep = ClusterSimulator(cfg).run()
+    return {
+        "jobs": rep["jobs"],
+        "faults": rep["faults"],
+        "makespan_s": rep["makespan_s"],
+        "recomposition": rep["recomposition"],
+    }
+
+
+def _serve_scenario(cfg: TraceConfig) -> Dict[str, object]:
+    rep = ClusterSimulator(cfg).run()
+    sv = rep["serving"]["chat"]
+    return {
+        "requests": sv["requests"],
+        "failed_request_rate": sv["failed_request_rate"],
+        "availability": rep["faults"]["availability"],
+    }
+
+
+def report() -> Dict[str, object]:
+    base = ClusterSimulator(BENCH_CFG).run()
+    empty = ClusterSimulator(dataclasses.replace(
+        BENCH_CFG, faults=FaultPlan())).run()
+    identical = _canon(base) == _canon(empty)
+    # the degradation scenarios drop the legacy failure wave, so their
+    # makespan reference is the same trace with no faults at all
+    clean = ClusterSimulator(dataclasses.replace(
+        BENCH_CFG, failures=())).run()
+
+    outage = _scenario(OUTAGE_CFG)
+    degrade = _scenario(DEGRADE_CFG)
+    churn = _scenario(CHURN_CFG)
+    serve_res = _serve_scenario(SERVE_RESILIENT_CFG)
+    serve_noretry = _serve_scenario(SERVE_NO_RETRY_CFG)
+    serve_none = _serve_scenario(SERVE_NO_RESILIENCE_CFG)
+
+    base_makespan = clean["makespan_s"]
+    rep: Dict[str, object] = {
+        "bench": "chaos_bench",
+        "baseline_identical": identical,
+        # headline resilience numbers (MTBF churn scenario)
+        "availability": churn["faults"]["availability"],
+        "goodput_fraction": churn["faults"]["goodput_fraction"],
+        "recovery": churn["faults"]["recovery"],
+        "detect_s_mean": churn["faults"]["detect_s_mean"],
+        "scenarios": {
+            "domain_outage": outage,
+            "degradation": degrade,
+            "churn": churn,
+        },
+        "serve": {
+            "resilient": serve_res,
+            "no_retries": serve_noretry,
+            "no_resilience": serve_none,
+        },
+    }
+    out_jobs = outage["jobs"]
+    rep["acceptance"] = {
+        "baseline_identical": identical,
+        "outage_availability": outage["faults"]["availability"],
+        "outage_availability_above_0_9":
+            outage["faults"]["availability"] > 0.9,
+        "outage_all_jobs_recovered":
+            out_jobs["failed"] == 0 and out_jobs["stranded"] == 0
+            and out_jobs["completed"] + out_jobs["rejected"]
+            == out_jobs["submitted"],
+        "degradation_graceful":
+            degrade["jobs"]["preempted"] == 0
+            and degrade["jobs"]["evicted"] == 0
+            and degrade["jobs"]["failed"] == 0
+            and degrade["makespan_s"] >= base_makespan,
+        "degradation_makespan_stretch_s":
+            degrade["makespan_s"] - base_makespan,
+        "churn_recovery_samples": churn["faults"]["recovery"]["samples"],
+        "serve_failed_rate_resilient": serve_res["failed_request_rate"],
+        "serve_failed_rate_below_1pct":
+            serve_res["failed_request_rate"] < 0.01,
+        "serve_unbounded_without_retries":
+            (serve_noretry["failed_request_rate"]
+             > serve_res["failed_request_rate"])
+            or serve_none["requests"]["stranded"] > 0,
+    }
+    return rep
+
+
+def run() -> List[Tuple[str, float, str]]:
+    t0 = time.perf_counter()
+    rep = report()
+    us = (time.perf_counter() - t0) * 1e6
+    acc = rep["acceptance"]
+    rec = rep["recovery"]
+    ok = (acc["baseline_identical"]
+          and acc["outage_availability_above_0_9"]
+          and acc["outage_all_jobs_recovered"]
+          and acc["degradation_graceful"]
+          and acc["serve_failed_rate_below_1pct"]
+          and acc["serve_unbounded_without_retries"])
+    sv = rep["serve"]
+    return [
+        ("chaos_bench/baseline", us,
+         f"faults=None == FaultPlan(): "
+         f"{'OK' if acc['baseline_identical'] else 'FAIL'}"),
+        ("chaos_bench/outage", us,
+         f"availability={acc['outage_availability']:.3f} "
+         f"recovered={'OK' if acc['outage_all_jobs_recovered'] else 'FAIL'}"),
+        ("chaos_bench/degradation", us,
+         f"makespan_stretch={acc['degradation_makespan_stretch_s']:.0f}s "
+         f"graceful={'OK' if acc['degradation_graceful'] else 'FAIL'}"),
+        ("chaos_bench/churn", us,
+         f"availability={rep['availability']:.3f} "
+         f"goodput={rep['goodput_fraction']:.3f} "
+         f"recovery mean={rec['mean_s']:.1f}s p95={rec['p95_s']:.1f}s "
+         f"({rec['samples']} samples)"),
+        ("chaos_bench/serve", us,
+         f"failed_rate resilient="
+         f"{sv['resilient']['failed_request_rate']:.4f} "
+         f"no_retries={sv['no_retries']['failed_request_rate']:.4f} "
+         f"stranded_no_resilience="
+         f"{sv['no_resilience']['requests']['stranded']} "
+         f"{'OK' if ok else 'FAIL'}"),
+    ]

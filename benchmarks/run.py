@@ -37,11 +37,11 @@ def main() -> int:
                          "trajectory append per run id)")
     args = ap.parse_args()
 
-    from benchmarks import (beyond_paper, cluster_sim, fig10_utilization,
-                            fig11_switch_overhead, fig12_traffic,
-                            fig15_storage, fig16_sw_opt, kernel_tune,
-                            recompose, roofline, serve_bench, storage_bench,
-                            table2_models, table4_links)
+    from benchmarks import (beyond_paper, chaos_bench, cluster_sim,
+                            fig10_utilization, fig11_switch_overhead,
+                            fig12_traffic, fig15_storage, fig16_sw_opt,
+                            kernel_tune, recompose, roofline, serve_bench,
+                            storage_bench, table2_models, table4_links)
     modules = {
         "table2": table2_models,
         "table4": table4_links,
@@ -53,6 +53,7 @@ def main() -> int:
         "beyond": beyond_paper,
         "recompose": recompose,
         "roofline": roofline,
+        "chaos_bench": chaos_bench,
         "cluster_sim": cluster_sim,
         "kernel_tune": kernel_tune,
         "serve_bench": serve_bench,

@@ -33,14 +33,32 @@ import shutil
 import sys
 import tempfile
 
-sys.path.insert(0, os.path.join(
-    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)               # for benchmarks.<name> specs
 
 from repro.tracking import gate, trajectory  # noqa: E402
 
 
 def _trajectories(results_dir: str):
     return sorted(glob.glob(os.path.join(results_dir, "BENCH_*.json")))
+
+
+def _load_checked(path: str):
+    """(trajectory, None) or (None, clear one-line reason) — a corrupt
+    or rows-less trajectory must fail the gate with a message a human
+    can act on, not a traceback."""
+    try:
+        traj = trajectory.load(path)
+    except (json.JSONDecodeError, OSError, UnicodeDecodeError) as e:
+        return None, f"unreadable trajectory ({e})"
+    if not isinstance(traj, dict) or not traj.get("bench"):
+        return None, "not a trajectory object (missing 'bench' header)"
+    if not traj.get("rows"):
+        return None, ("header-only trajectory (no summary rows) — run "
+                      "`python -m benchmarks.run --bench "
+                      f"{traj.get('bench', '<name>')}` to append one")
+    return traj, None
 
 
 def run_gate(results_dir: str, window: int, band: float) -> int:
@@ -50,14 +68,22 @@ def run_gate(results_dir: str, window: int, band: float) -> int:
               " — nothing to gate")
         return 0
     verdicts = []
+    broken = []
     for p in paths:
-        verdicts += gate.check_trajectory(trajectory.load(p),
-                                          window=window, band=band)
-    print(gate.format_table(verdicts))
+        traj, why = _load_checked(p)
+        if traj is None:
+            broken.append((p, why))
+            continue
+        verdicts += gate.check_trajectory(traj, window=window, band=band)
+    if verdicts:
+        print(gate.format_table(verdicts))
+    for p, why in broken:
+        print(f"check_perf: FAIL — {os.path.basename(p)}: {why}")
     bad = [v for v in verdicts if v.regressed]
     if bad:
         names = ", ".join(f"{v.bench}/{v.metric}" for v in bad)
         print(f"\ncheck_perf: FAIL — {len(bad)} regressed metric(s): {names}")
+    if bad or broken:
         return 1
     gated = sum(1 for v in verdicts if v.direction != "info")
     print(f"\ncheck_perf: OK ({len(paths)} trajectories, "
@@ -65,13 +91,50 @@ def run_gate(results_dir: str, window: int, band: float) -> int:
     return 0
 
 
-def update_baselines(results_dir: str) -> int:
-    for p in _trajectories(results_dir):
-        traj = gate.update_baseline(trajectory.load(p))
+def _bench_spec(bench: str):
+    """TRAJECTORY metric spec from the bench module (empty on failure —
+    the next real append refreshes the spec anyway)."""
+    try:
+        import importlib
+        mod = importlib.import_module(f"benchmarks.{bench}")
+        return dict(getattr(mod, "TRAJECTORY", {}))
+    except Exception:  # noqa: BLE001
+        return {}
+
+
+def update_baselines(results_dir: str, bench: str = "") -> int:
+    if bench:
+        paths = [trajectory.path_for(bench, results_dir)]
+    else:
+        paths = _trajectories(results_dir)
+        if not paths:
+            print(f"check_perf: no BENCH_*.json trajectories in "
+                  f"{results_dir!r} — nothing to update")
+            return 0
+    rc = 0
+    for p in paths:
+        if not os.path.exists(p):
+            name = bench or os.path.basename(p)[len("BENCH_"):-len(".json")]
+            os.makedirs(os.path.dirname(p) or ".", exist_ok=True)
+            trajectory._write_atomic(
+                p, trajectory.new_trajectory(name, _bench_spec(name)))
+            print(f"check_perf: created fresh trajectory {p} "
+                  "(header only; baseline anchors on the first row)")
+            continue
+        traj, why = _load_checked(p)
+        if traj is None:
+            if why.startswith("header-only"):
+                print(f"check_perf: {os.path.basename(p)}: header-only "
+                      "(no rows) — baseline unchanged")
+                continue
+            print(f"check_perf: FAIL — {os.path.basename(p)}: {why}")
+            rc = 1
+            continue
+        traj = gate.update_baseline(traj)
         trajectory._write_atomic(p, traj)
         print(f"check_perf: baseline for {traj['bench']} anchored at "
               f"{traj['baseline_run_id']}")
-    return 0
+    return rc
 
 
 def _degrade(value: float, direction: str, frac: float) -> float:
@@ -97,7 +160,9 @@ def demo_regression(results_dir: str, window: int, band: float,
         for p in paths:
             dst = os.path.join(tmp, os.path.basename(p))
             shutil.copy(p, dst)
-            traj = trajectory.load(dst)
+            traj, _why = _load_checked(dst)
+            if traj is None:
+                continue            # the real gate already reported it
             rows = traj.get("rows", [])
             spec = traj.get("metrics", {})
             gated = {k: m for k, m in spec.items()
@@ -144,12 +209,16 @@ def main() -> int:
                     help="default noise band (fraction, e.g. 0.10)")
     ap.add_argument("--update-baseline", action="store_true",
                     help="anchor each baseline at the newest row")
+    ap.add_argument("--bench", default="",
+                    help="with --update-baseline: target one bench; a "
+                         "missing trajectory file is created fresh "
+                         "instead of crashing")
     ap.add_argument("--demo-regression", action="store_true",
                     help="self-test: synthetic 20%% regression must trip "
                          "the gate (on temp copies; trajectories untouched)")
     args = ap.parse_args()
     if args.update_baseline:
-        return update_baselines(args.results_dir)
+        return update_baselines(args.results_dir, args.bench)
     if args.demo_regression:
         return demo_regression(args.results_dir, args.window, args.band)
     return run_gate(args.results_dir, args.window, args.band)

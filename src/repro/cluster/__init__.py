@@ -15,12 +15,18 @@ re-composed elastically when devices fail.
                     admission, backfill, policy preemption, elastic
                     preempt-to-shrink on failure
   * ``simulator`` — trace-driven discrete-event cluster simulation
+  * ``faults``    — deterministic fault injection (device / domain /
+                    link / tranche faults with detection latency) and
+                    the recovery plane: retry budgets, graceful
+                    degradation, regrow-after-repair, serve failover
   * ``telemetry`` — per-link traffic, utilization/AUU, fairness + gang
-                    stats, recompose overhead
+                    stats, recompose overhead, availability + recovery
 
 See ``docs/architecture.md`` for the subsystem map and
 ``docs/telemetry.md`` for the full event/telemetry schema.
 """
+from repro.cluster.faults import (FAULT_KINDS, FaultInjector, FaultPlan,
+                                  FaultSpec)
 from repro.cluster.lease import (GangPlan, LeaseManager, PlacementPlan,
                                  plan_gang, plan_placement)
 from repro.cluster.scheduler import (POLICIES, EasyPolicy, FairSharePolicy,
@@ -31,7 +37,8 @@ from repro.cluster.simulator import (ClusterSimulator, JobTemplate,
 from repro.cluster.telemetry import ClusterEvent, ServingStats, Telemetry
 
 __all__ = [
-    "ClusterEvent", "ClusterSimulator", "EasyPolicy", "FairSharePolicy",
+    "ClusterEvent", "ClusterSimulator", "EasyPolicy", "FAULT_KINDS",
+    "FairSharePolicy", "FaultInjector", "FaultPlan", "FaultSpec",
     "GangPlan", "Job", "JobTemplate", "LeaseManager", "POLICIES",
     "PlacementPlan", "Policy", "PriorityPreemptPolicy", "Scheduler",
     "ServeJob", "ServiceConfig", "ServingStats", "Telemetry", "TraceConfig",

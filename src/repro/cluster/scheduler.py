@@ -74,6 +74,9 @@ from repro.data.storage import StoragePool, make_storage_pool
 from repro.train import elastic
 
 QUEUED, RUNNING, DONE, REJECTED = "queued", "running", "done", "rejected"
+# terminal state for jobs whose fault-retry budget is exhausted (the
+# fault-injection plane's capped retry-with-backoff; see cluster.faults)
+FAILED = "failed"
 
 
 @dataclasses.dataclass
@@ -118,6 +121,16 @@ class Job:
     # finishes.  Failure preemptions do not consume budget.
     evictions: int = 0
     max_evictions: int = 3
+    # fault-recovery budget (cluster.faults): fault-driven preemptions
+    # consume retries with exponential backoff; past ``max_retries`` the
+    # job fails permanently (state FAILED).  Legacy failure preemptions
+    # (TraceConfig.failures) do not consume this budget.
+    retries: int = 0
+    max_retries: int = 3
+    not_before_t: float = 0.0        # backoff gate: poll() skips until then
+    fault_t: float = -1.0            # injection time of the pending fault
+    #                                  (-1 = none); cleared at restart when
+    #                                  the recovery-time sample is taken
 
     @property
     def kind(self) -> str:
@@ -416,6 +429,7 @@ class Scheduler:
         self.running: List[Job] = []
         self.done: List[Job] = []
         self.rejected: List[Job] = []
+        self.failed: List[Job] = []      # retry budget exhausted (terminal)
         # jobs whose contended input stall changed while running, keyed by
         # name with the stall value before the FIRST undrained change —
         # the simulator drains this to re-schedule completion events (the
@@ -624,6 +638,13 @@ class Scheduler:
         # wait = time spent in the queue since the last (re)queueing; run
         # time before a preemption is not wait
         self.telemetry.job_waited(now - job.queued_t, job.tenant_key)
+        if job.fault_t >= 0.0:
+            # recovery-time sample: fault injection -> back on devices,
+            # including the checkpoint restore the restart is about to
+            # pay (detect + decide + restore)
+            self.telemetry.recovery_s.append(
+                (now - job.fault_t) + self.restore_s(job))
+            job.fault_t = -1.0
         detail = (f"mesh={'x'.join(str(s) for s in sizes)} links=" +
                   ",".join(f"{a}:{c.value}"
                            for a, c in job.system.fabric.axis_links.items()))
@@ -761,6 +782,11 @@ class Scheduler:
         self._accrue_usage(now)
         while True:
             order = self.policy.order(self, now)
+            # backoff gate (cluster.faults): a retrying job is invisible to
+            # this poll until its not_before_t — it neither starts nor
+            # holds the head reservation.  0.0 (the default) always passes,
+            # so legacy traces order identically.
+            order = [j for j in order if j.not_before_t <= now]
             if not order:
                 break
             head = order[0]
@@ -926,6 +952,99 @@ class Scheduler:
         self.queue.append(job)
         self.telemetry.jobs_preempted += 1
         self.telemetry.log(now, "preempt", job.name, why)
+
+    # ------------------------------------------------- fault recovery -----
+    def apply_retry_budget(self, job: Job, now: float, *,
+                           base_backoff_s: float = 5.0) -> bool:
+        """Charge one fault-driven restart against ``job``'s retry budget.
+
+        Called by the fault plane after a fault preempted ``job`` back to
+        the queue.  Within budget the job gets an exponential-backoff
+        gate (``not_before_t = now + base * 2^(retries-1)``) and a
+        ``retry`` event; past ``max_retries`` it fails permanently.
+        Returns True iff the job is still retryable.
+        """
+        if job.state != QUEUED:
+            return True
+        job.retries += 1
+        if job.retries > job.max_retries:
+            self.fail_permanently(
+                job, now, f"retry budget exhausted "
+                f"({job.max_retries} fault restarts)")
+            return False
+        backoff = base_backoff_s * (2.0 ** (job.retries - 1))
+        job.not_before_t = now + backoff
+        self.telemetry.retries_scheduled += 1
+        self.telemetry.log(now, "retry", job.name,
+                           f"attempt {job.retries}/{job.max_retries} "
+                           f"backoff {backoff:.1f}s")
+        return True
+
+    def fail_permanently(self, job: Job, now: float, why: str) -> None:
+        """Terminal fault failure: the job leaves the queue for good."""
+        assert job.state == QUEUED
+        self.queue.remove(job)
+        job.state = FAILED
+        job.end_t = now
+        job.why_rejected = why
+        job.fault_t = -1.0
+        self.failed.append(job)
+        self.telemetry.jobs_failed += 1
+        self.telemetry.log(now, "fail", job.name, why)
+
+    def regrow_shrunk(self, now: float) -> List[Job]:
+        """Grow failure-shrunk jobs back toward their submitted budget.
+
+        Called by the fault plane after a repair returns capacity (the
+        ``train.elastic`` regrow path); legacy traces never call this,
+        so repaired devices keep their PR-1 sit-idle-until-leased
+        behavior bit-for-bit.  Returns the regrown jobs (the simulator
+        re-prices their rates and completion events).
+        """
+        regrown: List[Job] = []
+        for job in list(self.running):
+            if job.n_pods > 1 or job.system is None:
+                continue
+            if job.system.n_devices >= job.n_chips:
+                continue
+            if (len(self.pool.available())
+                    < job.n_chips - job.system.n_devices):
+                continue
+            plan = self.plan_job(job)        # at the original budget
+            if plan is None:
+                continue
+            dp, tp = plan.shape[-2], plan.shape[-1]
+            if self.sync_progress is not None:
+                self.sync_progress(job, now)
+            self._accrue_usage(now)
+            old_shape = job.system.axis_sizes
+            try:
+                new_sys = recompose(self.pool, job.system,
+                                    axis_sizes=(dp, tp))
+            except CompositionError:
+                continue             # recompose restored the old claim
+            links = derive_axis_links(self.pool, new_sys.device_uids, tp)
+            if dict(new_sys.fabric.axis_links) != links:
+                new_sys = dataclasses.replace(
+                    new_sys, fabric=dataclasses.replace(
+                        new_sys.fabric, axis_links=links))
+            job.system = new_sys
+            if job.run is not None:
+                elastic.regrow(job.run, new_sys, step=int(job.steps_done))
+            job.plan = self._repriced(plan, new_sys)
+            self.manager.forget(job.name)
+            self.manager.adopt(new_sys, now)
+            job.steps_done = float(int(job.steps_done))
+            job.recompositions += 1
+            job.epoch += 1           # invalidates scheduled completions
+            self.telemetry.log(now, "recompose", job.name,
+                               f"{old_shape}->{new_sys.axis_sizes} "
+                               "(regrow after repair)")
+            self.policy_victims.append(job)
+            regrown.append(job)
+        if regrown:
+            self.update_stalls()
+        return regrown
 
     # ------------------------------------------------- policy preemption --
     def evict(self, job: Job, now: float, for_job: str = "") -> int:

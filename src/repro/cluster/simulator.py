@@ -55,6 +55,7 @@ import time
 from collections import deque
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.cluster.faults import FaultInjector, FaultPlan
 from repro.cluster.scheduler import (DONE, QUEUED, RUNNING, Job, Scheduler,
                                      ServeJob)
 from repro.cluster.telemetry import ServingStats, Telemetry
@@ -131,6 +132,17 @@ class ServiceConfig:
     priority: int = 10                 # serve replicas outrank batch jobs
     ttft_slo_s: float = 5.0
     tpot_slo_s: float = 0.5
+    # resilience (all off by default — legacy traces are bit-identical):
+    # a request not finished within request_timeout_s of (re)issue is
+    # pulled back and re-routed up to max_request_retries times with
+    # exponential backoff; past the budget it fails terminally.
+    request_timeout_s: float = 0.0     # 0 = no timeout
+    max_request_retries: int = 2
+    retry_backoff_s: float = 0.5
+    # replica health checks: every health_check_s the service probes its
+    # replicas and fails over the requests of any replica sitting on
+    # unhealthy devices — ahead of the cluster-level fault detection
+    health_check_s: float = 0.0        # 0 = no health checks
 
 
 class _Replica:
@@ -174,8 +186,13 @@ class TraceConfig:
     n_switch: int = 256
     pods: int = 2
     templates: Tuple[JobTemplate, ...] = DEFAULT_TEMPLATES
-    # (time_s, n_devices) injection points; repaired after repair_after_s
-    failures: Tuple[Tuple[float, int], ...] = ((120.0, 12),)
+    # device-failure injection points.  Two row shapes are accepted:
+    #   (t_down, n)        — legacy: n devices fail at t_down and are
+    #                        repaired repair_after_s later (bit-for-bit
+    #                        the original behavior);
+    #   (t_down, t_up, n)  — explicit repair time; t_up = None or inf
+    #                        means the devices stay dead forever.
+    failures: Tuple[Tuple[float, ...], ...] = ((120.0, 12),)
     repair_after_s: float = 300.0
     backfill: bool = True
     compose_latency_s: float = 2.08e-6 * 64   # switch reprogram, Table IV
@@ -196,6 +213,10 @@ class TraceConfig:
     # (arrival_time_s, template) pairs consume no rng, so skewed-tenant
     # and gang scenarios can be scripted exactly
     arrivals: Tuple[Tuple[float, JobTemplate], ...] = ()
+    # fault-injection plane (cluster.faults): None = off; FaultPlan() is
+    # behaviorally identical to None (no events, no rng draws), so the
+    # legacy determinism contract is unchanged either way
+    faults: Optional[FaultPlan] = None
 
 
 def restore_overhead_s(job: Job,
@@ -249,6 +270,12 @@ class ClusterSimulator:
         self.jobs: Dict[str, Job] = {}
         self.services: Dict[str, _Service] = {}
         self.replicas: Dict[str, _Replica] = {}     # running ServeJobs only
+        # fault plane: injector when a plan is configured; ``draining``
+        # replicas stop admitting requests (graceful planned detach)
+        self.faults: Optional[FaultInjector] = (
+            FaultInjector(self, cfg.faults) if cfg.faults is not None
+            else None)
+        self.draining: set = set()
         self._done_reps: Dict[str, Dict[str, object]] = {}
         self._heap: List[Tuple[float, int, str, object]] = []
         self._seq = 0
@@ -296,8 +323,15 @@ class ClusterSimulator:
         # consume the rng identically with or without them
         for t_arr, tpl in self.cfg.arrivals:
             add_job(t_arr, tpl, tpl.tenant or tpl.arch)
-        for t_fail, n in self.cfg.failures:
-            self._push(t_fail, "fail", n)
+        for row in self.cfg.failures:
+            if len(row) == 2:
+                # legacy (t_down, n): payload stays a bare int so the
+                # fail handler's repair push is bit-identical
+                t_down, n = row
+                self._push(t_down, "fail", n)
+            else:
+                t_down, t_up, n = row
+                self._push(t_down, "fail", ("at", t_up, int(n)))
         # serving trace: replicas arrive as jobs, requests as events.
         # Generated after the batch trace so batch-only configs consume
         # the rng identically to pre-serving versions (stable seeds).
@@ -332,6 +366,16 @@ class ClusterSimulator:
                     "attempt": 0,
                 }
                 self._push(t, "req", (svc_cfg.name, rid))
+        # replica health-check ticks (rng-free; 0 = off, legacy-identical)
+        for svc_cfg in self.cfg.services:
+            if svc_cfg.health_check_s > 0:
+                self._push(svc_cfg.start_t + svc_cfg.health_check_s,
+                           "health", svc_cfg.name)
+        # fault plane last: its (optional) MTBF schedule consumes the rng
+        # only after every legacy draw, so pre-fault traces replay
+        # identically with faults=None or an empty FaultPlan
+        if self.faults is not None:
+            self.faults.push_schedule()
 
     # ------------------------------------------------------------ accrual --
     def _job_link_rate(self, job: Job) -> Dict[LinkClass, float]:
@@ -433,8 +477,14 @@ class ClusterSimulator:
         self._rate_off(job.name)
         if isinstance(job, ServeJob):
             if job.state == RUNNING:          # shrunk in place: serve on
-                self._push(now + restore_overhead_s(job, self.scheduler),
-                           "rate", (job.name, job.epoch))
+                if job.name in self.replicas:
+                    self.draining.discard(job.name)   # healthy again
+                    self._push(now + restore_overhead_s(job, self.scheduler),
+                               "rate", (job.name, job.epoch))
+                else:
+                    # a health-check failover retired the old incarnation;
+                    # the recomposed replica re-registers and re-admits
+                    self._replica_started(job, now)
             else:                              # preempted: re-route load
                 self._reassign_replica_requests(job, now)
         elif job.state == RUNNING:            # shrunk in place
@@ -490,6 +540,7 @@ class ClusterSimulator:
         collective traffic, and drain the service backlog onto it.  No
         completion event — replicas run until their request trace drains."""
         job.progress_t = now
+        self.draining.discard(job.name)     # a fresh incarnation admits
         old = self.replicas.get(job.name)
         if old is not None:
             # evicted and restarted within one poll: bank the retiring
@@ -503,9 +554,14 @@ class ClusterSimulator:
             self._route_request(svc, svc.backlog.popleft(), now)
 
     def _route_request(self, svc: _Service, rid: int, now: float) -> None:
-        """Least-loaded routing over the service's running replicas."""
+        """Least-loaded routing over the service's running replicas.
+        Draining replicas (planned detach announced) stop admitting —
+        unless every live replica is draining, in which case degraded
+        service beats stranding the request."""
         live = [self.replicas[j.name] for j in svc.replicas
                 if j.state == RUNNING and j.name in self.replicas]
+        admitting = [r for r in live if r.job.name not in self.draining]
+        live = admitting or live
         if not live:
             svc.backlog.append(rid)
             return
@@ -547,6 +603,7 @@ class ClusterSimulator:
 
     def _finish_request(self, svc: _Service, rid: int, now: float) -> None:
         req = svc.requests[rid]
+        req["done"] = True              # timeouts stop tracking it
         scfg = svc.cfg
         rep = self.replicas.get(req.get("replica"))
         if rep is not None:
@@ -560,7 +617,8 @@ class ClusterSimulator:
             nbytes = ((scfg.prompt_len - req["cached"]) + scfg.max_new) \
                 * costmodel.kv_bytes_per_token(get_config(scfg.arch))
             self.telemetry.add_link_traffic(link, nbytes)
-            while rep.queue and len(rep.active) < rep.job.capacity:
+            while (rep.queue and len(rep.active) < rep.job.capacity
+                   and rep.job.name not in self.draining):
                 self._begin_request(rep, svc, rep.queue.popleft(), now)
         ttft = req["t_first"] - req["submit_t"]
         ttft_slo, tpot_slo = req["slo"]       # the serving replica's SLOs
@@ -594,6 +652,7 @@ class ClusterSimulator:
         """A replica was preempted: its in-flight and queued requests go
         back to the service for re-routing (a fresh attempt invalidates
         their scheduled completions)."""
+        self.draining.discard(job.name)
         rep = self.replicas.pop(job.name, None)
         if rep is None:
             return
@@ -604,6 +663,74 @@ class ClusterSimulator:
             req["attempt"] += 1
             req.pop("replica", None)
             self._route_request(svc, rid, now)
+
+    # --------------------------------------------------- serve resilience --
+    def _arm_timeout(self, svc: _Service, rid: int, now: float) -> None:
+        """Start (or restart, on a retry) the per-request deadline."""
+        t_out = svc.cfg.request_timeout_s
+        if t_out <= 0:
+            return
+        deadline = now + t_out
+        svc.requests[rid]["deadline"] = deadline
+        self._push(deadline, "req_timeout", (svc.cfg.name, rid, deadline))
+
+    def _expire_request(self, svc: _Service, rid: int, deadline: float,
+                        now: float) -> None:
+        """Per-request timeout fired: pull the request back from wherever
+        it sits (replica batch, replica queue, service backlog) and retry
+        it with exponential backoff; past the retry budget it fails."""
+        req = svc.requests[rid]
+        if (req.get("done") or req.get("failed")
+                or req.get("deadline") != deadline):
+            return                      # finished, failed, or re-armed
+        svc.stats.requests_timed_out += 1
+        req["attempt"] += 1             # invalidates a scheduled req_done
+        rep = self.replicas.get(req.get("replica"))
+        if rep is not None:
+            if rid in rep.active:
+                rep.active.discard(rid)
+                while (rep.queue and len(rep.active) < rep.job.capacity
+                       and rep.job.name not in self.draining):
+                    self._begin_request(rep, svc, rep.queue.popleft(), now)
+            elif rid in rep.queue:
+                rep.queue.remove(rid)
+        req.pop("replica", None)
+        if rid in svc.backlog:
+            svc.backlog.remove(rid)
+        retries = req.get("retries", 0)
+        if retries < svc.cfg.max_request_retries:
+            req["retries"] = retries + 1
+            svc.stats.request_retries += 1
+            backoff = svc.cfg.retry_backoff_s * (2.0 ** retries)
+            self._push(now + backoff, "req_retry", (svc.cfg.name, rid))
+        else:
+            req["failed"] = True
+            svc.stats.requests_failed += 1
+            svc.remaining -= 1
+            if svc.remaining == 0:
+                self._finish_service(svc, now)
+
+    def _health_check(self, svc: _Service, now: float) -> None:
+        """Periodic replica probe: a running replica sitting on unhealthy
+        devices has its load failed over to its siblings immediately —
+        ahead of the cluster-level fault detection latency."""
+        if svc.remaining <= 0:
+            return                      # trace drained: stop probing
+        healthy = {d.uid: d.healthy for d in self.pool.devices}
+        for job in svc.replicas:
+            if (job.state != RUNNING or job.system is None
+                    or job.name not in self.replicas
+                    or job.name in self.draining):
+                continue
+            if all(healthy.get(u, False) for u in job.system.device_uids):
+                continue
+            self.telemetry.log(now, "detect", job.name,
+                               "health-check failover")
+            self._reassign_replica_requests(job, now)
+            # the cluster-level detect hasn't fired yet, so the job still
+            # reads RUNNING — quarantine it from routing until it restarts
+            self.draining.add(job.name)
+        self._push(now + svc.cfg.health_check_s, "health", svc.cfg.name)
 
     # ---------------------------------------------------------------- run --
     def run(self) -> Dict[str, object]:
@@ -636,6 +763,19 @@ class ClusterSimulator:
                 svc.stats.requests_submitted += 1
                 svc.stats.mark(now)
                 self._route_request(svc, rid, now)
+                self._arm_timeout(svc, rid, now)
+            elif kind == "req_timeout":
+                svc_name, rid, deadline = payload
+                self._expire_request(self.services[svc_name], rid,
+                                     deadline, now)
+            elif kind == "req_retry":
+                svc = self.services[payload[0]]
+                req = svc.requests[payload[1]]
+                if not (req.get("done") or req.get("failed")):
+                    self._route_request(svc, payload[1], now)
+                    self._arm_timeout(svc, payload[1], now)
+            elif kind == "health":
+                self._health_check(self.services[payload], now)
             elif kind == "req_done":
                 svc_name, rid, attempt = payload
                 svc = self.services[svc_name]
@@ -649,7 +789,14 @@ class ClusterSimulator:
                 for job in self.scheduler.running:
                     self._sync_steps(job, now)
                 healthy = [d.uid for d in self.pool.healthy()]
-                n = min(int(payload), len(healthy))
+                if isinstance(payload, tuple):
+                    # explicit-repair row ("at", t_up, n): t_up None/inf
+                    # means the devices stay dead forever
+                    _, t_up, n_req = payload
+                else:
+                    t_up, n_req = now + self.cfg.repair_after_s, \
+                        int(payload)
+                n = min(n_req, len(healthy))
                 down = self.rng.sample(healthy, n)
                 changed = self.scheduler.on_failure(down, now)
                 for job in changed:
@@ -657,12 +804,24 @@ class ClusterSimulator:
                 # changed jobs were just rescheduled (restore overhead
                 # included); only their co-tenants need a stall resync
                 self._resync_stalls(now, exclude={j.name for j in changed})
-                self._push(now + self.cfg.repair_after_s, "repair", down)
+                if t_up is not None and t_up != float("inf"):
+                    self._push(t_up, "repair", down)
                 self._start_newly_scheduled(now)
             elif kind == "repair":
                 self.pool.repair(list(payload))
                 self.telemetry.log(now, "repair", "",
                                    f"{len(payload)} device(s) back")
+                self._start_newly_scheduled(now)
+            elif kind == "fault":
+                self.faults.on_fault(payload, now)
+            elif kind == "detect":
+                self.faults.on_detect(payload, now)
+            elif kind == "fault_clear":
+                self.faults.on_clear(payload, now)
+            elif kind == "drain":
+                self.faults.on_drain(payload, now)
+            elif kind == "poll":
+                # a retry-backoff gate opened: let the queue re-poll
                 self._start_newly_scheduled(now)
             self.scheduler.manager.check_exclusive()
             self._observe(now)
@@ -730,6 +889,8 @@ class ClusterSimulator:
             "seed": self.cfg.seed,
             "policy": self.cfg.policy,
             "n_scripted_arrivals": len(self.cfg.arrivals),
+            "n_scripted_faults": (0 if self.cfg.faults is None
+                                  else len(self.cfg.faults.faults)),
         }
         if self.services:
             rep["serving"] = {

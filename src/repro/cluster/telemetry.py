@@ -45,7 +45,7 @@ from repro.core.topology import LinkClass
 
 EVENT_KINDS = ("submit", "reject", "start", "complete", "fail", "repair",
                "recompose", "preempt", "conflict", "storage", "evict",
-               "shrink", "gang")
+               "shrink", "gang", "fault", "detect", "retry", "drain")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,6 +78,9 @@ class ServingStats:
         self.requests_submitted = 0
         self.requests_rejected = 0
         self.requests_completed = 0
+        self.requests_timed_out = 0     # per-request deadline expiries
+        self.requests_failed = 0        # retries exhausted (terminal)
+        self.request_retries = 0        # re-route / re-issue attempts
         self.slo_met = 0
         self.prompt_tokens = 0
         self.cached_tokens = 0
@@ -124,7 +127,12 @@ class ServingStats:
                 "submitted": self.requests_submitted,
                 "completed": self.requests_completed,
                 "rejected": self.requests_rejected,
+                "timed_out": self.requests_timed_out,
+                "failed": self.requests_failed,
+                "retries": self.request_retries,
             },
+            "failed_request_rate": (self.requests_failed
+                                    / max(self.requests_submitted, 1)),
             "ttft_s": self._dist(self.ttft_s),
             "tpot_s": self._dist(self.tpot_s),
             "queue_wait_s": self._dist(self.wait_s),
@@ -216,6 +224,15 @@ class Telemetry:
         self.jobs_evicted = 0           # policy-driven preemptions (subset)
         self.jobs_shrunk = 0            # policy-driven preempt-to-shrink
         self.jobs_evictions_suppressed = 0   # victims pinned at budget
+        self.jobs_failed = 0            # retry budget exhausted (terminal)
+        # fault-injection plane (cluster.faults): counters + recovery
+        # samples.  recovery = fault injection -> victim back on devices
+        # (detect + decide + restore), one sample per fault-hit restart.
+        self.faults_injected = 0
+        self.faults_detect_s: List[float] = []   # detection latencies
+        self.recovery_s: List[float] = []        # fault -> restart samples
+        self.retries_scheduled = 0      # backoff retries granted
+        self.drains = 0                 # graceful drains honoured
         self.storage: Dict[str, StorageStats] = {}   # tranche -> stats
         # gang scheduling: one span sample per gang start (DCN hop span)
         self.gang_spans: List[int] = []
@@ -299,6 +316,31 @@ class Telemetry:
             return 0.0
         return max(0.0, 1.0 - self._busy_area / self._leased_area)
 
+    def availability(self) -> float:
+        """Healthy device-seconds over total device-seconds: the fraction
+        of pool capacity that survived the fault schedule."""
+        span = self.span_s
+        if span <= 0 or self.n_devices_total <= 0:
+            return 1.0
+        return self._healthy_area / (self.n_devices_total * span)
+
+    def goodput_fraction(self) -> float:
+        """Useful-compute device-seconds over *healthy* device-seconds —
+        how much of the surviving capacity did real work (availability
+        strips dead capacity; this strips idle + overhead on top)."""
+        if self._healthy_area <= 0:
+            return 0.0
+        return min(1.0, self._busy_area / self._healthy_area)
+
+    def fault_recovery(self) -> Dict[str, float]:
+        s = sorted(self.recovery_s)
+        return {
+            "samples": len(s),
+            "mean_s": sum(s) / len(s) if s else 0.0,
+            "p95_s": _percentile(s, 95.0),
+            "max_s": s[-1] if s else 0.0,
+        }
+
     @staticmethod
     def _wait_dist(xs: List[float]) -> Dict[str, float]:
         s = sorted(xs)
@@ -351,6 +393,18 @@ class Telemetry:
                 "evicted": self.jobs_evicted,
                 "shrunk": self.jobs_shrunk,
                 "evictions_suppressed": self.jobs_evictions_suppressed,
+                "failed": self.jobs_failed,
+            },
+            "faults": {
+                "injected": self.faults_injected,
+                "availability": self.availability(),
+                "goodput_fraction": self.goodput_fraction(),
+                "detect_s_mean": (sum(self.faults_detect_s)
+                                  / len(self.faults_detect_s)
+                                  if self.faults_detect_s else 0.0),
+                "recovery": self.fault_recovery(),
+                "retries_scheduled": self.retries_scheduled,
+                "drains": self.drains,
             },
             "gangs": {
                 "started": len(spans),

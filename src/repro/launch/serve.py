@@ -6,6 +6,10 @@
 
 Requests whose prompt + decode budget exceed ``--max-seq`` are rejected
 up front (exit code 2) — the engine never truncates silently.
+
+``--request-timeout SECONDS`` puts a deadline on every request: instead
+of hanging on a wedged engine, requests past the deadline are cancelled,
+a per-request timeout report is printed, and the driver exits 3.
 """
 from __future__ import annotations
 
@@ -37,6 +41,10 @@ def main() -> int:
                     choices=["slo", "priority", "fcfs"])
     ap.add_argument("--mode", default="auto",
                     choices=["auto", "paged", "dense"])
+    ap.add_argument("--request-timeout", type=float, default=0.0,
+                    help="per-request deadline in seconds (0 = none); "
+                         "timed-out requests are cancelled and reported "
+                         "instead of hanging the driver")
     args = ap.parse_args()
 
     if args.prompt_len + args.max_new > args.max_seq:
@@ -54,7 +62,8 @@ def main() -> int:
     eng = AsyncServeEngine(
         cfg, params, policy, n_slots=args.slots, max_seq=args.max_seq,
         page_size=args.page_size, prefill_chunk=args.prefill_chunk,
-        sched_policy=args.sched, mode=args.mode)
+        sched_policy=args.sched, mode=args.mode,
+        request_timeout_s=args.request_timeout)
 
     pending = deque(
         ServeRequest(i, list(map(int, jax.random.randint(
@@ -85,6 +94,13 @@ def main() -> int:
               f"evictions={kv['evictions']}")
     for r in reqs[:3]:
         print(f"  req {r.rid}: {r.out[:8]}...")
+    if eng.sched.cancelled:
+        print(f"error: {len(eng.sched.cancelled)}/{len(reqs)} requests "
+              f"timed out (--request-timeout {args.request_timeout:g}s):")
+        for r in eng.sched.cancelled:
+            print(f"  req {r.rid}: {r.why_rejected} "
+                  f"({len(r.out)}/{r.max_new} tokens generated)")
+        return 3
     return 0 if done == len(reqs) else 1
 
 

@@ -43,7 +43,8 @@ from repro.kernels.registry import bucket_pow2
 from repro.models import lm, transformer
 from repro.models.transformer import RunCtx
 from repro.serve import kvcache
-from repro.serve.scheduler import DECODE, RequestScheduler, ServeRequest
+from repro.serve.scheduler import (DECODE, PREFILL, RequestScheduler,
+                                   ServeRequest)
 from repro.train.trainer import make_run_ctx
 
 
@@ -245,13 +246,16 @@ class AsyncServeEngine:
                  n_pages: Optional[int] = None, prefill_chunk: int = 64,
                  prefill_batch: int = 2, sched_policy: str = "slo",
                  mode: str = "auto", mesh=None, clock=None,
-                 tracker=None, track_every: int = 16):
+                 tracker=None, track_every: int = 16,
+                 request_timeout_s: float = 0.0):
         self.cfg = cfg
         self.params = params
         self.policy = policy
         self.n_slots = n_slots
         self.max_seq = max_seq
         self.prefill_chunk = prefill_chunk
+        self.request_timeout_s = request_timeout_s
+        self._draining = False
         self.clock = clock or time.monotonic
         self.ctx_dtype = jnp.bfloat16 \
             if policy.compute_dtype == "bfloat16" else jnp.float32
@@ -306,10 +310,46 @@ class AsyncServeEngine:
         now = self.now()
         self.stats.mark(now)
         self.stats.requests_submitted += 1
+        if self._draining:
+            req.t_submit = now
+            req.state = "rejected"
+            req.why_rejected = "engine draining (planned detach)"
+            self.sched.rejected.append(req)
+            self.stats.requests_rejected += 1
+            return False
         ok = self.sched.submit(req, now)
         if not ok:
             self.stats.requests_rejected += 1
         return ok
+
+    def drain(self) -> None:
+        """Planned detach announced: stop admitting new requests and let
+        the in-flight ones finish (``run()`` then returns once the
+        admitted population drains)."""
+        self._draining = True
+
+    def _expire_timeouts(self, now: float) -> None:
+        """Cancel every request older than ``request_timeout_s`` and give
+        its cache space back.  Half-written prefix pages are NOT
+        registered for reuse — a timed-out prompt must not poison the
+        prefix cache."""
+        if self.request_timeout_s <= 0:
+            return
+        for req in (list(self.sched.waiting) + list(self.sched.active)):
+            if now - req.t_submit <= self.request_timeout_s:
+                continue
+            was_active = req.state in (PREFILL, DECODE)
+            if not self.sched.cancel(
+                    req, f"timed out after {self.request_timeout_s:g}s"):
+                continue
+            self.stats.requests_timed_out += 1
+            self.stats.requests_failed += 1
+            if was_active and req.table is not None:
+                if self.mode == "paged":
+                    self.pool.release(req.table)
+                else:
+                    self.slot_req[req.table] = None
+                req.table = None
 
     def _try_open(self, req: ServeRequest) -> bool:
         if self.mode == "paged":
@@ -485,6 +525,7 @@ class AsyncServeEngine:
         eng.sched.all_done()``."""
         now = self.now()
         self._iters += 1
+        self._expire_timeouts(now)
         self.sched.admit(now, self._try_open)
         if self.mode == "paged":
             n = self._paged_prefill_chunks(now)

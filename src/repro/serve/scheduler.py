@@ -29,8 +29,8 @@ import dataclasses
 from collections import deque
 from typing import Deque, List, Optional, Sequence
 
-WAITING, PREFILL, DECODE, DONE, REJECTED = (
-    "waiting", "prefill", "decode", "done", "rejected")
+WAITING, PREFILL, DECODE, DONE, REJECTED, TIMED_OUT = (
+    "waiting", "prefill", "decode", "done", "rejected", "timed_out")
 
 POLICIES = ("slo", "priority", "fcfs")
 
@@ -109,6 +109,7 @@ class RequestScheduler:
         self.active: List[ServeRequest] = []      # PREFILL or DECODE
         self.finished: List[ServeRequest] = []
         self.rejected: List[ServeRequest] = []
+        self.cancelled: List[ServeRequest] = []   # timed out / aborted
 
     # -------------------------------------------------------------- submit --
     def _reject(self, req: ServeRequest, why: str) -> bool:
@@ -202,6 +203,22 @@ class RequestScheduler:
             self.finished.append(req)
             return True
         return False
+
+    def cancel(self, req: ServeRequest, why: str = "cancelled") -> bool:
+        """Pull a live request out of the scheduler (deadline expiry or
+        client abort).  Returns True if it was still live; the engine
+        then releases whatever cache space the request held — withOUT
+        registering its half-written prefix pages for reuse."""
+        if req in self.waiting:
+            self.waiting.remove(req)
+        elif req in self.active:
+            self.active.remove(req)
+        else:
+            return False
+        req.state = TIMED_OUT
+        req.why_rejected = why
+        self.cancelled.append(req)
+        return True
 
     # -------------------------------------------------------------- queries --
     def all_done(self) -> bool:

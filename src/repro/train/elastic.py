@@ -76,6 +76,22 @@ def preempt(run: ElasticRun, pool: DevicePool, *, step: int,
     run.log(step, "preempt", detail or "released composition to pool")
 
 
+def regrow(run: ElasticRun, new_system: ComposedSystem, *, step: int,
+           detail: str = "") -> ComposedSystem:
+    """Adopt a larger recomposed system after a repair returned capacity.
+
+    The inverse of the ``handle_failure`` shrink: the cluster scheduler
+    recomposes a failure-shrunk job back toward its submitted budget
+    (``Scheduler.regrow_shrunk``) and the run resumes from its last
+    checkpoint boundary under the wider sharding.
+    """
+    run.system = new_system
+    run.log(step, "recompose",
+            detail or (f"regrow after repair: "
+                       f"{dict(zip(new_system.axis_names, new_system.axis_sizes))}"))
+    return new_system
+
+
 def resume(run: ElasticRun, like_state: Any, mesh, specs) -> Tuple[Any, int]:
     """Restore the latest checkpoint onto the (possibly new) mesh."""
     state, step = checkpoint.restore(run.ckpt_dir, like_state, mesh=mesh,

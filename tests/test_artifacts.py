@@ -84,7 +84,8 @@ CLUSTER_SIM = os.path.join(RESULTS_DIR, "cluster_sim.json")
 _SIM_REPORT_KEYS = ("span_s", "pool_utilization", "auu",
                     "accelerator_utilization", "link_traffic_gb",
                     "recomposition", "job_wait_s", "jobs", "gangs",
-                    "fairness", "lease_conflicts", "storage", "policy")
+                    "fairness", "lease_conflicts", "storage", "policy",
+                    "faults")
 
 
 @pytest.mark.skipif(
@@ -99,7 +100,9 @@ def test_cluster_sim_artifact_schema():
     jobs = js["jobs"]
     assert jobs["completed"] + jobs["rejected"] == jobs["submitted"]
     assert jobs["stranded"] == 0
+    assert jobs["failed"] == 0                  # no faults in the base trace
     assert js["lease_conflicts"] == 0
+    assert js["faults"]["injected"] == 0
     # per-policy sweep: every policy ran the gang scenario
     assert set(js["policies"]) == {"easy", "fair_share", "priority_preempt"}
     for name, rep in js["policies"].items():
@@ -171,6 +174,47 @@ def test_serve_bench_artifact_schema():
 
 
 # ---------------------------------------------------------------------------
+# chaos benchmark artifact (results/chaos_bench.json)
+# ---------------------------------------------------------------------------
+CHAOS_BENCH = os.path.join(RESULTS_DIR, "chaos_bench.json")
+
+
+@pytest.mark.skipif(
+    not os.path.exists(CHAOS_BENCH),
+    reason="chaos_bench artifact not generated "
+           "(run benchmarks/run.py --bench chaos_bench)")
+def test_chaos_bench_artifact_schema():
+    with open(CHAOS_BENCH) as f:
+        js = json.load(f)
+    assert js["bench"] == "chaos_bench"
+    # the fault plane must be free when unused
+    assert js["baseline_identical"] is True
+    assert 0.0 <= js["availability"] <= 1.0
+    assert 0.0 <= js["goodput_fraction"] <= 1.0
+    assert js["recovery"]["samples"] >= 1
+    assert js["recovery"]["p95_s"] >= js["recovery"]["mean_s"] - 1e-9
+    assert set(js["scenarios"]) >= {"domain_outage", "degradation", "churn"}
+    for name, sc in js["scenarios"].items():
+        jobs = sc["jobs"]
+        assert (jobs["completed"] + jobs["rejected"] + jobs["failed"]
+                == jobs["submitted"]), name
+        assert jobs["stranded"] == 0, name
+        assert sc["faults"]["injected"] >= 1, name
+    acc = js["acceptance"]
+    assert acc["outage_availability_above_0_9"] is True
+    assert acc["outage_all_jobs_recovered"] is True
+    assert acc["degradation_graceful"] is True
+    assert acc["serve_failed_rate_below_1pct"] is True
+    assert acc["serve_unbounded_without_retries"] is True
+    # the serve comparison: resilience on beats resilience off
+    sv = js["serve"]
+    assert sv["resilient"]["failed_request_rate"] < 0.01
+    assert (sv["no_retries"]["failed_request_rate"]
+            > sv["resilient"]["failed_request_rate"]
+            or sv["no_resilience"]["requests"]["stranded"] > 0)
+
+
+# ---------------------------------------------------------------------------
 # storage benchmark artifact (results/storage_bench.json)
 # ---------------------------------------------------------------------------
 STORAGE_BENCH = os.path.join(RESULTS_DIR, "storage_bench.json")
@@ -233,7 +277,8 @@ def test_every_result_artifact_is_schema_versioned(path):
 
 
 @pytest.mark.parametrize("bench", ["cluster_sim", "serve_bench",
-                                   "storage_bench", "kernel_tune"])
+                                   "storage_bench", "kernel_tune",
+                                   "chaos_bench"])
 def test_bench_artifacts_record_their_run_id(bench):
     path = os.path.join(RESULTS_DIR, f"{bench}.json")
     if not os.path.exists(path):
@@ -291,7 +336,8 @@ def test_bench_trajectory_schema(path):
 
 
 @pytest.mark.parametrize("bench", ["cluster_sim", "serve_bench",
-                                   "storage_bench", "kernel_tune"])
+                                   "storage_bench", "kernel_tune",
+                                   "chaos_bench"])
 def test_each_shipped_bench_has_a_seeded_trajectory(bench):
     art = os.path.join(RESULTS_DIR, f"{bench}.json")
     traj = os.path.join(RESULTS_DIR, f"BENCH_{bench}.json")

@@ -1,0 +1,124 @@
+"""Property tests: simulator invariants under dense fault interleavings.
+
+The event loop's staleness armor (per-job epochs invalidating scheduled
+completions) has to hold no matter how faults, repairs, evictions, and
+retries interleave.  ``_check_invariants`` states the contract:
+
+  * conservation — every submitted job ends in exactly one terminal
+    bucket (completed / rejected / failed) or is still accounted as
+    stranded; nothing completes twice;
+  * no negative progress — a completed job ran forward in time and did
+    at least its configured step count;
+  * determinism — the same seed replays to a bit-identical report.
+
+A seeded sweep below always runs; the ``hypothesis`` fuzz on top is
+skipped when the package isn't installed (the container doesn't ship
+it), so CI environments with hypothesis get the dense search for free.
+"""
+import json
+
+import pytest
+
+from repro.cluster.faults import FaultPlan, FaultSpec
+from repro.cluster.simulator import ClusterSimulator, TraceConfig
+
+_KINDS = ("device_down", "device_flaky", "domain_outage", "link_degrade",
+          "tranche_brownout", "tranche_fail")
+
+
+def _plan(choices):
+    """(kind_idx, t, n, clear_dt) quadruples -> a scripted FaultPlan."""
+    faults = []
+    for kind_idx, t, n, clear_dt in choices:
+        kind = _KINDS[kind_idx % len(_KINDS)]
+        faults.append(FaultSpec(
+            kind=kind, t=float(t), n=int(n), domain=kind_idx % 2,
+            frac=0.3, tranche="local-nvme-0", flaps=2, period_s=25.0,
+            detect_s=1.0,
+            t_clear=float(t + clear_dt) if clear_dt > 0 else float("inf")))
+    return FaultPlan(faults=tuple(faults), retry_backoff_s=2.0)
+
+
+def _check_invariants(cfg: TraceConfig) -> None:
+    sim = ClusterSimulator(cfg)
+    rep = sim.run()
+    jobs = rep["jobs"]
+    sched = sim.scheduler
+
+    # conservation: one terminal bucket per job, no double-counting
+    assert jobs["completed"] + jobs["rejected"] + jobs["failed"] \
+        + jobs["stranded"] == jobs["submitted"]
+    done_names = [j.name for j in sched.done]
+    assert len(done_names) == len(set(done_names)) == jobs["completed"]
+    assert len(sched.failed) == jobs["failed"]
+
+    # no negative progress, no phantom completions from stale events
+    for j in sched.done:
+        assert j.end_t >= j.start_t >= 0.0
+        assert j.steps_done >= j.steps - 1e-9
+    for j in sched.failed:
+        assert j.state == "failed" and j.end_t >= 0.0
+
+    # determinism: an identical replay is bit-identical
+    rep2 = ClusterSimulator(cfg).run()
+    assert json.dumps(rep, sort_keys=True, default=str) \
+        == json.dumps(rep2, sort_keys=True, default=str)
+
+
+# --------------------------------------------- always-on seeded sweep ----
+
+_DENSE_CASES = [
+    # overlapping device + domain faults with repairs mid-flight
+    [(0, 20, 24, 30), (2, 35, 0, 25), (1, 50, 16, 0)],
+    # storage churn stacked on a link brownout
+    [(4, 15, 0, 40), (5, 30, 0, 30), (3, 45, 0, 0)],
+    # everything at nearly the same instant
+    [(0, 30, 12, 10), (2, 30, 0, 10), (5, 31, 0, 10), (3, 31, 0, 10)],
+    # repeated flaps with a permanent outage underneath
+    [(1, 10, 32, 0), (2, 25, 0, 0), (0, 40, 8, 20)],
+]
+
+
+@pytest.mark.parametrize("case", range(len(_DENSE_CASES)))
+@pytest.mark.parametrize("seed", [0, 7])
+def test_invariants_hold_for_dense_scripted_interleavings(case, seed):
+    _check_invariants(TraceConfig(
+        n_jobs=10, arrival_rate_hz=0.3, seed=seed, failures=(),
+        faults=_plan(_DENSE_CASES[case])))
+
+
+def test_invariants_hold_with_legacy_failures_and_faults_combined():
+    _check_invariants(TraceConfig(
+        n_jobs=10, arrival_rate_hz=0.3, seed=3,
+        failures=((40.0, 8), (60.0, 90.0, 12), (70.0, None, 6)),
+        faults=_plan([(0, 45, 16, 25), (4, 55, 0, 30)])))
+
+
+def test_invariants_hold_under_mtbf_churn():
+    _check_invariants(TraceConfig(
+        n_jobs=12, arrival_rate_hz=0.3, seed=5, failures=(),
+        faults=FaultPlan(mtbf_s=40.0, mttr_s=30.0, horizon_s=240.0,
+                         mtbf_n=32, detect_s=1.0, retry_backoff_s=2.0)))
+
+
+# ------------------------------------------------------ hypothesis fuzz --
+
+def test_invariants_hold_for_random_fault_interleavings():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    choice = st.tuples(
+        st.integers(min_value=0, max_value=len(_KINDS) - 1),
+        st.integers(min_value=1, max_value=120),     # fault time
+        st.integers(min_value=1, max_value=48),      # victim count
+        st.integers(min_value=0, max_value=60))      # 0 = never clears
+
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**16),
+           choices=st.lists(choice, min_size=1, max_size=5))
+    def prop(seed, choices):
+        _check_invariants(TraceConfig(
+            n_jobs=8, arrival_rate_hz=0.3, seed=seed, failures=(),
+            faults=_plan(choices)))
+
+    prop()

@@ -1,0 +1,279 @@
+"""Fault-injection plane: determinism, recovery, and serve resilience.
+
+Covers ``repro.cluster.faults`` end-to-end through the simulator —
+the determinism contract (``faults=None`` == empty ``FaultPlan()``),
+each fault kind's blast radius, detection latency, retry budgets with
+the FAILED terminal state, regrow-after-repair, planned-drain notices,
+and the serve-side timeout/retry/health-failover stack.  Satellite
+coverage for the ``(t_down, t_up, n)`` failure rows lives here too.
+"""
+import dataclasses
+import json
+
+import pytest
+
+from repro.cluster.faults import FAULT_KINDS, FaultPlan, FaultSpec
+from repro.cluster.scheduler import FAILED
+from repro.cluster.simulator import (ClusterSimulator, JobTemplate,
+                                     ServiceConfig, TraceConfig, run_trace)
+
+
+def _canon(rep):
+    return json.dumps(rep, sort_keys=True, default=str)
+
+
+def _cfg(**kw):
+    kw.setdefault("failures", ())
+    kw.setdefault("n_jobs", 8)
+    kw.setdefault("arrival_rate_hz", 0.2)
+    kw.setdefault("seed", 3)
+    return TraceConfig(**kw)
+
+
+# one long-running 16-chip job on a single-pod 32-device pool: small
+# enough that a scripted fault can take out the *whole* pool, which is
+# the only way to force the preempt -> retry path (spares on the big
+# default pool absorb same-shape recompositions for free)
+def _tiny(steps=40, chips=16, **kw):
+    kw.setdefault("n_local", 16)
+    kw.setdefault("n_switch", 16)
+    kw.setdefault("pods", 1)
+    return _cfg(
+        n_jobs=0,
+        arrivals=((0.0, JobTemplate("qwen2-0.5b", "train_4k",
+                                    chips, steps)),),
+        **kw)
+
+
+# ---------------------------------------------------------------- plan ----
+
+def test_fault_kinds_cover_the_composable_failure_units():
+    assert set(FAULT_KINDS) == {
+        "device_down", "device_flaky", "link_degrade", "domain_outage",
+        "tranche_brownout", "tranche_fail", "pod_loss"}
+
+
+def test_unknown_fault_kind_rejected_at_construction():
+    with pytest.raises(ValueError):
+        FaultSpec(kind="gamma_ray", t=1.0)
+
+
+def test_empty_plan_is_bit_identical_to_none():
+    base = run_trace(_cfg())
+    empty = run_trace(_cfg(faults=FaultPlan()))
+    assert _canon(base) == _canon(empty)
+
+
+def test_same_seed_fault_trace_is_deterministic():
+    cfg = _cfg(faults=FaultPlan(mtbf_s=60.0, mttr_s=40.0,
+                                horizon_s=200.0, mtbf_n=16))
+    assert _canon(run_trace(cfg)) == _canon(run_trace(cfg))
+
+
+# ---------------------------------------------------- device faults ------
+
+def test_device_down_recovers_via_retry_backoff():
+    rep = run_trace(_tiny(faults=FaultPlan(
+        faults=(FaultSpec(kind="device_down", t=30.0, n=32,
+                          t_clear=60.0, detect_s=2.0),),
+        retry_backoff_s=5.0)))
+    jobs, faults = rep["jobs"], rep["faults"]
+    assert faults["injected"] == 1
+    assert jobs["failed"] == 0 and jobs["stranded"] == 0
+    assert jobs["completed"] == jobs["submitted"]
+    assert faults["recovery"]["samples"] >= 1
+    # recovery = detect + decide + restore, so detection latency is a
+    # hard floor on every sample
+    assert faults["recovery"]["mean_s"] >= 2.0
+    assert faults["detect_s_mean"] == pytest.approx(2.0)
+    assert 0.0 < faults["availability"] < 1.0
+
+
+def test_retry_budget_exhaustion_reaches_failed_terminal_state():
+    # the whole pool flaps down/up faster than the job can finish;
+    # max_retries=1 means the second fault-driven preemption is fatal
+    sim = ClusterSimulator(_tiny(steps=200, faults=FaultPlan(
+        faults=(FaultSpec(kind="device_flaky", t=10.0, n=32, flaps=4,
+                          period_s=30.0, detect_s=1.0),),
+        retry_backoff_s=1.0, max_retries=1)))
+    rep = sim.run()
+    assert rep["jobs"]["failed"] == 1
+    assert rep["jobs"]["stranded"] == 0
+    assert rep["jobs"]["completed"] + rep["jobs"]["rejected"] \
+        + rep["jobs"]["failed"] == rep["jobs"]["submitted"]
+    failed = sim.scheduler.failed
+    assert len(failed) == 1 and failed[0].state == FAILED
+    assert "retry budget exhausted" in failed[0].why_rejected
+    kinds = [e.kind for e in sim.telemetry.events]
+    assert "retry" in kinds and "fail" in kinds
+
+
+def test_domain_outage_all_surviving_jobs_recover():
+    rep = run_trace(_cfg(n_jobs=12, faults=FaultPlan(
+        faults=(FaultSpec(kind="domain_outage", t=90.0, domain=1,
+                          t_clear=130.0, detect_s=2.0),),
+        retry_backoff_s=5.0)))
+    jobs = rep["jobs"]
+    assert jobs["failed"] == 0 and jobs["stranded"] == 0
+    assert jobs["completed"] + jobs["rejected"] == jobs["submitted"]
+    assert rep["faults"]["availability"] > 0.5
+
+
+def test_regrow_after_repair_beats_staying_shrunk():
+    # half the tiny pool dies while the 32-chip job runs; it shrinks in
+    # place.  With regrow the post-repair recomposition restores full
+    # width, so the makespan must beat the stay-shrunk plan.
+    def mk(regrow):
+        sim = ClusterSimulator(_tiny(steps=120, chips=32, faults=FaultPlan(
+            faults=(FaultSpec(kind="device_down", t=20.0, n=16,
+                              t_clear=80.0, detect_s=1.0),),
+            regrow=regrow)))
+        rep = sim.run()
+        assert rep["jobs"]["completed"] == rep["jobs"]["submitted"]
+        events = [e for e in sim.telemetry.events
+                  if e.kind == "recompose" and "regrow" in e.detail]
+        return sim.scheduler.done[0].end_t, len(events)
+    (grown_t, grown_regrows), (shrunk_t, shrunk_regrows) = mk(True), mk(False)
+    assert grown_regrows >= 1 and shrunk_regrows == 0
+    assert grown_t < shrunk_t
+
+
+# --------------------------------------------- graceful degradation ------
+
+def test_link_degrade_is_graceful_and_clears():
+    # a 32-chip job on the 32-device pool spans the host/switch
+    # boundary, so its gradient allreduce actually rides the degraded
+    # link class (a 16-chip job would compose all-LOCAL and not notice)
+    def end_t(faults):
+        sim = ClusterSimulator(_tiny(steps=40, chips=32, faults=faults))
+        rep = sim.run()
+        assert rep["jobs"]["preempted"] == 0
+        assert rep["jobs"]["failed"] == 0
+        assert rep["jobs"]["completed"] == rep["jobs"]["submitted"]
+        return sim.scheduler.done[0].end_t
+    clean = end_t(None)
+    forever = end_t(FaultPlan(faults=(
+        FaultSpec(kind="link_degrade", t=10.0, link="host", frac=0.1),)))
+    cleared = end_t(FaultPlan(faults=(
+        FaultSpec(kind="link_degrade", t=10.0, link="host", frac=0.1,
+                  t_clear=clean / 2),)))
+    # degraded the whole way > degraded half the way > untouched
+    assert forever > cleared > clean
+
+
+def test_tranche_brownout_reprices_without_eviction():
+    clean = run_trace(_cfg(n_jobs=10))
+    rep = run_trace(_cfg(n_jobs=10, faults=FaultPlan(faults=(
+        FaultSpec(kind="tranche_brownout", t=30.0,
+                  tranche="local-nvme-0", frac=0.25),))))
+    assert rep["jobs"]["preempted"] == 0
+    assert rep["jobs"]["evicted"] == clean["jobs"]["evicted"]
+    assert rep["jobs"]["completed"] == clean["jobs"]["completed"]
+    assert rep["makespan_s"] >= clean["makespan_s"]
+
+
+def test_tranche_fail_evacuates_holders_and_they_restart():
+    sim = ClusterSimulator(_cfg(n_jobs=10, faults=FaultPlan(
+        faults=(FaultSpec(kind="tranche_fail", t=30.0,
+                          tranche="local-nvme-0", t_clear=90.0,
+                          detect_s=2.0),),
+        retry_backoff_s=2.0)))
+    rep = sim.run()
+    jobs = rep["jobs"]
+    assert jobs["preempted"] >= 1
+    assert jobs["failed"] == 0 and jobs["stranded"] == 0
+    assert jobs["completed"] + jobs["rejected"] == jobs["submitted"]
+    assert rep["faults"]["recovery"]["samples"] >= 1
+
+
+# ------------------------------------------------ serve resilience -------
+
+def _serve_cfg(*, retries, health_s, timeout_s, fault=None):
+    fault = fault or FaultSpec(kind="device_down", t=15.0, n=64,
+                               t_clear=120.0, detect_s=10.0)
+    return TraceConfig(
+        n_jobs=0, seed=11, failures=(),
+        services=(ServiceConfig(
+            name="chat", arch="llama3.2-3b", shape_name="decode_32k",
+            n_replicas=3, chips_per_replica=64, n_requests=80,
+            arrival_rate_hz=4.0, prompt_len=2048, max_new=128,
+            request_timeout_s=timeout_s, max_request_retries=retries,
+            retry_backoff_s=0.5, health_check_s=health_s),),
+        faults=FaultPlan(faults=(fault,)))
+
+
+def test_serve_failover_keeps_failed_request_rate_low():
+    res = run_trace(_serve_cfg(retries=2, health_s=2.0, timeout_s=15.0))
+    bare = run_trace(_serve_cfg(retries=0, health_s=0.0, timeout_s=0.0))
+    sv = res["serving"]["chat"]
+    assert sv["failed_request_rate"] < 0.01
+    assert sv["requests"]["stranded"] == 0
+    assert sv["requests"]["retries"] >= 1
+    # without timeouts/health checks the requests on the dead replica
+    # hang forever: stranded or failed, never completed
+    bv = bare["serving"]["chat"]
+    assert (bv["requests"]["stranded"] > 0
+            or bv["failed_request_rate"] > sv["failed_request_rate"])
+
+
+def test_serve_timeout_without_retries_fails_requests():
+    rep = run_trace(_serve_cfg(retries=0, health_s=0.0, timeout_s=15.0))
+    sv = rep["serving"]["chat"]
+    assert sv["requests"]["timed_out"] >= 1
+    assert sv["failed_request_rate"] > 0.0
+    assert sv["requests"]["stranded"] == 0
+
+
+def test_planned_detach_drains_before_the_hit():
+    # a drain notice only works when the victims are knowable in
+    # advance — a locality domain, not randomly-sampled devices
+    sim = ClusterSimulator(_serve_cfg(
+        retries=2, health_s=2.0, timeout_s=15.0,
+        fault=FaultSpec(kind="domain_outage", t=15.0, domain=0,
+                        t_clear=120.0, detect_s=2.0, notice_s=5.0)))
+    sim.run()
+    kinds = [e.kind for e in sim.telemetry.events]
+    assert "drain" in kinds
+    drain_t = min(e.t for e in sim.telemetry.events if e.kind == "drain")
+    fault_t = min(e.t for e in sim.telemetry.events if e.kind == "fault")
+    assert drain_t < fault_t     # the notice lands before the fault
+
+
+# ------------------------------------- (t_down, t_up, n) failure rows ----
+
+def test_three_tuple_failure_matches_equivalent_legacy_row():
+    legacy = run_trace(_cfg(n_jobs=10, failures=((60.0, 8),),
+                            repair_after_s=90.0))
+    explicit = run_trace(_cfg(n_jobs=10, failures=((60.0, 150.0, 8),),
+                              repair_after_s=90.0))
+    # identical behavior; only the config echo differs
+    for rep in (legacy, explicit):
+        rep["config"].pop("failures")
+    assert _canon(legacy) == _canon(explicit)
+
+
+@pytest.mark.parametrize("t_up", [None, float("inf")])
+def test_t_up_none_or_inf_means_never_repaired(t_up):
+    def repairs(failures):
+        sim = ClusterSimulator(_tiny(steps=60, failures=failures))
+        rep = sim.run()
+        assert rep["jobs"]["completed"] == 1
+        return sum(1 for e in sim.telemetry.events if e.kind == "repair")
+    assert repairs(((10.0, 40.0, 16),)) == 1
+    assert repairs(((10.0, t_up, 16),)) == 0
+
+
+def test_repaired_devices_are_releasable_again():
+    # regression: 24 of 32 devices die at t=10 and repair at t=60; a
+    # 16-chip job arriving at t=80 only fits if the repaired devices
+    # rejoin the leasable pool
+    late = (80.0, JobTemplate("qwen2-0.5b", "train_4k", 16, 10))
+    ok = run_trace(TraceConfig(
+        n_jobs=0, n_local=16, n_switch=16, pods=1, seed=3,
+        failures=((10.0, 60.0, 24),), arrivals=(late,)))
+    assert ok["jobs"]["completed"] == 1
+    assert ok["jobs"]["stranded"] == 0
+    dead = run_trace(TraceConfig(
+        n_jobs=0, n_local=16, n_switch=16, pods=1, seed=3,
+        failures=((10.0, None, 24),), arrivals=(late,)))
+    assert dead["jobs"]["completed"] == 0
