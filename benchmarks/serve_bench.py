@@ -1,16 +1,23 @@
-"""Serving-stack benchmark: engine smoke + cluster serving trace.
+"""Serving-stack benchmark: engine smoke + cluster serving traces.
 
-Two layers, two request-arrival scenarios each:
+Two layers:
 
   * **engine** — a real (reduced-config) ``AsyncServeEngine`` run on this
-    host: paged KV cache, chunked prefill, prefix-hash reuse, greedy
-    decode.  ``burst`` submits every request up front; ``paced`` trickles
-    them in while the engine steps.  TTFT/TPOT/throughput are wall-clock
-    (so they vary by machine); cache-hit rate and token counts are exact.
+    host: paged KV cache, continuous batching (fused prefill+decode
+    iterations), prefix-hash reuse, greedy decode.  ``burst`` submits
+    every request up front; ``paced`` trickles them in while the engine
+    steps; ``burst_unfused`` replays the burst with fused batching off —
+    the continuous-batching comparison row.  Engines are ``warmup()``-ed
+    first so TTFT/TPOT percentiles measure steady state; jit compile
+    time is reported separately (``compile_s``).  Latencies are
+    wall-clock (vary by machine); cache-hit rate and token counts exact.
   * **cluster** — the deterministic serving-trace mode of the cluster
-    simulator: a 2-replica ``ServeJob`` service admitted *alongside* the
-    default training-job mix, ``poisson`` vs ``burst`` request arrivals,
-    per-replica prefix caches and per-link KV-traffic accounting.
+    simulator.  ``poisson``/``burst`` admit a 2-replica service alongside
+    the default training mix (unchanged legacy scenarios), and the
+    ``overload_*`` sweep drives one replica past saturation at 1x/2x
+    arrival rates with ``ServiceConfig.autoscale`` off vs on — the
+    SLO-driven replica-autoscaling comparison (scale-ups lease chips
+    through the ordinary scheduler path).
 
 ``report()`` returns the JSON artifact ``run.py --bench serve_bench``
 writes to ``results/serve_bench.json``; schema asserted by
@@ -29,26 +36,35 @@ from repro.cluster.simulator import (ClusterSimulator, ServiceConfig,
 from repro.configs import get_config, reduced
 from repro.configs.base import PolicyConfig
 from repro.models import lm
-from repro.serve import AsyncServeEngine, ServeRequest
+from repro.serve import SLO, AsyncServeEngine, ServeRequest
 
 ARCH = "qwen2-0.5b"
 N_REQUESTS = 10
 PROMPT_LEN = 40
 PREFIX_LEN = 24
 MAX_NEW = 8
+N_SLOTS = 10            # the whole burst admits at once
+# per-request targets: achievable in steady state (warmed, fused) on a
+# CPU host, missed when prefill is throttled behind the decode batch
+REQUEST_SLO = SLO(ttft_s=2.5, tpot_s=0.25)
 
 
 # Perf-trajectory spec for results/BENCH_serve_bench.json (see
 # docs/tracking.md).  Gated metrics come from the deterministic cluster
-# layer (poisson arrivals) and the engine's exact cache-hit accounting;
-# the engine's wall-clock latencies vary by host and stay info-only.
+# layer and the engine's exact accounting; the engine's SLO attainment
+# and throughput are gated too (warmup makes them steady-state), with a
+# generous band on throughput because it is wall-clock; per-token
+# latency percentiles stay info-only.
 TRAJECTORY = {
     "cluster_poisson_ttft_p99_s": {"direction": "down"},
     "cluster_poisson_tpot_p50_s": {"direction": "down"},
     "cluster_poisson_slo_attainment": {"direction": "up"},
     "cluster_poisson_throughput_tok_s": {"direction": "up"},
-    "engine_burst_cache_hit_rate": {"direction": "up"},
-    "engine_burst_throughput_tok_s": {"direction": "info"},
+    "cluster_autoscale_slo_attainment": {"direction": "up"},
+    "cluster_autoscale_ttft_p99_s": {"direction": "down"},
+    "engine_paced_cache_hit_rate": {"direction": "up"},
+    "engine_burst_slo_attainment": {"direction": "up"},
+    "engine_burst_throughput_tok_s": {"direction": "up", "band": 0.5},
     "engine_burst_ttft_p50_s": {"direction": "info"},
 }
 
@@ -56,13 +72,18 @@ TRAJECTORY = {
 def trajectory_row(rep: Dict[str, object]) -> Dict[str, float]:
     """Flatten one report() into the gated summary-row metrics."""
     svc = rep["cluster"]["poisson"]["serving"]["chat"]
+    auto = rep["cluster"]["overload_autoscale_2x"]["serving"]["chat"]
     eng = rep["engine"]["burst"]
+    paced = rep["engine"]["paced"]
     return {
         "cluster_poisson_ttft_p99_s": svc["ttft_s"]["p99"],
         "cluster_poisson_tpot_p50_s": svc["tpot_s"]["p50"],
         "cluster_poisson_slo_attainment": svc["slo_attainment"],
         "cluster_poisson_throughput_tok_s": svc["throughput_tok_s"],
-        "engine_burst_cache_hit_rate": eng["kv_pages"]["hit_rate"],
+        "cluster_autoscale_slo_attainment": auto["slo_attainment"],
+        "cluster_autoscale_ttft_p99_s": auto["ttft_s"]["p99"],
+        "engine_paced_cache_hit_rate": paced["kv_pages"]["hit_rate"],
+        "engine_burst_slo_attainment": eng["slo_attainment"],
         "engine_burst_throughput_tok_s": eng["throughput_tok_s"],
         "engine_burst_ttft_p50_s": eng["ttft_s"]["p50"],
     }
@@ -76,15 +97,19 @@ def _requests(vocab: int) -> List[ServeRequest]:
     for i in range(N_REQUESTS):
         tail = list(np.random.RandomState(100 + i).randint(
             0, vocab, PROMPT_LEN - PREFIX_LEN))
-        out.append(ServeRequest(i, prefixes[i % 2] + tail, max_new=MAX_NEW))
+        out.append(ServeRequest(i, prefixes[i % 2] + tail, max_new=MAX_NEW,
+                                slo=REQUEST_SLO))
     return out
 
 
-def _engine(params, cfg) -> AsyncServeEngine:
+def _engine(params, cfg, *, fused: bool = True) -> AsyncServeEngine:
     policy = PolicyConfig(compute_dtype="float32", remat="none",
                           attn_impl="full")
-    return AsyncServeEngine(cfg, params, policy, n_slots=4, max_seq=96,
-                            page_size=8, prefill_chunk=16, prefill_batch=2)
+    eng = AsyncServeEngine(cfg, params, policy, n_slots=N_SLOTS, max_seq=96,
+                           page_size=8, prefill_chunk=16, prefill_batch=2,
+                           token_budget=N_SLOTS * 16 + N_SLOTS, fused=fused)
+    eng.warmup()        # steady-state latencies; compile_s reported apart
+    return eng
 
 
 def engine_scenarios() -> Dict[str, Dict[str, object]]:
@@ -107,6 +132,14 @@ def engine_scenarios() -> Dict[str, Dict[str, object]]:
             break
         eng.stats.mark(eng.now())
     out["paced"] = eng.report()
+
+    # continuous-batching comparison row: same burst, fused=False runs
+    # the legacy alternating prefill-batch / decode-batch iterations
+    eng = _engine(params, cfg, fused=False)
+    for r in _requests(cfg.vocab_size):
+        eng.submit(r)
+    eng.run()
+    out["burst_unfused"] = eng.report()
     return out
 
 
@@ -122,6 +155,28 @@ def _cluster_cfg(arrival: str) -> TraceConfig:
             prefill_chunk=512),))
 
 
+# single replica, request rate past its saturation point at 2x: the
+# fixed service queues without bound while autoscale leases replicas
+OVERLOAD_RATE_HZ = 20.0
+OVERLOAD_N_REQUESTS = 320
+
+
+def _overload_cfg(load: float, autoscale: bool) -> TraceConfig:
+    extra = dict(autoscale=True, autoscale_interval_s=0.5,
+                 max_replicas=8, scale_up_queue=1.0,
+                 scale_down_queue=0.25) if autoscale else {}
+    return TraceConfig(
+        n_jobs=0, failures=(), seed=3,
+        services=(ServiceConfig(
+            name="chat", arch="llama3.2-3b", shape_name="decode_32k",
+            n_replicas=1, chips_per_replica=64,
+            n_requests=OVERLOAD_N_REQUESTS,
+            arrival_rate_hz=OVERLOAD_RATE_HZ * load, arrival="poisson",
+            prompt_len=2048, max_new=256, n_prefixes=6, prefix_len=1024,
+            prefill_chunk=512, ttft_slo_s=2.0, tpot_slo_s=0.5,
+            **extra),))
+
+
 def cluster_scenarios() -> Dict[str, Dict[str, object]]:
     out: Dict[str, Dict[str, object]] = {}
     for arrival in ("poisson", "burst"):
@@ -133,6 +188,17 @@ def cluster_scenarios() -> Dict[str, Dict[str, object]]:
             "pool_utilization": rep["pool_utilization"],
             "makespan_s": rep["makespan_s"],
         }
+    # SLO-driven autoscaling sweep: fixed vs autoscale at 1x and 2x load
+    for name, load, autoscale in (
+            ("overload_fixed_1x", 1.0, False),
+            ("overload_fixed_2x", 2.0, False),
+            ("overload_autoscale_1x", 1.0, True),
+            ("overload_autoscale_2x", 2.0, True)):
+        rep = ClusterSimulator(_overload_cfg(load, autoscale)).run()
+        out[name] = {
+            "serving": rep["serving"],
+            "makespan_s": rep["makespan_s"],
+        }
     return out
 
 
@@ -141,7 +207,11 @@ def report() -> Dict[str, object]:
         "bench": "serve_bench",
         "config": {"arch": ARCH, "n_requests": N_REQUESTS,
                    "prompt_len": PROMPT_LEN, "prefix_len": PREFIX_LEN,
-                   "max_new": MAX_NEW},
+                   "max_new": MAX_NEW, "n_slots": N_SLOTS,
+                   "ttft_slo_s": REQUEST_SLO.ttft_s,
+                   "tpot_slo_s": REQUEST_SLO.tpot_s,
+                   "overload_rate_hz": OVERLOAD_RATE_HZ,
+                   "overload_n_requests": OVERLOAD_N_REQUESTS},
         "engine": engine_scenarios(),
         "cluster": cluster_scenarios(),
     }
@@ -160,16 +230,19 @@ def run() -> List[Tuple[str, float, str]]:
             f"ttft_p50={sc['ttft_s']['p50']*1e3:.0f}ms "
             f"tpot_p50={sc['tpot_s']['p50']*1e3:.0f}ms "
             f"tput={sc['throughput_tok_s']:.1f}tok/s "
+            f"slo={sc['slo_attainment']*100:.0f}% "
+            f"compile={sc['compile_s']:.1f}s "
             f"hit={sc['kv_pages']['hit_rate']*100:.0f}%"))
     for name, sc in rep["cluster"].items():
         svc = sc["serving"]["chat"]
-        hits = " ".join(
-            f"{r.split('/')[-1]}={v['cache_hit_rate']*100:.0f}%"
-            for r, v in svc["replicas"].items())
+        scale = svc.get("autoscale", {})
+        extra = (f" peak_reps={scale['peak_replicas']}"
+                 f" +{scale['scale_ups']}/-{scale['scale_downs']}"
+                 if scale else "")
         rows.append((
             f"serve_bench/cluster_{name}", us,
             f"reqs={svc['requests']['completed']} "
             f"ttft_p99={svc['ttft_s']['p99']:.2f}s "
             f"tpot_p50={svc['tpot_s']['p50']*1e3:.0f}ms "
-            f"slo={svc['slo_attainment']*100:.0f}% hit[{hits}]"))
+            f"slo={svc['slo_attainment']*100:.0f}%" + extra))
     return rows

@@ -56,8 +56,8 @@ from collections import deque
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.cluster.faults import FaultInjector, FaultPlan
-from repro.cluster.scheduler import (DONE, QUEUED, RUNNING, Job, Scheduler,
-                                     ServeJob)
+from repro.cluster.scheduler import (DONE, QUEUED, REJECTED, RUNNING, Job,
+                                     Scheduler, ServeJob)
 from repro.cluster.telemetry import ServingStats, Telemetry
 from repro.configs import get_config
 from repro.configs.base import SHAPES
@@ -143,6 +143,20 @@ class ServiceConfig:
     # replicas and fails over the requests of any replica sitting on
     # unhealthy devices — ahead of the cluster-level fault detection
     health_check_s: float = 0.0        # 0 = no health checks
+    # SLO-driven autoscaling (off by default — legacy traces are
+    # bit-identical): every autoscale_interval_s the service compares
+    # queued requests per admitting replica and windowed SLO attainment
+    # against targets and grows/shrinks the replica set through the
+    # ordinary scheduler path — scale-up leases chips like any other
+    # composition (priced: lease + DCN + tranche), scale-down drains the
+    # least-loaded replica and releases its lease once idle.
+    autoscale: bool = False
+    autoscale_interval_s: float = 2.0
+    min_replicas: int = 0              # 0 -> n_replicas
+    max_replicas: int = 0              # 0 -> 4 * n_replicas
+    scale_up_queue: float = 4.0        # queued reqs per admitting replica
+    scale_down_queue: float = 0.5
+    slo_target: float = 0.99           # window attainment below -> grow
 
 
 class _Replica:
@@ -175,6 +189,14 @@ class _Service:
         self.backlog: deque = deque()
         self.requests: Dict[int, Dict[str, object]] = {}
         self.remaining = cfg.n_requests
+        # autoscale state (inert unless cfg.autoscale)
+        self.next_replica = cfg.n_replicas   # next scale-up's replica id
+        self.scale_ups = 0
+        self.scale_downs = 0
+        self.scaling_down: set = set()       # names draining to retire
+        self.windows: List[Dict[str, object]] = []   # per-tick samples
+        self.win_ok = 0                      # SLO-met since last tick
+        self.win_n = 0                       # completed since last tick
 
 
 @dataclasses.dataclass(frozen=True)
@@ -338,23 +360,8 @@ class ClusterSimulator:
         for svc_cfg in self.cfg.services:
             svc = _Service(svc_cfg)
             self.services[svc_cfg.name] = svc
-            steps_est = -(-svc_cfg.n_requests * (
-                svc_cfg.max_new
-                + svc_cfg.prompt_len // max(svc_cfg.prefill_chunk, 1))
-                // max(svc_cfg.n_replicas
-                       * SHAPES[svc_cfg.shape_name].global_batch, 1))
             for i in range(svc_cfg.n_replicas):
-                job = ServeJob(
-                    name=f"{svc_cfg.name}/r{i}", arch=svc_cfg.arch,
-                    shape_name=svc_cfg.shape_name,
-                    n_chips=svc_cfg.chips_per_replica, steps=steps_est,
-                    priority=svc_cfg.priority, service=svc_cfg.name,
-                    tenant=svc_cfg.name,
-                    replica=i, ttft_slo_s=svc_cfg.ttft_slo_s,
-                    tpot_slo_s=svc_cfg.tpot_slo_s,
-                    prefill_chunk=svc_cfg.prefill_chunk)
-                svc.replicas.append(job)
-                self.jobs[job.name] = job
+                job = self._make_replica_job(svc, i)
                 self._push(svc_cfg.start_t, "arrival", job.name)
             t = svc_cfg.start_t
             for rid in range(svc_cfg.n_requests):
@@ -371,6 +378,11 @@ class ClusterSimulator:
             if svc_cfg.health_check_s > 0:
                 self._push(svc_cfg.start_t + svc_cfg.health_check_s,
                            "health", svc_cfg.name)
+        # autoscaler ticks (rng-free; off by default, legacy-identical)
+        for svc_cfg in self.cfg.services:
+            if svc_cfg.autoscale and svc_cfg.autoscale_interval_s > 0:
+                self._push(svc_cfg.start_t + svc_cfg.autoscale_interval_s,
+                           "autoscale", svc_cfg.name)
         # fault plane last: its (optional) MTBF schedule consumes the rng
         # only after every legacy draw, so pre-fault traces replay
         # identically with faults=None or an empty FaultPlan
@@ -535,6 +547,28 @@ class ClusterSimulator:
             self._schedule_completion(job, now)
 
     # ------------------------------------------------------------- serving --
+    def _make_replica_job(self, svc: _Service, i: int) -> ServeJob:
+        """Build and register replica ``i``'s ServeJob (trace-time
+        replicas and autoscale scale-ups share the sizing formula)."""
+        scfg = svc.cfg
+        steps_est = -(-scfg.n_requests * (
+            scfg.max_new
+            + scfg.prompt_len // max(scfg.prefill_chunk, 1))
+            // max(scfg.n_replicas
+                   * SHAPES[scfg.shape_name].global_batch, 1))
+        job = ServeJob(
+            name=f"{scfg.name}/r{i}", arch=scfg.arch,
+            shape_name=scfg.shape_name,
+            n_chips=scfg.chips_per_replica, steps=steps_est,
+            priority=scfg.priority, service=scfg.name,
+            tenant=scfg.name,
+            replica=i, ttft_slo_s=scfg.ttft_slo_s,
+            tpot_slo_s=scfg.tpot_slo_s,
+            prefill_chunk=scfg.prefill_chunk)
+        svc.replicas.append(job)
+        self.jobs[job.name] = job
+        return job
+
     def _replica_started(self, job: ServeJob, now: float) -> None:
         """A serve replica came up: open its runtime state, start its
         collective traffic, and drain the service backlog onto it.  No
@@ -622,12 +656,14 @@ class ClusterSimulator:
                 self._begin_request(rep, svc, rep.queue.popleft(), now)
         ttft = req["t_first"] - req["submit_t"]
         ttft_slo, tpot_slo = req["slo"]       # the serving replica's SLOs
+        slo_ok = ttft <= ttft_slo and req["tpot"] <= tpot_slo
+        svc.win_n += 1                        # autoscaler's rolling window
+        svc.win_ok += slo_ok
         svc.stats.add_request(
             t_done=now, wait_s=req["start_t"] - req["submit_t"],
             ttft_s=ttft, tpot_s=req["tpot"],
             prompt_tokens=scfg.prompt_len, cached_tokens=req["cached"],
-            output_tokens=scfg.max_new,
-            slo_ok=(ttft <= ttft_slo and req["tpot"] <= tpot_slo))
+            output_tokens=scfg.max_new, slo_ok=slo_ok)
         svc.remaining -= 1
         if svc.remaining == 0:
             self._finish_service(svc, now)
@@ -658,6 +694,7 @@ class ClusterSimulator:
             return
         self._stash_counters(rep)
         svc = self.services[job.service]
+        svc.scaling_down.discard(job.name)   # preemption cancels the drain
         for rid in sorted(rep.active) + list(rep.queue):
             req = svc.requests[rid]
             req["attempt"] += 1
@@ -732,6 +769,96 @@ class ClusterSimulator:
             self.draining.add(job.name)
         self._push(now + svc.cfg.health_check_s, "health", svc.cfg.name)
 
+    # --------------------------------------------------------- autoscaling --
+    def _autoscale_tick(self, svc: _Service, now: float) -> None:
+        """Periodic (rng-free) scale decision: retire replicas whose
+        planned drain finished, sample the window, then compare queued
+        requests per admitting replica and windowed SLO attainment
+        against the config targets.  Scale-up submits a new ServeJob
+        through the ordinary admission path (the lease is priced like
+        any other composition); scale-down marks the least-loaded
+        replica draining — it stops admitting, finishes its in-flight
+        work, and gives its chips back at a later tick."""
+        if svc.remaining <= 0:
+            return                      # trace drained: stop ticking
+        if not any(j.state in (QUEUED, RUNNING) for j in svc.replicas):
+            return      # every replica rejected/retired: the service is
+                        # stranded and ticking forever would never drain
+        cfg = svc.cfg
+        self._retire_drained(svc, now)
+        live = [j for j in svc.replicas
+                if j.state == RUNNING and j.name in self.replicas]
+        admitting = [j for j in live if j.name not in self.draining]
+        queued = (sum(len(self.replicas[j.name].queue) for j in admitting)
+                  + len(svc.backlog))
+        per_rep = queued / max(len(admitting), 1)
+        att = svc.win_ok / svc.win_n if svc.win_n else 1.0
+        # replicas already requested count against the cap, so a slow
+        # lease (queued scale-up) does not trigger a second one
+        alive = [j for j in svc.replicas
+                 if j.state in (QUEUED, RUNNING)
+                 and j.name not in svc.scaling_down]
+        svc.windows.append({
+            "t": now, "attainment": att, "completed": svc.win_n,
+            "queued_per_replica": per_rep, "replicas": len(alive)})
+        svc.win_ok = svc.win_n = 0
+        lo = cfg.min_replicas or cfg.n_replicas
+        hi = cfg.max_replicas or 4 * cfg.n_replicas
+        pressured = per_rep > cfg.scale_up_queue or att < cfg.slo_target
+        # a rejected replica means the shape is analytically infeasible
+        # on this pool — growth is permanently off, not retried forever
+        can_grow = not any(j.state == REJECTED for j in svc.replicas)
+        if pressured and can_grow and len(alive) < hi:
+            self._scale_up(svc, now)
+        elif (not pressured and per_rep < cfg.scale_down_queue
+                and len(admitting) > lo and len(alive) > lo):
+            self._scale_down(svc, admitting, now)
+        self._push(now + cfg.autoscale_interval_s, "autoscale", cfg.name)
+
+    def _retire_drained(self, svc: _Service, now: float) -> None:
+        """Release the lease of any planned-drain replica that emptied:
+        the scale-down's second half — chips return to the pool through
+        ``on_complete`` exactly like a finished job."""
+        for name in sorted(svc.scaling_down):
+            job = self.jobs[name]
+            rep = self.replicas.get(name)
+            if job.state != RUNNING or rep is None:
+                # preempted/failed mid-drain: the restart path already
+                # re-routed its load; drop the drain plan
+                svc.scaling_down.discard(name)
+                self.draining.discard(name)
+                continue
+            if rep.load() > 0:
+                continue                # still finishing in-flight work
+            self._rate_off(name)
+            self.replicas.pop(name)
+            self._stash_counters(rep)
+            self.draining.discard(name)
+            svc.scaling_down.discard(name)
+            self.telemetry.log(now, "autoscale", name,
+                               "scale-down: drained, lease released")
+            self.scheduler.on_complete(job, now)
+            self._start_newly_scheduled(now)
+
+    def _scale_up(self, svc: _Service, now: float) -> None:
+        job = self._make_replica_job(svc, svc.next_replica)
+        svc.next_replica += 1
+        svc.scale_ups += 1
+        self.telemetry.log(now, "autoscale", job.name,
+                           f"scale-up: +1 replica for {svc.cfg.name}")
+        self.scheduler.submit(job, now)
+        self._start_newly_scheduled(now)
+
+    def _scale_down(self, svc: _Service, admitting: List[ServeJob],
+                    now: float) -> None:
+        job = min(admitting,
+                  key=lambda j: (self.replicas[j.name].load(), -j.replica))
+        svc.scale_downs += 1
+        svc.scaling_down.add(job.name)
+        self.draining.add(job.name)     # stops admitting immediately
+        self.telemetry.log(now, "autoscale", job.name,
+                           "scale-down: draining")
+
     # ---------------------------------------------------------------- run --
     def run(self) -> Dict[str, object]:
         wall0 = time.perf_counter()
@@ -776,6 +903,8 @@ class ClusterSimulator:
                     self._arm_timeout(svc, payload[1], now)
             elif kind == "health":
                 self._health_check(self.services[payload], now)
+            elif kind == "autoscale":
+                self._autoscale_tick(self.services[payload], now)
             elif kind == "req_done":
                 svc_name, rid, attempt = payload
                 svc = self.services[svc_name]
@@ -909,6 +1038,16 @@ class ClusterSimulator:
                 row["rated_tokens_per_s"] = job.tokens_per_s
             row.update(self._replica_counters(job.name))
             out["replicas"][job.name] = row
+        if svc.cfg.autoscale:
+            reps = [w["replicas"] for w in svc.windows]
+            out["autoscale"] = {
+                "scale_ups": svc.scale_ups,
+                "scale_downs": svc.scale_downs,
+                "peak_replicas": max(reps, default=svc.cfg.n_replicas),
+                "final_replicas": len(
+                    [j for j in svc.replicas if j.state == RUNNING]),
+                "windows": svc.windows,
+            }
         return out
 
     def _stash_counters(self, rep: _Replica) -> None:

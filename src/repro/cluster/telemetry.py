@@ -45,7 +45,8 @@ from repro.core.topology import LinkClass
 
 EVENT_KINDS = ("submit", "reject", "start", "complete", "fail", "repair",
                "recompose", "preempt", "conflict", "storage", "evict",
-               "shrink", "gang", "fault", "detect", "retry", "drain")
+               "shrink", "gang", "fault", "detect", "retry", "drain",
+               "autoscale")
 
 
 @dataclasses.dataclass(frozen=True)

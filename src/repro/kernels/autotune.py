@@ -34,7 +34,7 @@ from repro.kernels import ops
 from repro.kernels import registry as reg
 
 KERNELS = ("flash_attention", "flash_attention_bwd", "flash_attention_xla",
-           "ssd", "rglru")
+           "decode_attention", "ssd", "rglru")
 
 _ATTN_BLOCK_OPTS = (32, 64, 128, 256)
 _SSD_CHUNK_OPTS = (32, 64, 128, 256)
@@ -56,15 +56,17 @@ class Case:
     causal: bool = True
     window: int = 0
     batch: int = 1
+    page_size: int = 0                # paged decode cells only
 
     def dim(self, name: str) -> int:
         return dict(self.dims)[name]
 
     @property
     def variant(self) -> str:
-        if not self.kernel.startswith("flash_attention"):
-            return ""
-        return reg.attention_variant(self.causal, self.window)
+        if (self.kernel.startswith("flash_attention")
+                or self.kernel == "decode_attention"):
+            return reg.attention_variant(self.causal, self.window)
+        return ""
 
     @property
     def key(self) -> str:
@@ -82,6 +84,16 @@ def attn_case(kernel: str = "flash_attention", *, S: int, T: int = 0,
     T = T or S
     return Case(kernel, (("d", D), ("g", G), ("s", S), ("t", T)),
                 dtype=dtype, causal=causal, window=window, batch=batch)
+
+
+def decode_case(*, B: int, T: int, D: int = 32, G: int = 2,
+                page_size: int = 16, dtype: str = "float32") -> Case:
+    """Paged-attention decode cell: (B, 1, cache_len T) over the page
+    pool.  Keys on the engine's decode bucket vocabulary
+    (``decode_attention|b=…,t=…,d=…,g=…``)."""
+    assert T % page_size == 0, (T, page_size)
+    return Case("decode_attention", (("b", B), ("d", D), ("g", G), ("t", T)),
+                dtype=dtype, batch=B, page_size=page_size)
 
 
 def ssd_case(*, S: int, H: int = 4, P: int = 16, G: int = 1, N: int = 32,
@@ -116,6 +128,16 @@ def candidates_for(case: Case) -> List[Dict[str, int]]:
                 if cand not in seen:
                     seen.append(cand)
         seen.sort(key=lambda c: (c["block_q"], c["block_k"]))
+    elif case.kernel == "decode_attention":
+        ps = case.page_size
+        P = case.dim("t") // ps
+        for ppb in (1, 2, 4, 8, 16):       # pages per kv superblock
+            if ppb > P or P % ppb:
+                continue
+            cand = {"block_q": 1, "block_k": ppb * ps}
+            if cand not in seen:
+                seen.append(cand)
+        seen.sort(key=lambda c: c["block_k"])
     elif case.kernel == "ssd":
         S = case.dim("s")
         for ch in _SSD_CHUNK_OPTS:
@@ -152,6 +174,11 @@ def default_blocks(case: Case) -> Dict[str, int]:
             dq = dk = 512                      # models/attention.py default
         return {"block_q": reg.fit_block(dq, case.dim("s")),
                 "block_k": reg.fit_block(dk, case.dim("t"))}
+    if case.kernel == "decode_attention":
+        ps = case.page_size
+        P = case.dim("t") // ps
+        ppb = reg.fit_block(max(ops.DEFAULT_PAGED_BLOCK_K // ps, 1), P)
+        return {"block_q": 1, "block_k": ppb * ps}
     if case.kernel == "ssd":
         return {"chunk": reg.fit_block(ops.DEFAULT_SSD_CHUNK,
                                        case.dim("s"))}
@@ -194,6 +221,28 @@ def build_call(case: Case, blocks: Dict[str, int]
         def fwd(q_, k_, v_):
             return ops.attention(q_, k_, v_, **kwargs)
         return fwd, (q, k, v)
+
+    if case.kernel == "decode_attention":
+        T, ps = case.dim("t"), case.page_size
+        D, G = case.dim("d"), case.dim("g")
+        B = case.dim("b")
+        K = 2                                  # kv heads; H = K*G
+        P = T // ps
+        n_pages = B * P
+        q = jax.random.normal(k1, (B, K * G, D), jnp.float32).astype(dt_)
+        kp = jax.random.normal(
+            k2, (n_pages + 1, ps, K, D), jnp.float32).astype(dt_)
+        vp = jax.random.normal(
+            k3, (n_pages + 1, ps, K, D), jnp.float32).astype(dt_)
+        # exclusive non-contiguous tables + ragged lengths: the shapes
+        # the serving pool actually produces
+        tables = jnp.arange(n_pages, dtype=jnp.int32).reshape(B, P)[:, ::-1]
+        lengths = T - (jnp.arange(B, dtype=jnp.int32) * (ps // 2)) % T
+
+        def run_paged(*args):
+            return ops.paged_attention(*args, impl="pallas",
+                                       block_k=blocks["block_k"])
+        return run_paged, (q, kp, vp, tables, lengths)
 
     if case.kernel == "ssd":
         S, H = case.dim("s"), case.dim("h")
@@ -337,11 +386,13 @@ SMOKE_CASES: Tuple[Case, ...] = (
     attn_case("flash_attention", S=128, D=32, G=2, window=64),
     attn_case("flash_attention_bwd", S=128, D=32, G=2),
     attn_case("flash_attention_xla", S=256, D=64, G=4),
+    decode_case(B=4, T=128, D=32, G=2, page_size=16),
     ssd_case(S=128, H=4, P=16, G=1, N=32),
     rglru_case(S=128, W=64),
 )
 
 DEFAULT_CASES: Tuple[Case, ...] = SMOKE_CASES + (
+    decode_case(B=8, T=512, D=64, G=4, page_size=16),
     attn_case("flash_attention", S=256, D=64, G=4),
     attn_case("flash_attention", S=256, D=64, G=4, dtype="bfloat16"),
     attn_case("flash_attention", S=512, D=64, G=1, causal=False),

@@ -18,9 +18,11 @@ import functools
 import jax
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import paged_attention as _pa
 from repro.kernels import registry as _reg
 from repro.kernels import rglru as _rg
 from repro.kernels import ssd as _sd
+from repro.kernels.ref import paged_attention_ref
 from repro.models.attention import flash_attention_xla
 from repro.models.rglru import rglru_scan
 from repro.models.ssm import ssd_chunked
@@ -29,6 +31,7 @@ from repro.models.ssm import ssd_chunked
 DEFAULT_ATTN_BLOCKS = (256, 256)
 DEFAULT_SSD_CHUNK = 256
 DEFAULT_RGLRU_BLOCK = 128
+DEFAULT_PAGED_BLOCK_K = 256
 
 
 @functools.lru_cache(maxsize=1)
@@ -81,6 +84,42 @@ def attention(q, k, v, *, causal=True, window=0, softcap=0.0,
     return _attention(q, k, v, causal=causal, window=window,
                       softcap=softcap, impl=impl, block_q=block_q,
                       block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "impl", "block_k",
+                                             "interpret"))
+def _paged_attention(q, k_pages, v_pages, tables, lengths, *, softcap, impl,
+                     block_k, interpret):
+    if impl == "pallas":
+        return _pa.paged_decode_attention(
+            q, k_pages, v_pages, tables, lengths, block_k=block_k,
+            softcap=softcap, interpret=interpret)
+    return paged_attention_ref(q, k_pages, v_pages, tables, lengths,
+                               softcap=softcap)
+
+
+def paged_attention(q, k_pages, v_pages, tables, lengths, *, softcap=0.0,
+                    impl="pallas", block_k=None, interpret=None):
+    """Decode attention straight off the paged KV pool.
+
+    q (B,H,D); k/v pages (N,ps,K,D); tables (B,P) int32; lengths (B,).
+    ``impl="pallas"`` is the TPU-target kernel (scalar-prefetched block
+    tables, no dense view); ``"xla"`` is the dense-gather reference the
+    CPU serving path uses.  ``block_k``=None resolves from the tuned
+    registry through the ``decode_attention|b=…,t=…`` bucket vocabulary
+    shared with the serving engine's decode-step batching.
+    """
+    if block_k is None:
+        T = tables.shape[1] * k_pages.shape[1]     # cache length
+        _, block_k = _reg.decode_attention_blocks(
+            q.shape[0], T, q.shape[2], q.shape[1] // k_pages.shape[2],
+            q.dtype, defaults=(1, DEFAULT_PAGED_BLOCK_K),
+            kernel="decode_attention")
+    if interpret is None:
+        interpret = default_interpret()
+    return _paged_attention(q, k_pages, v_pages, tables, lengths,
+                            softcap=softcap, impl=impl, block_k=block_k,
+                            interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "impl", "interpret"))

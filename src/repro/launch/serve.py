@@ -1,8 +1,13 @@
 """Serving driver: batched requests through the async serving engine.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
-      --requests 8 --max-new 16            # paged engine, chunked prefill
-  PYTHONPATH=src python -m repro.launch.serve --no-reduced ...  # full config
+      --requests 8 --max-new 16      # paged engine, continuous batching
+  PYTHONPATH=src python -m repro.launch.serve --no-fused ...  # legacy
+  PYTHONPATH=src python -m repro.launch.serve --no-reduced ...  # full
+
+The paged engine warms up (pre-compiles its jit traces) before serving
+so TTFT/TPOT percentiles measure steady state; compile time is printed
+separately (``--no-warmup`` to skip).
 
 Requests whose prompt + decode budget exceed ``--max-seq`` are rejected
 up front (exit code 2) — the engine never truncates silently.
@@ -41,6 +46,15 @@ def main() -> int:
                     choices=["slo", "priority", "fcfs"])
     ap.add_argument("--mode", default="auto",
                     choices=["auto", "paged", "dense"])
+    ap.add_argument("--fused", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="continuous batching: fuse prefill chunks and "
+                         "decode rows into one iteration (--no-fused "
+                         "falls back to alternating batches)")
+    ap.add_argument("--warmup", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="pre-compile the paged step's jit traces so "
+                         "reported latencies are steady-state")
     ap.add_argument("--request-timeout", type=float, default=0.0,
                     help="per-request deadline in seconds (0 = none); "
                          "timed-out requests are cancelled and reported "
@@ -62,8 +76,10 @@ def main() -> int:
     eng = AsyncServeEngine(
         cfg, params, policy, n_slots=args.slots, max_seq=args.max_seq,
         page_size=args.page_size, prefill_chunk=args.prefill_chunk,
-        sched_policy=args.sched, mode=args.mode,
+        sched_policy=args.sched, mode=args.mode, fused=args.fused,
         request_timeout_s=args.request_timeout)
+    if args.warmup and eng.mode == "paged":
+        print(f"warmup: compiled paged step in {eng.warmup():.1f}s")
 
     pending = deque(
         ServeRequest(i, list(map(int, jax.random.randint(
@@ -83,10 +99,12 @@ def main() -> int:
     rep = eng.report()
     done = sum(r.done for r in reqs)
     print(f"served {done}/{len(reqs)} requests in {dt:.1f}s "
-          f"[{rep['mode']} mode] "
+          f"[{rep['mode']} mode"
+          f"{', fused' if rep.get('fused') else ''}] "
           f"tput={rep['throughput_tok_s']:.1f} tok/s "
           f"ttft_p50={rep['ttft_s']['p50']*1e3:.0f}ms "
-          f"tpot_p50={rep['tpot_s']['p50']*1e3:.0f}ms")
+          f"tpot_p50={rep['tpot_s']['p50']*1e3:.0f}ms "
+          f"compile={rep['compile_s']:.1f}s")
     if "kv_pages" in rep:
         kv = rep["kv_pages"]
         print(f"kv pages: {kv['n_pages']}x{kv['page_size']}tok "

@@ -214,12 +214,21 @@ class ServeEngine:
 class AsyncServeEngine:
     """Production-shaped serving engine.
 
-    One ``step()`` is one engine iteration: admit what fits, run at most
-    one *batched* prefill-chunk step (``prefill_batch`` requests advance
-    ``prefill_chunk`` tokens each) and one batched decode step — chunked
-    prefill interleaves with decode at iteration granularity, so a long
-    prompt costs each decoding request one extra chunk-step of TPOT
-    instead of a full-prompt stall.
+    One ``step()`` is one engine iteration.  In the default **fused**
+    mode (true continuous batching) admission is followed by a SINGLE
+    jitted step over a mixed batch: every decode row (one token each)
+    plus prefill chunks packed up to the scheduler's ``token_budget``
+    (``RequestScheduler.iteration_plan``) — prefill never runs as a
+    separate step that stalls decode, and a long prompt trickles through
+    the budget while queued short requests keep making their TTFT
+    deadlines.  ``fused=False`` keeps the legacy two-step iteration (one
+    batched prefill-chunk step, then one batched decode step) as the
+    comparison/equivalence baseline; both orderings produce bit-identical
+    fp32 logits per request because masking is purely positional.
+
+    ``warmup()`` pre-compiles the paged step's jit traces so latency
+    percentiles measure steady state; the compile time is reported
+    separately (``report()["compile_s"]``).
 
     Execution modes:
       * ``paged``  — all-attention architectures: block tables over a
@@ -244,7 +253,8 @@ class AsyncServeEngine:
     def __init__(self, cfg: ModelConfig, params, policy: PolicyConfig, *,
                  n_slots: int = 4, max_seq: int = 512, page_size: int = 16,
                  n_pages: Optional[int] = None, prefill_chunk: int = 64,
-                 prefill_batch: int = 2, sched_policy: str = "slo",
+                 prefill_batch: int = 2, token_budget: Optional[int] = None,
+                 fused: bool = True, sched_policy: str = "slo",
                  mode: str = "auto", mesh=None, clock=None,
                  tracker=None, track_every: int = 16,
                  request_timeout_s: float = 0.0):
@@ -254,6 +264,7 @@ class AsyncServeEngine:
         self.n_slots = n_slots
         self.max_seq = max_seq
         self.prefill_chunk = prefill_chunk
+        self.fused = fused
         self.request_timeout_s = request_timeout_s
         self._draining = False
         self.clock = clock or time.monotonic
@@ -267,8 +278,10 @@ class AsyncServeEngine:
         self.sched = RequestScheduler(
             max_slots=n_slots, max_prompt=max_seq,
             prefill_chunk=prefill_chunk, prefill_batch=prefill_batch,
-            policy=sched_policy)
+            token_budget=token_budget, policy=sched_policy)
         self.stats = ServingStats()
+        self.compile_s = 0.0           # accumulated warmup() compile time
+        self._util_sum = 0.0           # sum of per-iteration utilization
         # decode-shape bucket from the tuned-config registry vocabulary:
         # jit cache keys and block lookups share it
         ctx = make_run_ctx(cfg, policy, mesh, seq_len=max_seq, decode=True,
@@ -396,7 +409,7 @@ class AsyncServeEngine:
         table_w = lm.head_table(params, self.cfg)
         logits = (h.astype(self.ctx.compute_dtype)
                   @ table_w.astype(self.ctx.compute_dtype).T)
-        return jnp.argmax(logits, -1).astype(jnp.int32), pages
+        return jnp.argmax(logits, -1).astype(jnp.int32), logits, pages
 
     def _table_width(self, reqs: List[ServeRequest]) -> int:
         """Bucketed block-table width for this batch (shared jit key)."""
@@ -406,6 +419,8 @@ class AsyncServeEngine:
 
     def _run_paged(self, reqs: List[ServeRequest], toks, positions, valid,
                    last_idx):
+        """Returns (next tokens, last-position logits) for the live rows
+        (padding rows stripped)."""
         P = self._table_width(reqs)
         B = len(reqs)
         Bpad = min(bucket_pow2(B, floor=1), self.n_slots)
@@ -420,10 +435,10 @@ class AsyncServeEngine:
             valid = jnp.concatenate(
                 [valid, jnp.zeros((pad, valid.shape[1]), bool)])
             last_idx = jnp.concatenate([last_idx, zcol[:, 0]])
-        nxt, self.pool.pages = self._paged_step(
+        nxt, logits, self.pool.pages = self._paged_step(
             self.params, self.pool.pages, tables, toks, positions, valid,
             last_idx)
-        return nxt
+        return nxt, logits[:B]
 
     def _paged_prefill_chunks(self, now: float) -> int:
         work = self.sched.prefill_work()
@@ -439,9 +454,11 @@ class AsyncServeEngine:
             poss.append(list(range(r.prefilled, r.prefilled + C)))
             vals.append([i < n for i in range(C)])
             last.append(n - 1)
-        nxt = self._run_paged(
+        nxt, _ = self._run_paged(
             work, jnp.asarray(toks, jnp.int32), jnp.asarray(poss, jnp.int32),
             jnp.asarray(vals, bool), jnp.asarray(last, jnp.int32))
+        jax.block_until_ready(nxt)
+        now = self.now()        # token timestamps see the finished step
         done_tokens = 0
         for i, r in enumerate(work):
             n = self.sched.chunk_for(r)
@@ -459,6 +476,90 @@ class AsyncServeEngine:
                     self._finish(r, now)
         return done_tokens
 
+    def _paged_fused(self, now: float) -> int:
+        """True continuous batching: ONE jitted step over a mixed batch
+        of decode rows (width-1) and prefill chunks, per the scheduler's
+        token-budget ``iteration_plan``.  Row width pads to 1 (pure
+        decode) or ``prefill_chunk`` (any prefill present) so the trace
+        count stays O(log n_slots) x 2; padded columns carry positions
+        AFTER the row's valid tokens (causal masking excludes them) and
+        their K/V scatter lands on the scratch page — each row's logits
+        are bit-identical to the unfused two-step path."""
+        plan = self.sched.iteration_plan()
+        if not plan:
+            return 0
+        pure_decode = all(r.state == DECODE for r, _ in plan)
+        W = 1 if pure_decode else self.prefill_chunk
+        toks, poss, vals, last = [], [], [], []
+        for r, n in plan:
+            if r.state == DECODE:
+                p0 = r.prompt_len + len(r.out) - 1
+                toks.append([r.out[-1]] + [0] * (W - 1))
+                poss.append([p0 + i for i in range(W)])
+                vals.append([True] + [False] * (W - 1))
+                last.append(0)
+            else:
+                row = [int(t) for t in r.prompt[r.prefilled:r.prefilled + n]]
+                toks.append(row + [0] * (W - n))
+                poss.append(list(range(r.prefilled, r.prefilled + W)))
+                vals.append([i < n for i in range(W)])
+                last.append(n - 1)
+        nxt, _ = self._run_paged(
+            [r for r, _ in plan], jnp.asarray(toks, jnp.int32),
+            jnp.asarray(poss, jnp.int32), jnp.asarray(vals, bool),
+            jnp.asarray(last, jnp.int32))
+        jax.block_until_ready(nxt)
+        now = self.now()        # token timestamps see the finished step
+        done_tokens = 0
+        for i, (r, n) in enumerate(plan):
+            done_tokens += n
+            if r.state == DECODE:
+                r.table.n_tokens += 1
+                if self.sched.note_token(r, int(nxt[i]), now):
+                    self._finish(r, now)
+                continue
+            r.table.n_tokens = r.prefilled + n
+            self.sched.note_prefilled(r, n, now)
+            if r.state == DECODE:
+                # prompt complete: register its (now immutable) full
+                # pages and take the chunk's last hidden as the first
+                # generated token, exactly like the unfused chunk path
+                self.pool.register_prefix(r.prompt, r.table)
+                if self.sched.note_token(r, int(nxt[i]), now):
+                    self._finish(r, now)
+        return done_tokens
+
+    def warmup(self, max_tokens: Optional[int] = None) -> float:
+        """Pre-compile the paged step's jit traces: every pow2 batch
+        bucket x row width (1 and ``prefill_chunk``) at the table width
+        serving ``max_tokens`` (default ``max_seq``).  Rows are
+        all-invalid — K/V writes land on the scratch page, so pool state,
+        request stats, and the prefix cache are untouched.  Returns the
+        compile seconds (also accumulated into ``self.compile_s`` and
+        reported separately so latency percentiles measure steady
+        state)."""
+        if self.mode != "paged":
+            return 0.0
+        t0 = time.perf_counter()
+        cap = self.pool.pages_for(self.max_seq)
+        P = min(bucket_pow2(self.pool.pages_for(max_tokens or self.max_seq),
+                            floor=1), cap)
+        sizes = sorted({min(bucket_pow2(b, floor=1), self.n_slots)
+                        for b in range(1, self.n_slots + 1)})
+        nxt = None
+        for B in sizes:
+            for W in (1, self.prefill_chunk):
+                tables = jnp.full((B, P), self.pool.trash, jnp.int32)
+                zeros = jnp.zeros((B, W), jnp.int32)
+                nxt, _, self.pool.pages = self._paged_step(
+                    self.params, self.pool.pages, tables, zeros, zeros,
+                    jnp.zeros((B, W), bool), jnp.zeros((B,), jnp.int32))
+        if nxt is not None:
+            jax.block_until_ready(nxt)
+        dt = time.perf_counter() - t0
+        self.compile_s += dt
+        return dt
+
     def _paged_decode(self, now: float) -> int:
         work = [r for r in self.sched.decode_work() if r.out]
         if not work:
@@ -468,7 +569,9 @@ class AsyncServeEngine:
             [[r.prompt_len + len(r.out) - 1] for r in work], jnp.int32)
         valid = jnp.ones((len(work), 1), bool)
         last = jnp.zeros((len(work),), jnp.int32)
-        nxt = self._run_paged(work, toks, pos, valid, last)
+        nxt, _ = self._run_paged(work, toks, pos, valid, last)
+        jax.block_until_ready(nxt)
+        now = self.now()        # token timestamps see the finished step
         for i, r in enumerate(work):
             r.table.n_tokens += 1
             if self.sched.note_token(r, int(nxt[i]), now):
@@ -528,8 +631,12 @@ class AsyncServeEngine:
         self._expire_timeouts(now)
         self.sched.admit(now, self._try_open)
         if self.mode == "paged":
-            n = self._paged_prefill_chunks(now)
-            n += self._paged_decode(now)
+            if self.fused:
+                n = self._paged_fused(now)
+            else:
+                n = self._paged_prefill_chunks(now)
+                n += self._paged_decode(now)
+            self._util_sum += self.pool.utilization()
         else:
             n = self._dense_prefill(now)
             n += self._dense_decode(now)
@@ -580,7 +687,13 @@ class AsyncServeEngine:
     def report(self) -> Dict[str, Any]:
         rep = self.stats.report()
         rep["mode"] = self.mode
+        rep["fused"] = self.fused
         rep["iterations"] = self._iters
+        rep["compile_s"] = self.compile_s
         if self.pool is not None:
-            rep["kv_pages"] = self.pool.stats()
+            kv = self.pool.stats()
+            # mean occupancy over engine iterations; "utilization" alone
+            # is the post-drain sample (always 0 once requests finished)
+            kv["mean_utilization"] = self._util_sum / max(self._iters, 1)
+            rep["kv_pages"] = kv
         return rep

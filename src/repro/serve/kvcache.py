@@ -174,6 +174,7 @@ class PagePool:
         self.miss_tokens = 0
         self.evictions = 0
         self.allocations = 0
+        self.peak_in_use = 0           # high-water mark of in_use
 
     # ------------------------------------------------------------- sizing --
     def pages_for(self, n_tokens: int) -> int:
@@ -205,10 +206,18 @@ class PagePool:
         self.evictions += 1
         return page
 
+    def _note_usage(self) -> None:
+        """Record the in-use high-water mark (the serve_bench artifact
+        samples ``stats()`` post-drain, where ``in_use`` is always 0 —
+        peak is the occupancy number that actually means something)."""
+        if self.in_use > self.peak_in_use:
+            self.peak_in_use = self.in_use
+
     def _take_page(self) -> int:
         page = self.free.popleft() if self.free else self._evict_one()
         self.ref[page] = 1
         self.allocations += 1
+        self._note_usage()
         return page
 
     def allocate(self, n: int) -> List[int]:
@@ -284,6 +293,7 @@ class PagePool:
             self.ref[page] += 1
             pages.append(page)
             prev = h
+        self._note_usage()             # retained revivals raise in_use too
         self.hit_tokens += len(pages) * ps
         self.miss_tokens += len(toks) - len(pages) * ps
         return pages, len(pages) * ps
@@ -342,6 +352,8 @@ class PagePool:
             "in_use": self.in_use,
             "retained": len(self.retained),
             "utilization": self.utilization(),
+            "peak_in_use": self.peak_in_use,
+            "peak_utilization": self.peak_in_use / max(self.n_pages, 1),
             "hit_tokens": self.hit_tokens,
             "miss_tokens": self.miss_tokens,
             "hit_rate": self.hit_rate(),

@@ -16,7 +16,14 @@ Mirrors the cluster scheduler's shapes one level down: where
     ``prefill_chunk``-token chunks; each engine iteration runs at most
     ``prefill_batch`` chunks *alongside* the decode batch, so a 32k
     prompt no longer monopolizes a step and decode TPOT stays flat
-    (Sarathi-style stall-free batching).
+    (Sarathi-style stall-free batching);
+  * **token-budget packing** — ``iteration_plan()`` builds the fused
+    iteration the continuous-batching engine runs: every decode row
+    first (one token each — decode is never starved), then prefill
+    chunks in policy order until ``token_budget`` new tokens are packed,
+    clipping the last chunk to whatever budget remains.  A long prompt
+    therefore spends many iterations trickling through the budget while
+    queued short requests keep hitting their TTFT deadlines.
 
 The scheduler owns ordering and lifecycle state; the engine owns device
 steps and the page pool.  Per-request metrics (queue wait, TTFT, TPOT,
@@ -27,7 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, List, Optional, Sequence
+from typing import Deque, List, Optional, Sequence, Tuple
 
 WAITING, PREFILL, DECODE, DONE, REJECTED, TIMED_OUT = (
     "waiting", "prefill", "decode", "done", "rejected", "timed_out")
@@ -97,13 +104,17 @@ class RequestScheduler:
 
     def __init__(self, *, max_slots: int = 8, max_prompt: int = 512,
                  prefill_chunk: int = 64, prefill_batch: int = 2,
-                 policy: str = "slo"):
+                 token_budget: Optional[int] = None, policy: str = "slo"):
         if policy not in POLICIES:
             raise ValueError(f"policy {policy!r} not in {POLICIES}")
         self.max_slots = max_slots
         self.max_prompt = max_prompt
         self.prefill_chunk = prefill_chunk
         self.prefill_batch = prefill_batch
+        # fused-iteration packing cap: decode rows (1 token each) plus
+        # prefill chunks must fit this many new tokens per iteration
+        self.token_budget = (token_budget if token_budget is not None
+                             else prefill_batch * prefill_chunk + max_slots)
         self.policy = policy
         self.waiting: Deque[ServeRequest] = deque()
         self.active: List[ServeRequest] = []      # PREFILL or DECODE
@@ -178,6 +189,30 @@ class RequestScheduler:
 
     def decode_work(self) -> List[ServeRequest]:
         return [r for r in self.active if r.state == DECODE]
+
+    def iteration_plan(self) -> List[Tuple[ServeRequest, int]]:
+        """The fused continuous-batching iteration: ``(request, n_new)``
+        rows mixing decode and prefill in ONE batch.
+
+        Decode rows always ride (one token each; a long prompt can never
+        stall them past the budget), then prefill chunks pack the
+        remaining ``token_budget`` in policy order — the last chunk is
+        clipped to the budget, so TTFT-critical short prompts behind a
+        long one still start this iteration.
+        """
+        plan: List[Tuple[ServeRequest, int]] = [
+            (r, 1) for r in self.decode_work() if r.out]
+        budget = self.token_budget - len(plan)
+        owing = [r for r in self.active
+                 if r.state == PREFILL and r.prefilled < r.prompt_len]
+        owing.sort(key=self._key)
+        for r in owing:
+            if budget <= 0:
+                break
+            n = min(self.chunk_for(r), budget)
+            plan.append((r, n))
+            budget -= n
+        return plan
 
     # ------------------------------------------------------------ lifecycle --
     def chunk_for(self, req: ServeRequest) -> int:

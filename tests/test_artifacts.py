@@ -145,8 +145,8 @@ def test_serve_bench_artifact_schema():
     with open(SERVE_BENCH) as f:
         js = json.load(f)
     assert js["bench"] == "serve_bench"
-    # engine layer: >= 2 request-arrival scenarios with latency dists
-    assert set(js["engine"]) >= {"burst", "paced"}
+    # engine layer: burst/paced plus the continuous-batching comparison
+    assert set(js["engine"]) >= {"burst", "paced", "burst_unfused"}
     for name, sc in js["engine"].items():
         for k in _SCENARIO_KEYS:
             assert k in sc, (name, k)
@@ -154,23 +154,43 @@ def test_serve_bench_artifact_schema():
             for q in _DIST_KEYS:
                 assert sc[dist][q] >= 0, (name, dist, q)
         assert sc["requests"]["completed"] == sc["requests"]["submitted"]
+        assert sc["compile_s"] >= 0           # warmup reported separately
         kv = sc["kv_pages"]
         assert 0.0 <= kv["hit_rate"] <= 1.0
         assert kv["in_use"] == 0              # all pages recycled
+        assert 0.0 < kv["peak_utilization"] <= 1.0
+        assert 0.0 < kv["mean_utilization"] <= kv["peak_utilization"]
+    assert js["engine"]["burst"]["fused"] is True
+    assert js["engine"]["burst_unfused"]["fused"] is False
+    # the headline: continuous batching takes burst SLO attainment to ~1
+    assert js["engine"]["burst"]["slo_attainment"] >= 0.9
     # cluster layer: ServeJob replicas simulated alongside training jobs
-    assert set(js["cluster"]) >= {"poisson", "burst"}
+    assert set(js["cluster"]) >= {"poisson", "burst",
+                                  "overload_fixed_2x",
+                                  "overload_autoscale_2x"}
     for name, sc in js["cluster"].items():
-        jobs = sc["jobs"]
-        assert jobs["completed"] + jobs["rejected"] == jobs["submitted"]
+        if not name.startswith("overload"):
+            jobs = sc["jobs"]
+            assert jobs["completed"] + jobs["rejected"] == jobs["submitted"]
         for svc in sc["serving"].values():
             assert svc["requests"]["stranded"] == 0
             assert svc["ttft_s"]["p99"] > 0
             assert svc["tpot_s"]["p50"] > 0
             assert svc["throughput_tok_s"] > 0
-            assert len(svc["replicas"]) >= 2
+            assert len(svc["replicas"]) >= 1
             for row in svc["replicas"].values():
                 assert "cache_hit_rate" in row
                 assert 0.0 <= row["cache_hit_rate"] <= 1.0
+    # SLO-driven autoscaling: grows under load, beats the fixed fleet
+    fixed = js["cluster"]["overload_fixed_2x"]["serving"]["chat"]
+    auto = js["cluster"]["overload_autoscale_2x"]["serving"]["chat"]
+    assert "autoscale" not in fixed
+    scale = auto["autoscale"]
+    assert scale["scale_ups"] >= 1
+    assert scale["peak_replicas"] > 1
+    assert len(scale["windows"]) >= 1
+    assert auto["slo_attainment"] >= fixed["slo_attainment"]
+    assert auto["ttft_s"]["p99"] <= fixed["ttft_s"]["p99"]
 
 
 # ---------------------------------------------------------------------------

@@ -283,6 +283,36 @@ def test_tune_case_rglru_end_to_end(tmp_path):
     assert js["version"] == 1 and case.key in js["configs"]
 
 
+def test_decode_case_candidates_are_page_multiples():
+    """Paged-decode kv superblocks gather whole pages: every candidate
+    block_k is pages-per-block x page_size, block_q pinned to the single
+    query row, ppb never exceeding the cache's page count."""
+    case = autotune.decode_case(B=4, T=128, D=32, G=2, page_size=16)
+    assert autotune.candidates_for(case) == [
+        {"block_q": 1, "block_k": 16 * ppb} for ppb in (1, 2, 4, 8)]
+    # a smaller cache clips the ppb ladder
+    small = autotune.decode_case(B=2, T=32, D=32, G=2, page_size=16)
+    assert autotune.candidates_for(small) == [
+        {"block_q": 1, "block_k": 16}, {"block_q": 1, "block_k": 32}]
+
+
+def test_tune_case_decode_end_to_end(tmp_path):
+    """The decode cell sweeps like any other kernel: tune, persist,
+    reload — and the serving-side resolver sees the winner."""
+    case = autotune.decode_case(B=2, T=64, D=32, G=2, page_size=16)
+    res = autotune.tune_case(case, iters=1)
+    assert res.entry.us > 0 and res.entry.default_us > 0
+    assert res.entry.blocks in autotune.candidates_for(case)
+    reg, _ = autotune.sweep([case], iters=1,
+                            path=str(tmp_path / "t.json"))
+    loaded = registry.Registry.load(str(tmp_path / "t.json"))
+    won = loaded.get(case.key).blocks
+    assert won == reg.get(case.key).blocks
+    registry.set_registry(loaded)
+    assert registry.decode_attention_blocks(2, 64, 32, 2, jnp.float32) \
+        == (won["block_q"], won["block_k"])
+
+
 # ---------------------------------------------------------------------------
 # measured-cost calibration changes decisions
 # ---------------------------------------------------------------------------

@@ -411,3 +411,69 @@ def test_serving_replicas_release_pool_for_training():
         assert row["state"] == DONE
     assert rep["jobs"]["stranded"] == 0      # batch jobs finished too
     assert not sim.pool.leases               # every chip returned
+
+
+# ---------------------------------------------------------------------------
+# SLO-driven replica autoscaling
+# ---------------------------------------------------------------------------
+def _overload_trace(autoscale, rate_hz=40.0, n_requests=320):
+    extra = dict(autoscale=True, autoscale_interval_s=0.5,
+                 max_replicas=8, scale_up_queue=1.0,
+                 scale_down_queue=0.25) if autoscale else {}
+    svc = ServiceConfig(name="chat", arch="llama3.2-3b",
+                        shape_name="decode_32k", n_replicas=1,
+                        chips_per_replica=64, n_requests=n_requests,
+                        arrival_rate_hz=rate_hz, arrival="poisson",
+                        prompt_len=2048, max_new=256, n_prefixes=6,
+                        prefix_len=1024, prefill_chunk=512,
+                        ttft_slo_s=2.0, tpot_slo_s=0.5, **extra)
+    return TraceConfig(n_jobs=0, failures=(), seed=3, services=(svc,))
+
+
+def test_autoscale_absorbs_overload():
+    """One replica past saturation: the fixed service blows its TTFT SLO,
+    the autoscaled one leases extra replicas and holds attainment."""
+    fixed = ClusterSimulator(_overload_trace(False)).run()["serving"]["chat"]
+    auto = ClusterSimulator(_overload_trace(True)).run()["serving"]["chat"]
+    assert "autoscale" not in fixed           # report key gated on cfg
+    scale = auto["autoscale"]
+    assert scale["scale_ups"] >= 1
+    assert scale["peak_replicas"] > 1
+    assert len(scale["windows"]) >= 1
+    assert auto["slo_attainment"] > fixed["slo_attainment"]
+    assert auto["ttft_s"]["p99"] < fixed["ttft_s"]["p99"]
+    assert auto["requests"]["completed"] == 320
+    assert auto["requests"]["stranded"] == 0
+
+
+def test_autoscale_idle_when_capacity_suffices():
+    """Below saturation the autoscaler never fires, and the serving
+    metrics are identical to the fixed service (no rng perturbation)."""
+    fixed = ClusterSimulator(
+        _overload_trace(False, rate_hz=10.0, n_requests=80)).run()
+    auto = ClusterSimulator(
+        _overload_trace(True, rate_hz=10.0, n_requests=80)).run()
+    scale = auto["serving"]["chat"].pop("autoscale")
+    assert scale["scale_ups"] == 0 and scale["scale_downs"] == 0
+    assert scale["peak_replicas"] == 1
+    assert json.dumps(fixed["serving"], sort_keys=True) == \
+        json.dumps(auto["serving"], sort_keys=True)
+
+
+def test_autoscale_trace_is_deterministic():
+    a = ClusterSimulator(_overload_trace(True)).run()
+    b = ClusterSimulator(_overload_trace(True)).run()
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+
+
+def test_autoscale_drains_and_releases_leases():
+    """Scaled-up replicas drain when pressure drops and give every chip
+    back — a scale-up is an ordinary scheduler lease, not a carve-out."""
+    sim = ClusterSimulator(_overload_trace(True))
+    rep = sim.run()
+    scale = rep["serving"]["chat"]["autoscale"]
+    assert scale["scale_downs"] >= 1
+    assert scale["final_replicas"] == 0       # trace drained fully
+    assert not sim.pool.leases
+    kinds = {e.kind for e in sim.telemetry.events}
+    assert "autoscale" in kinds

@@ -328,6 +328,143 @@ def test_legacy_dense_engine_still_serves(small_lm):
 
 
 # ---------------------------------------------------------------------------
+# fused continuous batching
+# ---------------------------------------------------------------------------
+def test_fused_engine_matches_unfused_tokens(small_lm):
+    """Continuous batching changes latency, never tokens: the fused
+    mixed-batch iteration and the legacy alternating prefill/decode
+    iterations produce identical greedy streams."""
+    cfg, params = small_lm
+
+    def serve(fused):
+        eng = _engine(cfg, params, n_slots=3, fused=fused)
+        reqs = [ServeRequest(i, _prompt(20 + i, 12 + 7 * i, cfg.vocab_size),
+                             max_new=5) for i in range(5)]
+        for r in reqs:
+            assert eng.submit(r)
+        eng.run()
+        return eng, reqs
+
+    ef, rf = serve(True)
+    eu, ru = serve(False)
+    assert ef.fused and not eu.fused
+    for a, b in zip(rf, ru):
+        assert a.done and a.out == b.out
+    assert ef.pool.in_use == 0 and eu.pool.in_use == 0
+
+
+def test_fused_mixed_batch_rows_bit_exact(small_lm):
+    """A decode row and a prefill-chunk row fused into ONE batch produce
+    logits bit-identical to the same rows run alone (same row width, same
+    table width, padding row in place) — rows in the mixed batch must not
+    interact."""
+    cfg, params = small_lm
+    C = 8
+    eng = _engine(cfg, params, n_slots=2, prefill_chunk=C)
+    r0 = ServeRequest(0, _prompt(60, 12, cfg.vocab_size), max_new=4)
+    assert eng.submit(r0)
+    eng.step()                         # chunk 1 (8 tokens)
+    eng.step()                         # chunk 2 -> DECODE, first token
+    assert r0.state == DECODE and len(r0.out) == 1
+    r1 = ServeRequest(1, _prompt(61, 20, cfg.vocab_size), max_new=4)
+    assert eng.submit(r1)
+    eng.sched.admit(eng.now(), eng._try_open)
+    plan = eng.sched.iteration_plan()
+    assert [(r.rid, n) for r, n in plan] == [(0, 1), (1, C)]
+
+    # build the fused rows exactly as _paged_fused does (W = chunk)
+    p0 = r0.prompt_len + len(r0.out) - 1
+    toks = [[r0.out[-1]] + [0] * (C - 1),
+            [int(t) for t in r1.prompt[:C]]]
+    poss = [[p0 + i for i in range(C)], list(range(C))]
+    vals = [[True] + [False] * (C - 1), [True] * C]
+    last = [0, C - 1]
+    P = eng._table_width([r0, r1])
+    tables = jnp.stack([eng.pool.padded_table(r.table, P) for r in (r0, r1)])
+    snap = jax.tree.map(jnp.array, eng.pool.pages)   # _paged_step donates
+
+    def step(tab, tk, ps, vl, lx):
+        _, logits, _ = eng._paged_step(
+            eng.params, jax.tree.map(jnp.array, snap), tab,
+            jnp.asarray(tk, jnp.int32), jnp.asarray(ps, jnp.int32),
+            jnp.asarray(vl, bool), jnp.asarray(lx, jnp.int32))
+        return np.asarray(logits)
+
+    mixed = step(tables, toks, poss, vals, last)
+    pad_t = jnp.full((P,), eng.pool.trash, jnp.int32)
+    zrow = [0] * C
+    for i in range(2):
+        alone = step(jnp.stack([tables[i], pad_t]),
+                     [toks[i], zrow], [poss[i], zrow],
+                     [vals[i], [False] * C], [last[i], 0])
+        assert np.array_equal(mixed[i], alone[0]), f"row {i} diverged"
+
+
+def test_iteration_plan_packs_token_budget():
+    """Decode rows always ride (1 token each); prefill chunks pack the
+    remaining budget in policy order, the last clipped to fit."""
+    sched = RequestScheduler(max_slots=8, max_prompt=64, prefill_chunk=8,
+                             prefill_batch=2, token_budget=7)
+    dec = [ServeRequest(i, [1] * 4, max_new=4) for i in (0, 1)]
+    pre = [ServeRequest(i, [1] * 20, max_new=4) for i in (2, 3)]
+    for r in dec:
+        r.state = DECODE
+        r.out = [1]
+    for r in pre:
+        r.state = "prefill"
+    sched.active = dec + pre
+    plan = [(r.rid, n) for r, n in sched.iteration_plan()]
+    # budget 7: 2 decode tokens, then ONE chunk clipped 8 -> 5
+    assert plan == [(0, 1), (1, 1), (2, 5)]
+    sched.token_budget = 100           # roomy: both chunks, unclipped,
+    plan = [(r.rid, n) for r, n in sched.iteration_plan()]
+    assert plan == [(0, 1), (1, 1), (2, 8), (3, 8)]
+
+
+def test_warmup_is_pure_and_reports_compile(small_lm):
+    """warmup() compiles the paged step without touching pool accounting,
+    stats, or the served tokens; compile time lands in ``compile_s`` (and
+    report()), not in the latency percentiles."""
+    cfg, params = small_lm
+    eng = _engine(cfg, params)
+    dt = eng.warmup()
+    assert dt > 0 and eng.compile_s == dt
+    kv = eng.pool.stats()
+    assert kv["in_use"] == 0 and kv["allocations"] == 0
+    assert kv["hit_tokens"] == 0 and kv["peak_in_use"] == 0
+    assert eng.stats.requests_submitted == 0
+
+    def serve(e):
+        reqs = [ServeRequest(i, _prompt(70 + i, 14, cfg.vocab_size),
+                             max_new=4) for i in range(3)]
+        for r in reqs:
+            e.submit(r)
+        e.run()
+        return [r.out for r in reqs]
+
+    cold = _engine(cfg, params)        # never warmed
+    assert serve(eng) == serve(cold)
+    assert eng.report()["compile_s"] == dt
+    assert cold.report()["compile_s"] == 0.0
+
+
+def test_report_peak_and_mean_utilization(small_lm):
+    """kv_pages reports the high-water mark and the per-iteration mean,
+    not just the post-drain sample (always 0 once requests finish)."""
+    cfg, params = small_lm
+    eng = _engine(cfg, params)
+    for i in range(4):
+        eng.submit(ServeRequest(i, _prompt(80 + i, 20, cfg.vocab_size),
+                                max_new=4))
+    eng.run()
+    kv = eng.report()["kv_pages"]
+    assert kv["in_use"] == 0                       # drained
+    assert 0 < kv["peak_utilization"] <= 1
+    assert 0 < kv["mean_utilization"] <= kv["peak_utilization"]
+    assert kv["peak_in_use"] == round(kv["peak_utilization"] * kv["n_pages"])
+
+
+# ---------------------------------------------------------------------------
 # request scheduler policies
 # ---------------------------------------------------------------------------
 def test_scheduler_slo_orders_by_deadline():
