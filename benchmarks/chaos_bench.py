@@ -11,8 +11,9 @@ Four deterministic scenarios over the cluster simulator's fault plane
     switch fabric — the composable-infra failure unit) drops mid-trace
     and is repaired a minute later.  Retry-with-backoff restarts every
     surviving job; availability stays above 0.9 and nothing strands.
-  * **graceful degradation** — the switch link class loses half its
-    bandwidth and an NVMe tranche browns out.  Nobody is evicted: jobs
+  * **graceful degradation** — the switch and DCN link classes lose
+    half their bandwidth and an NVMe tranche browns out.  Nobody is
+    evicted: jobs
     are repriced through the incremental accumulators and finish at the
     degraded rate (longer makespan, zero preemptions).
   * **serve failover** — a replica-killing device fault lands mid
@@ -50,6 +51,11 @@ DEGRADE_CFG = dataclasses.replace(
     BENCH_CFG, failures=(),
     faults=FaultPlan(faults=(
         FaultSpec(kind="link_degrade", t=60.0, link="switch", frac=0.5,
+                  t_clear=300.0),
+        # the cross-domain pricing fix moved the base trace's critical
+        # path onto the DCN; degrade it too so the scenario still
+        # stretches the makespan instead of hiding behind that job
+        FaultSpec(kind="link_degrade", t=60.0, link="dcn", frac=0.5,
                   t_clear=300.0),
         FaultSpec(kind="tranche_brownout", t=90.0, tranche="local-nvme-0",
                   frac=0.25, t_clear=240.0),

@@ -1,0 +1,184 @@
+"""Fabric-topology scaling bench: one job, three wiring models.
+
+The GigaIO-style experiment ("Scaling to 32 GPUs on a Novel Composable
+System Architecture"): the *same* training job composed at 4 / 8 / 16 /
+32 devices on a drawer-structured switch pool, priced under each
+registered fabric topology (``repro.core.fabrics``).  Every point runs
+the full control-plane stack — admission (topology-aware candidate
+ranking), clique-major placement, compose, and path-aware repricing —
+so the curve measures what the scheduler would actually deliver, not a
+formula evaluated in isolation.
+
+Per point we report the repriced step time and the strong-scaling
+efficiency ``(T(4) / T(n)) / (n / 4)``; the acceptance block pins the
+two headline facts:
+
+  * ``single_switch`` through the pluggable topology is **bit-identical**
+    to the legacy flat fabric (the ``topology=None`` pool) at every size;
+  * the oversubscribed spine shows a knee — >= 10 points of efficiency
+    lost vs ``single_switch`` at 32 devices, once 8 chips per drawer
+    share a 2-chip-wide uplink.
+
+Artifact: ``results/fabric_bench.json`` (schema in docs/artifacts.md);
+trajectory: ``results/BENCH_fabric_bench.json`` (scaling-efficiency
+metrics gated direction-aware by scripts/check_perf.py).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.cluster.scheduler import Job, Scheduler
+from repro.core.fabrics import make_topology
+from repro.core.topology import (DEFAULT_LINKS, LinkClass, Topology,
+                                 make_pool)
+
+ARCH = "qwen2-0.5b"
+SHAPE = "train_4k"
+SIZES = (4, 8, 16, 32)
+N_DRAWERS = 4
+DRAWER_CHIPS = 8                      # 4 drawers x 8 switch-attached chips
+
+TOPOLOGY_PARAMS: Dict[str, Dict[str, object]] = {
+    "single_switch": {},
+    "pcie_cascade": {"tiers": 1, "bw_taper": 0.7},
+    "oversubscribed_spine": {"oversubscription": 4.0, "leaf_ports": 8},
+}
+
+# efficiency below this marks the curve's knee (first such size)
+KNEE_EFF = 0.9
+
+
+def _measure(topology: Optional[Topology], n: int) -> Dict[str, object]:
+    """Admit + place + compose one ``n``-chip job; return its priced point."""
+    pool = make_pool(n_local=0, n_switch=N_DRAWERS * DRAWER_CHIPS,
+                     pods=N_DRAWERS, topology=topology)
+    sched = Scheduler(pool)
+    job = Job(f"fb-{n}", ARCH, SHAPE, n_chips=n, steps=1)
+    if not sched.submit(job, 0.0):
+        raise RuntimeError(f"fabric_bench job rejected: {job.why_rejected}")
+    sched.poll(0.0)
+    if job.system is None:
+        raise RuntimeError(f"fabric_bench job did not start at n={n}")
+    fab = job.system.fabric
+    return {
+        "devices": n,
+        "mesh": "x".join(str(s) for s in job.system.axis_sizes),
+        "step_s": job.plan.step_s,
+        "terms": {k: v for k, v in job.plan.terms.items()},
+        "axis_links": {a: c.value for a, c in fab.axis_links.items()},
+        "axis_hops": {a: fab.hops(a) for a in fab.axis_links},
+        "axis_bw_scale": {a: fab.axis_bw_scale.get(a, 1.0)
+                          for a in fab.axis_links},
+    }
+
+
+def _curve(topology: Optional[Topology]) -> List[Dict[str, object]]:
+    points = [_measure(topology, n) for n in SIZES]
+    t4 = points[0]["step_s"]
+    for p in points:
+        ideal = p["devices"] / SIZES[0]
+        p["efficiency"] = (t4 / p["step_s"]) / ideal
+    return points
+
+
+def _knee(points: List[Dict[str, object]]) -> Optional[int]:
+    for p in points:
+        if p["efficiency"] < KNEE_EFF:
+            return int(p["devices"])
+    return None
+
+
+def _cross_domain_never_beats_dcn() -> bool:
+    """Pairwise invariant sweep over a mixed local+switch pool: every
+    cross-domain path either stays on the composed switch fabric (which
+    physically spans drawers) or is priced no faster than the DCN."""
+    dcn_bw = DEFAULT_LINKS[LinkClass.DCN].bandwidth
+    for name, params in TOPOLOGY_PARAMS.items():
+        topo = make_topology(name, **params)
+        pool = make_pool(n_local=8, n_switch=8, pods=2, topology=topo)
+        for a in pool.devices:
+            for b in pool.devices:
+                if a.domain == b.domain:
+                    continue
+                link, _hops = pool.path(a, b)
+                if link.cls != LinkClass.SWITCH and link.bandwidth > dcn_bw:
+                    return False
+    return True
+
+
+# Perf-trajectory spec for results/BENCH_fabric_bench.json: the scaling
+# efficiencies are deterministic model outputs — gated direction-aware
+# so a model change that silently degrades (or inflates) a curve fails
+# CI; the knee contrast is recorded info-only.
+TRAJECTORY = {
+    "single_switch_eff_32": {"direction": "up"},
+    "pcie_cascade_eff_32": {"direction": "up"},
+    "oversubscribed_spine_eff_32": {"direction": "up"},
+    "single_switch_step32_s": {"direction": "down"},
+    "oversub_knee_drop_32": {"direction": "info"},
+}
+
+
+def trajectory_row(rep: Dict[str, object]) -> Dict[str, float]:
+    """Flatten one report() into the gated summary-row metrics."""
+    eff32 = {name: curve[-1]["efficiency"]
+             for name, curve in rep["curves"].items()}
+    return {
+        "single_switch_eff_32": eff32["single_switch"],
+        "pcie_cascade_eff_32": eff32["pcie_cascade"],
+        "oversubscribed_spine_eff_32": eff32["oversubscribed_spine"],
+        "single_switch_step32_s":
+            rep["curves"]["single_switch"][-1]["step_s"],
+        "oversub_knee_drop_32": rep["acceptance"]["oversub_knee_drop_32"],
+    }
+
+
+def report() -> Dict[str, object]:
+    curves = {name: _curve(make_topology(name, **params))
+              for name, params in TOPOLOGY_PARAMS.items()}
+    legacy = _curve(None)            # the pre-topology flat-fabric pool
+    eff32 = {name: c[-1]["efficiency"] for name, c in curves.items()}
+    knee_drop = eff32["single_switch"] - eff32["oversubscribed_spine"]
+    return {
+        "bench": "fabric_bench",
+        "config": {
+            "arch": ARCH, "shape": SHAPE, "sizes": list(SIZES),
+            "drawers": N_DRAWERS, "chips_per_drawer": DRAWER_CHIPS,
+            "topologies": TOPOLOGY_PARAMS, "knee_efficiency": KNEE_EFF,
+        },
+        "curves": curves,
+        "knee_devices": {name: _knee(c) for name, c in curves.items()},
+        "acceptance": {
+            "single_switch_matches_flat_model": curves["single_switch"]
+                == legacy,
+            "oversub_knee_drop_32": knee_drop,
+            "oversub_knee_ge_10pct": knee_drop >= 0.10,
+            "cross_domain_never_beats_dcn":
+                _cross_domain_never_beats_dcn(),
+        },
+    }
+
+
+def run() -> List[Tuple[str, float, str]]:
+    t0 = time.perf_counter()
+    rep = report()
+    us = (time.perf_counter() - t0) * 1e6
+    acc = rep["acceptance"]
+    rows = []
+    for name, curve in rep["curves"].items():
+        effs = " ".join(f"{p['devices']}:{p['efficiency']:.3f}"
+                        for p in curve)
+        knee = rep["knee_devices"][name]
+        rows.append((f"fabric_bench/{name}", us,
+                     f"eff {effs} knee={knee or '-'}"))
+    ok = (acc["single_switch_matches_flat_model"]
+          and acc["oversub_knee_ge_10pct"]
+          and acc["cross_domain_never_beats_dcn"])
+    rows.append(("fabric_bench/acceptance", us,
+                 f"flat_match={acc['single_switch_matches_flat_model']} "
+                 f"knee_drop={acc['oversub_knee_drop_32']:.3f} "
+                 f"no_fast_cross_domain="
+                 f"{acc['cross_domain_never_beats_dcn']} "
+                 f"{'OK' if ok else 'FAIL'}"))
+    return rows

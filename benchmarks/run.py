@@ -38,9 +38,10 @@ def main() -> int:
     args = ap.parse_args()
 
     from benchmarks import (beyond_paper, chaos_bench, cluster_sim,
-                            fig10_utilization, fig11_switch_overhead,
-                            fig12_traffic, fig15_storage, fig16_sw_opt,
-                            kernel_tune, recompose, roofline, serve_bench,
+                            fabric_bench, fig10_utilization,
+                            fig11_switch_overhead, fig12_traffic,
+                            fig15_storage, fig16_sw_opt, kernel_tune,
+                            recompose, roofline, serve_bench,
                             storage_bench, table2_models, table4_links)
     modules = {
         "table2": table2_models,
@@ -55,6 +56,7 @@ def main() -> int:
         "roofline": roofline,
         "chaos_bench": chaos_bench,
         "cluster_sim": cluster_sim,
+        "fabric_bench": fabric_bench,
         "kernel_tune": kernel_tune,
         "serve_bench": serve_bench,
         "storage_bench": storage_bench,

@@ -30,6 +30,7 @@ import glob
 import json
 import os
 import shutil
+import statistics
 import sys
 import tempfile
 
@@ -138,18 +139,26 @@ def update_baselines(results_dir: str, bench: str = "") -> int:
 
 
 def _degrade(value: float, direction: str, frac: float) -> float:
-    # move the metric the *bad* way by `frac`; a zero value cannot be
-    # degraded multiplicatively, so nudge it additively past the gate's
-    # zero-baseline rule (any worsening movement at all is flagged)
+    # move the metric the *bad* way by `frac` of its magnitude; a zero
+    # value cannot be degraded multiplicatively, so nudge it additively
+    # past the gate's zero-baseline rule (any worsening movement at all
+    # is flagged)
     if value == 0.0:
         return -1.0 if direction == "up" else 1.0
-    return value * (1.0 - frac) if direction == "up" else \
-        value * (1.0 + frac)
+    step = abs(value) * frac
+    return value - step if direction == "up" else value + step
 
 
 def demo_regression(results_dir: str, window: int, band: float,
                     frac: float = 0.20) -> int:
-    """Self-test: a synthetic ``frac`` regression must trip the gate."""
+    """Self-test: a synthetic regression must trip the gate.
+
+    Each gated metric is degraded ``frac`` beyond *its own* noise band,
+    relative to the trailing-window **median** the gate will compare
+    against — not a flat 20% off the newest row.  (A newest row sitting
+    above the median, or a metric with a wide custom ``band``, used to
+    absorb the flat nudge and falsely fail the self-test.)
+    """
     paths = _trajectories(results_dir)
     if not paths:
         print("check_perf: no trajectories — demo skipped")
@@ -170,10 +179,22 @@ def demo_regression(results_dir: str, window: int, band: float,
             if not rows or not gated:
                 continue
             last = rows[-1]
-            bad_metrics = {
-                k: _degrade(float(last["metrics"][k]),
-                            spec[k]["direction"], frac)
-                for k in gated if k in last["metrics"]}
+            # once the synthetic row is appended it becomes the newest,
+            # so the gate's baseline window is the current rows with the
+            # current newest *included*
+            base_rows = trajectory.window_rows(traj, window,
+                                               exclude_last=False)
+            bad_metrics = {}
+            for k, m in gated.items():
+                if k not in last["metrics"]:
+                    continue
+                history = [float(r["metrics"][k]) for r in base_rows
+                           if k in r.get("metrics", {})]
+                base = (statistics.median(history) if history
+                        else float(last["metrics"][k]))
+                bad_metrics[k] = _degrade(
+                    base, str(m["direction"]),
+                    float(m.get("band", band)) + frac)
             trajectory.append_summary(
                 dst, traj["bench"], spec, run_id="synthetic-regression",
                 git_sha="0000000", ts=float(last.get("ts", 0.0)) + 1.0,
@@ -186,7 +207,7 @@ def demo_regression(results_dir: str, window: int, band: float,
                 failures.append((traj["bench"], want, tripped))
             else:
                 print(f"check_perf: demo OK — {traj['bench']}: synthetic "
-                      f"{frac:.0%} regression tripped "
+                      f"band+{frac:.0%} regression tripped "
                       f"{len(tripped)} metric(s): {', '.join(tripped)}")
         if failures:
             for bench, want, got in failures:

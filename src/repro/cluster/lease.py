@@ -44,12 +44,18 @@ import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.compose import CompositionError, ComposedSystem
-from repro.core.topology import Device, DevicePool, LeaseError, LinkClass
+from repro.core.topology import (AxisPath, Device, DevicePool, LeaseError,
+                                 LinkClass)
 from repro.data.storage import StoragePool, StorageTranche
 
 # bandwidth ordering used to pick the "worst" link a span needs
 _LINK_RANK = {LinkClass.LOCAL: 0, LinkClass.SWITCH: 1, LinkClass.HOST: 2,
               LinkClass.DCN: 3}
+
+# worst-first ordering over resolved paths: link class, then extra hops,
+# then deeper bandwidth derate (all equal under the flat topology, so the
+# class alone decides — the legacy rule)
+_PATH_RANK = (lambda p: (_LINK_RANK[p.link], p.hops, -p.bw_scale))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,10 +67,72 @@ class PlacementPlan:
     n_domains: int
     fabrics: Tuple[LinkClass, ...]        # distinct device fabrics used
     note: str = ""
+    # hop counts / bandwidth derates the pool topology adds per axis
+    axis_paths: Dict[str, AxisPath] = dataclasses.field(default_factory=dict)
 
     @property
     def label(self) -> str:
         return "+".join(sorted(f.value for f in set(self.fabrics)))
+
+
+def _span_link(pool: DevicePool, c: Sequence[Device]) -> LinkClass:
+    """Worst link a set of devices needs to talk (Table IV semantics):
+    one clique -> its own fabric; mixed fabrics -> host root complex;
+    same fabric across domains -> the composable switch spans drawers,
+    but local ICI does not, so cross-domain LOCAL rides the DCN.  Mixed
+    fabrics *across* domains traverse the host complex and the pod
+    network in series: priced at the slower of the two, so a cross-pod
+    span never beats the DCN."""
+    fabrics = {x.fabric for x in c}
+    cross_domain = len({x.domain for x in c}) > 1
+    if len(fabrics) > 1:
+        if cross_domain:
+            return min((LinkClass.HOST, LinkClass.DCN),
+                       key=lambda k: pool.links[k].bandwidth)
+        return LinkClass.HOST
+    f = next(iter(fabrics))
+    if not cross_domain:
+        return f
+    return f if f == LinkClass.SWITCH else LinkClass.DCN
+
+
+def _span_path(pool: DevicePool, c: Sequence[Device]) -> AxisPath:
+    """``_span_link`` plus the hop count and bandwidth derate the pool's
+    topology assigns that span.  ``flows`` is the worst per-drawer
+    concurrency: every chip of the span's densest domain drives its
+    cross-drawer link at once during a collective."""
+    cls = _span_link(pool, c)
+    doms = [x.domain for x in c]
+    span = max(doms) - min(doms)
+    flows = max(doms.count(d) for d in set(doms)) if span else 1
+    topo = pool.topo
+    return AxisPath(cls, topo.hops(cls, span),
+                    topo.bw_scale(cls, span, flows))
+
+
+def derive_axis_paths(pool: DevicePool, uids: Sequence[int], tp: int
+                      ) -> Dict[str, AxisPath]:
+    """Resolved path per mesh axis implied by an *actual* device
+    selection: the link class (exactly ``derive_axis_links``) plus the
+    hop count and bandwidth derate the pool's topology adds."""
+    dev = {d.uid: d for d in pool.devices}
+    chosen = [dev[u] for u in uids]
+    chunks = [chosen[i:i + tp] for i in range(0, len(chosen), tp)]
+    model = max((_span_path(pool, c) for c in chunks), key=_PATH_RANK)
+    data = model if len(chunks) == 1 else _span_path(pool, chosen)
+    return {"data": data, "model": model}
+
+
+def path_maps(paths: Dict[str, AxisPath]
+              ) -> Tuple[Dict[str, LinkClass], Dict[str, int],
+                         Dict[str, float]]:
+    """``(axis_links, axis_hops, axis_bw_scale)`` for ``FabricSpec``.
+    Default entries (1 hop, full speed) are elided so a flat topology
+    builds the exact legacy spec."""
+    links = {a: p.link for a, p in paths.items()}
+    hops = {a: p.hops for a, p in paths.items() if p.hops != 1}
+    scale = {a: p.bw_scale for a, p in paths.items() if p.bw_scale != 1.0}
+    return links, hops, scale
 
 
 def derive_axis_links(pool: DevicePool, uids: Sequence[int], tp: int
@@ -76,27 +144,8 @@ def derive_axis_links(pool: DevicePool, uids: Sequence[int], tp: int
     a placement and after an elastic recompose, whose spare devices may
     sit on a different fabric than the original claim.
     """
-    dev = {d.uid: d for d in pool.devices}
-    chosen = [dev[u] for u in uids]
-    chunks = [chosen[i:i + tp] for i in range(0, len(chosen), tp)]
-
-    def span_link(c: Sequence[Device]) -> LinkClass:
-        """Worst link a set of devices needs to talk (Table IV semantics):
-        one clique -> its own fabric; mixed fabrics -> host root complex;
-        same fabric across domains -> the composable switch spans drawers,
-        but local ICI does not, so cross-domain LOCAL rides the DCN."""
-        fabrics = {x.fabric for x in c}
-        if len(fabrics) > 1:
-            return LinkClass.HOST
-        f = next(iter(fabrics))
-        if len({x.domain for x in c}) == 1:
-            return f
-        return f if f == LinkClass.SWITCH else LinkClass.DCN
-
-    model_link = max((span_link(c) for c in chunks),
-                     key=lambda c: _LINK_RANK[c])
-    data_link = model_link if len(chunks) == 1 else span_link(chosen)
-    return {"data": data_link, "model": model_link}
+    return {a: p.link
+            for a, p in derive_axis_paths(pool, uids, tp).items()}
 
 
 def _cliques(free: Sequence[Device]) -> List[List[Device]]:
@@ -119,8 +168,12 @@ def plan_placement(pool: DevicePool, dp: int, tp: int,
     Selection is clique-major in whole tp-sized chunks: each tp-group is
     carved from a single clique while any clique has room, so the model
     axis stays on the clique's fabric; the data axis degrades to SWITCH
-    as soon as the selection spans cliques.  Raises ``CompositionError``
-    when the available pool cannot cover the request.
+    as soon as the selection spans cliques.  Under a multi-tier topology
+    the cliques after the first are re-ordered by hop distance from the
+    anchor clique's drawer, so a spanning selection prefers the nearest
+    drawers (a no-op on the flat fabric, where every cross-drawer path
+    is one hop).  Raises ``CompositionError`` when the available pool
+    cannot cover the request.
     """
     n = dp * tp
     free = pool.available()
@@ -133,6 +186,15 @@ def plan_placement(pool: DevicePool, dp: int, tp: int,
     if prefer_fabric is not None:
         groups.sort(key=lambda g: (g[0].fabric != prefer_fabric,
                                    _LINK_RANK[g[0].fabric], -len(g)))
+    if len(groups) > 1:
+        topo = pool.topo
+        anchor = groups[0][0].domain
+        groups[1:] = sorted(groups[1:], key=lambda g: (
+            (g[0].fabric != prefer_fabric) if prefer_fabric is not None
+            else False,
+            _LINK_RANK[g[0].fabric],
+            topo.hops(g[0].fabric, abs(g[0].domain - anchor)),
+            -len(g), g[0].domain))
 
     picked: List[Device] = []
     gi = 0
@@ -150,13 +212,15 @@ def plan_placement(pool: DevicePool, dp: int, tp: int,
         picked.extend(rest[:n - len(picked)])
 
     uids = tuple(d.uid for d in picked)
-    axis_links = derive_axis_links(pool, uids, tp)
+    axis_paths = derive_axis_paths(pool, uids, tp)
     domains = {d.domain for d in picked}
     fabrics = {d.fabric for d in picked}
     note = (f"{len(domains)} domain(s), "
             f"{'+'.join(sorted(f.value for f in fabrics))}")
-    return PlacementPlan(uids, axis_links, len(domains),
-                         tuple(sorted(fabrics, key=_LINK_RANK.get)), note)
+    return PlacementPlan(uids, {a: p.link for a, p in axis_paths.items()},
+                         len(domains),
+                         tuple(sorted(fabrics, key=_LINK_RANK.get)), note,
+                         axis_paths)
 
 
 # ---------------------------------------------------------------------------
@@ -195,6 +259,8 @@ class GangPlan:
     domains: Tuple[int, ...]             # one locality domain per member
     axis_links: Dict[str, LinkClass]     # pod -> DCN + worst member links
     dcn_hops: int                        # domain-id span of the gang
+    # topology-resolved path per axis (worst member path + the pod span)
+    axis_paths: Dict[str, AxisPath] = dataclasses.field(default_factory=dict)
 
     @property
     def uids(self) -> Tuple[int, ...]:
@@ -241,14 +307,19 @@ def plan_gang(pool: DevicePool, n_pods: int, dp: int, tp: int,
     for dom in chosen:
         sub = DevicePool(
             devices=[d for d in pool.devices if d.domain == dom],
-            links=pool.links, leases=pool.leases)
+            links=pool.links, leases=pool.leases, topology=pool.topology)
         members.append(plan_placement(sub, dp, tp, prefer_fabric))
-    links: Dict[str, LinkClass] = {"pod": LinkClass.DCN}
+    span = chosen[-1] - chosen[0]
+    topo = pool.topo
+    paths: Dict[str, AxisPath] = {
+        # every member's dp*tp chips cross the pod boundary at once
+        "pod": AxisPath(LinkClass.DCN, topo.hops(LinkClass.DCN, span),
+                        topo.bw_scale(LinkClass.DCN, span, dp * tp))}
     for axis in ("data", "model"):
-        links[axis] = max((m.axis_links[axis] for m in members),
-                          key=lambda c: _LINK_RANK[c])
-    return GangPlan(tuple(members), tuple(chosen), links,
-                    chosen[-1] - chosen[0])
+        paths[axis] = max((m.axis_paths[axis] for m in members),
+                          key=_PATH_RANK)
+    links = {a: p.link for a, p in paths.items()}
+    return GangPlan(tuple(members), tuple(chosen), links, span, paths)
 
 
 def plan_tranche(storage: StoragePool, *, capacity_bytes: float = 0.0,

@@ -58,9 +58,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
-from repro.cluster.lease import (GangPlan, LeaseManager, derive_axis_links,
-                                 domain_counts, hosting_domains, plan_gang,
-                                 plan_placement, plan_tranche)
+from repro.cluster.lease import (GangPlan, LeaseManager, derive_axis_paths,
+                                 domain_counts, hosting_domains, path_maps,
+                                 plan_gang, plan_placement, plan_tranche)
 from repro.cluster.telemetry import Telemetry
 from repro.configs import get_config
 from repro.configs.base import SHAPES
@@ -462,6 +462,15 @@ class Scheduler:
         cfg = get_config(job.arch)
         shape = SHAPES[job.shape_name]
         n = n_chips or job.n_chips
+        # under a multi-tier topology, admission derates the collective
+        # term for candidates that must span drawers (the flat fabric
+        # passes no hint — the legacy admission path, bit-for-bit)
+        topo_kw = {}
+        if self.pool.topo.name != "single_switch":
+            topo_kw = dict(
+                topology=self.pool.topo,
+                domain_chips=max(domain_counts(self.pool.devices).values(),
+                                 default=0))
         if job.n_pods > 1:
             # gang admission: (dp, tp) factorizations of the per-pod
             # budget, with the pod axis's collective traffic priced on
@@ -469,13 +478,14 @@ class Scheduler:
             dcn_bw = self.pool.links[LinkClass.DCN].bandwidth
             return [recommend.calibrate_candidate(
                         recommend._estimate(cfg, shape, dp, tp,
-                                            pods=job.n_pods, dcn_bw=dcn_bw),
+                                            pods=job.n_pods, dcn_bw=dcn_bw,
+                                            **topo_kw),
                         cfg, job.arch, job.shape_name, shape,
                         self.calibration)
                     for dp, tp in recommend.candidates(n // job.n_pods)]
         return [recommend.calibrate_candidate(
-                    recommend._estimate(cfg, shape, dp, tp), cfg, job.arch,
-                    job.shape_name, shape, self.calibration)
+                    recommend._estimate(cfg, shape, dp, tp, **topo_kw),
+                    cfg, job.arch, job.shape_name, shape, self.calibration)
                 for dp, tp in recommend.candidates(n)]
 
     @staticmethod
@@ -490,25 +500,46 @@ class Scheduler:
         """Best feasible (dp, tp) candidate at the given chip budget."""
         return self._best(self._candidates_for(job, n_chips))
 
+    def _with_axis_paths(self, system: ComposedSystem, tp: int
+                         ) -> ComposedSystem:
+        """Re-derive the per-axis link class, hop count and bandwidth
+        derate from the system's *actual* claim and fold them into its
+        fabric — the spare devices of an elastic recompose may sit on a
+        different fabric (or a more distant drawer) than the original
+        selection.  A no-op when nothing changed."""
+        links, hops, scale = path_maps(
+            derive_axis_paths(self.pool, system.device_uids, tp))
+        fab = system.fabric
+        if (dict(fab.axis_links) != links or dict(fab.axis_hops) != hops
+                or dict(fab.axis_bw_scale) != scale):
+            system = dataclasses.replace(
+                system, fabric=dataclasses.replace(
+                    fab, axis_links=links, axis_hops=hops,
+                    axis_bw_scale=scale))
+        return system
+
     @staticmethod
     def _repriced(plan: recommend.Candidate, system: ComposedSystem
                   ) -> recommend.Candidate:
         """Re-price the collective term on the fabric the job actually got.
 
         The admission-time estimate assumes full-speed ICI on every axis;
-        once placed, each axis's wire bytes are divided by the real link
-        bandwidth — a switch- or DCN-spanning placement runs measurably
-        slower, which is the paper's local-vs-falcon gap at cluster level.
+        once placed, each axis's wire bytes are priced on the real path —
+        derated link bandwidth plus one link latency per hop beyond the
+        first (``FabricSpec.axis_time``; exactly ``nbytes / bandwidth``
+        on the flat 1-hop fabric) — so a switch-, cascade- or
+        DCN-spanning placement runs measurably slower, which is the
+        paper's local-vs-falcon gap at cluster level.
         """
         coll = 0.0
         for axis, nbytes in plan.wire_bytes.items():
             if nbytes <= 0:
                 continue
             if axis in system.fabric.axis_links:
-                bw = system.fabric.bandwidth(axis)
+                coll += system.fabric.axis_time(axis, nbytes)
             else:
-                bw = system.fabric.slowest().bandwidth
-            coll += nbytes / bw
+                link, hops = system.fabric.slowest_path()
+                coll += nbytes / link.bandwidth + (hops - 1) * link.latency
         terms = dict(plan.terms)
         terms["collective"] = coll
         step = max(terms.get("compute", 0.0), terms.get("memory", 0.0), coll)
@@ -598,13 +629,14 @@ class Scheduler:
                 # selection (every member + the tranche) is claimed in
                 # one atomic compose() below
                 gang = plan_gang(self.pool, job.n_pods, dp, tp)
-                uids, axis_links = gang.uids, gang.axis_links
+                uids, paths = gang.uids, gang.axis_paths
                 names: Tuple[str, ...] = ("pod", "data", "model")
                 sizes: Tuple[int, ...] = (job.n_pods, dp, tp)
             else:
                 plan = plan_placement(self.pool, dp, tp)
-                uids, axis_links = plan.uids, plan.axis_links
+                uids, paths = plan.uids, plan.axis_paths
                 names, sizes = ("data", "model"), (dp, tp)
+            axis_links, axis_hops, axis_scale = path_maps(paths)
             # a composition is devices + storage: running requires an NVMe
             # tranche lease alongside the chip claim, placed local-first
             # (plan_tranche) and claimed atomically inside compose()
@@ -616,7 +648,8 @@ class Scheduler:
                 self.pool, job.name, names, sizes,
                 axis_links, uids=uids,
                 storage_pool=self.storage, tranche=tranche.name,
-                storage_capacity=self._storage_request(job))
+                storage_capacity=self._storage_request(job),
+                axis_hops=axis_hops, axis_bw_scale=axis_scale)
         except CompositionError as e:
             # capacity was checked before calling; reaching here means a
             # genuine claim conflict — count it and leave the job queued
@@ -903,14 +936,9 @@ class Scheduler:
                     continue
                 job.plan = new_plan
             # the spare devices may sit on a different fabric than the
-            # original claim: re-derive the per-axis link classes so
-            # pricing and traffic attribution follow the actual hardware
-            links = derive_axis_links(self.pool, new_sys.device_uids,
-                                      new_sys.axis_sizes[-1])
-            if dict(new_sys.fabric.axis_links) != links:
-                new_sys = dataclasses.replace(
-                    new_sys, fabric=dataclasses.replace(
-                        new_sys.fabric, axis_links=links))
+            # original claim: re-derive the per-axis paths so pricing
+            # and traffic attribution follow the actual hardware
+            new_sys = self._with_axis_paths(new_sys, new_sys.axis_sizes[-1])
             job.system = new_sys
             job.run.system = new_sys
             job.plan = self._repriced(job.plan, new_sys)
@@ -1023,11 +1051,7 @@ class Scheduler:
                                     axis_sizes=(dp, tp))
             except CompositionError:
                 continue             # recompose restored the old claim
-            links = derive_axis_links(self.pool, new_sys.device_uids, tp)
-            if dict(new_sys.fabric.axis_links) != links:
-                new_sys = dataclasses.replace(
-                    new_sys, fabric=dataclasses.replace(
-                        new_sys.fabric, axis_links=links))
+            new_sys = self._with_axis_paths(new_sys, tp)
             job.system = new_sys
             if job.run is not None:
                 elastic.regrow(job.run, new_sys, step=int(job.steps_done))
@@ -1090,11 +1114,7 @@ class Scheduler:
                                 axis_sizes=(dp // 2, tp))
         except CompositionError:
             return 0                 # recompose restored the old claim
-        links = derive_axis_links(self.pool, new_sys.device_uids, tp)
-        if dict(new_sys.fabric.axis_links) != links:
-            new_sys = dataclasses.replace(
-                new_sys, fabric=dataclasses.replace(
-                    new_sys.fabric, axis_links=links))
+        new_sys = self._with_axis_paths(new_sys, tp)
         job.system = new_sys
         if job.run is not None:
             job.run.system = new_sys

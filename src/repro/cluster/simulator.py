@@ -62,7 +62,7 @@ from repro.cluster.telemetry import ServingStats, Telemetry
 from repro.configs import get_config
 from repro.configs.base import SHAPES
 from repro.core import costmodel
-from repro.core.topology import LinkClass, make_pool
+from repro.core.topology import LinkClass, Topology, make_pool
 from repro.data.pipeline import IOWorkload
 from repro.data.storage import StoragePool, StorageTranche, make_storage_pool
 
@@ -239,6 +239,9 @@ class TraceConfig:
     # behaviorally identical to None (no events, no rng draws), so the
     # legacy determinism contract is unchanged either way
     faults: Optional[FaultPlan] = None
+    # fabric wiring model (core.fabrics.Topology): None = the flat
+    # single-switch fabric, bit-identical to every pre-topology trace
+    topology: Optional[Topology] = None
 
 
 def restore_overhead_s(job: Job,
@@ -272,7 +275,7 @@ class ClusterSimulator:
         self.cfg = cfg
         self.tracker = tracker
         self.pool = make_pool(n_local=cfg.n_local, n_switch=cfg.n_switch,
-                              pods=cfg.pods)
+                              pods=cfg.pods, topology=cfg.topology)
         self.telemetry = Telemetry(len(self.pool.devices))
         storage = (StoragePool(list(cfg.storage_tranches), self.pool.links)
                    if cfg.storage_tranches is not None
@@ -391,7 +394,10 @@ class ClusterSimulator:
 
     # ------------------------------------------------------------ accrual --
     def _job_link_rate(self, job: Job) -> Dict[LinkClass, float]:
-        """bytes/sec this job puts on each link class while stepping."""
+        """bytes/sec this job puts on each link class while stepping.
+        A payload crossing a k-hop path occupies k link segments, so
+        multi-tier axes accrue ``hops x`` the wire bytes (1x on the
+        flat fabric — the legacy accounting)."""
         rates: Dict[LinkClass, float] = {}
         if job.system is None or job.plan is None:
             return rates
@@ -400,7 +406,8 @@ class ClusterSimulator:
             if nbytes <= 0 or axis not in job.system.fabric.axis_links:
                 continue
             link = job.system.fabric.axis_links[axis]
-            rates[link] = rates.get(link, 0.0) + nbytes * per_step
+            hops = job.system.fabric.hops(axis)
+            rates[link] = rates.get(link, 0.0) + nbytes * hops * per_step
         return rates
 
     def _rate_on(self, job: Job) -> None:

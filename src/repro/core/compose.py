@@ -83,7 +83,9 @@ class ComposedSystem:
     def collective_time(self, axis: str, nbytes: float,
                         kind: str = "all-reduce") -> float:
         """Ring-collective time for ``nbytes`` (per-device payload) on
-        ``axis``. Standard ring costs on n participants."""
+        ``axis``. Standard ring costs on n participants; each of the
+        n-1 ring steps pays the axis's full hop count of link latency
+        (1 hop on the flat fabric — the legacy price)."""
         n = self.axis_size(axis)
         if n <= 1:
             return 0.0
@@ -95,7 +97,8 @@ class ComposedSystem:
             "all-to-all": (n - 1) / n,
             "collective-permute": 1.0,
         }[kind]
-        return factor * nbytes / link.bandwidth + (n - 1) * link.latency
+        return (factor * nbytes / link.bandwidth
+                + (n - 1) * self.fabric.hops(axis) * link.latency)
 
 
 # ---------------------------------------------------------------------------
@@ -112,7 +115,10 @@ def compose(pool: DevicePool, name: str,
             prefer_fabric: Optional[LinkClass] = None,
             uids: Optional[Sequence[int]] = None,
             storage_pool=None, tranche: Optional[str] = None,
-            storage_capacity: float = 0.0) -> ComposedSystem:
+            storage_capacity: float = 0.0,
+            axis_hops: Optional[Mapping[str, int]] = None,
+            axis_bw_scale: Optional[Mapping[str, float]] = None
+            ) -> ComposedSystem:
     """Claim devices from the pool and build a ComposedSystem.
 
     Devices are taken domain-major so that the *innermost* (fastest-varying)
@@ -134,6 +140,10 @@ def compose(pool: DevicePool, name: str,
     is leased under the composition's name — atomically with the device
     claim: a storage conflict rolls the device lease back — and the
     fabric's storage tier is priced from that tranche.
+
+    ``axis_hops``/``axis_bw_scale``: per-axis path resolution from the
+    pool's topology (``repro.cluster.lease.derive_axis_paths``); omitted
+    axes ride one full-speed hop, the flat-fabric default.
     """
     n = int(np.prod(list(axis_sizes)))
     free = pool.available()
@@ -176,7 +186,8 @@ def compose(pool: DevicePool, name: str,
             pool.release(claimed)        # atomic: no half-composition
             raise
         storage = storage_pool.tranches[tranche].spec()
-    fabric = FabricSpec(dict(axis_links), dict(pool.links), storage)
+    fabric = FabricSpec(dict(axis_links), dict(pool.links), storage,
+                        dict(axis_hops or {}), dict(axis_bw_scale or {}))
     return ComposedSystem(name, tuple(axis_names), tuple(axis_sizes),
                           fabric, claimed, tranche=tranche)
 

@@ -522,10 +522,12 @@ def roofline(report: CostReport, system: ComposedSystem,
     per_axis: Dict[str, float] = {}
     for axis, wire in report.per_axis_wire_bytes().items():
         if axis in system.fabric.axis_links:
-            bw = system.fabric.bandwidth(axis)
+            # hop-aware path price (== wire / bandwidth on 1-hop axes)
+            per_axis[axis] = system.fabric.axis_time(axis, wire)
         else:
-            bw = system.fabric.slowest().bandwidth
-        per_axis[axis] = wire / bw
+            link, hops = system.fabric.slowest_path()
+            per_axis[axis] = (wire / link.bandwidth
+                              + (hops - 1) * link.latency)
     collective_s = sum(per_axis.values())
     dominant = max(
         (("compute", compute_s), ("memory", memory_s),

@@ -34,7 +34,8 @@ from repro.configs import get_config
 from repro.configs.base import ModelConfig, PolicyConfig, ShapeConfig, SHAPES
 from repro.core import costmodel
 from repro.core.costmodel import CalibratedCost
-from repro.core.topology import ChipSpec, ICI_BW
+from repro.core.topology import (DEFAULT_LINKS, ChipSpec, ICI_BW, LinkClass,
+                                 Topology)
 
 
 @dataclasses.dataclass
@@ -58,7 +59,9 @@ class Candidate:
 # ---------------------------------------------------------------------------
 def _estimate(cfg: ModelConfig, shape: ShapeConfig, dp: int, tp: int,
               pods: int = 1, chip: ChipSpec = ChipSpec(),
-              dcn_bw: float = 6.25e9) -> Candidate:
+              dcn_bw: float = 6.25e9,
+              topology: Optional[Topology] = None,
+              domain_chips: int = 0) -> Candidate:
     n = pods * dp * tp
     B = shape.global_batch
     mesh_shape = (pods, dp, tp) if pods > 1 else (dp, tp)
@@ -111,6 +114,23 @@ def _estimate(cfg: ModelConfig, shape: ShapeConfig, dp: int, tp: int,
         n_red = 2 * cfg.n_layers * (3 if shape.kind == "train" else 1)
         wire_tp += n_red * 2 * (tp - 1) / tp * T_loc * cfg.d_model * 2
     coll = (wire_dp + wire_tp) / ICI_BW
+    if topology is not None and domain_chips > 0:
+        # multi-tier admission hint: a candidate whose per-pod mesh
+        # cannot fit one drawer (``domain_chips`` chips) must span the
+        # composed fabric — derate its collective term by the topology's
+        # cross-drawer bandwidth scale and charge the extra hop latency,
+        # so admission ranks drawer-sized candidates above spanning ones
+        # *before* placement.  The flat single-switch topology passes no
+        # hint (scale 1, 1 hop) and prices exactly the legacy estimate.
+        n_local = dp * tp
+        n_dom = -(-n_local // domain_chips)       # drawers spanned
+        if n_dom > 1:
+            span = n_dom - 1
+            flows = min(domain_chips, n_local)
+            scale = topology.bw_scale(LinkClass.SWITCH, span, flows)
+            hops = topology.hops(LinkClass.SWITCH, span)
+            coll = ((wire_dp + wire_tp) / (ICI_BW * max(scale, 1e-9))
+                    + (hops - 1) * DEFAULT_LINKS[LinkClass.SWITCH].latency)
     if pods > 1 and shape.kind == "train":
         pod_wire = 2 * (pods - 1) / pods * P * 2 / dp   # hierarchical
         coll += pod_wire / dcn_bw
@@ -176,21 +196,25 @@ def candidates(n_chips: int = 256, pods: int = 1
 
 def recommend(arch: str, shape_name: str, *, n_chips: int = 256,
               pods: int = 1, top: int = 3,
-              calibration: Optional[CalibratedCost] = None
-              ) -> List[Candidate]:
+              calibration: Optional[CalibratedCost] = None,
+              topology: Optional[Topology] = None,
+              domain_chips: int = 0) -> List[Candidate]:
     """Analytic ranking of compositions for one workload.
 
     When a ``calibration`` layer is supplied (or installed process-wide
     via ``set_calibration``) the analytic terms are re-priced from
     measurements before ranking — measured cells override the whole step,
-    tuned-kernel speedups scale the compute term.
+    tuned-kernel speedups scale the compute term.  ``topology`` +
+    ``domain_chips`` (chips per drawer) apply the multi-tier admission
+    derate to candidates that must span drawers.
     """
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     cal = calibration if calibration is not None else get_calibration()
     cands = [calibrate_candidate(
-                 _estimate(cfg, shape, dp, tp, pods), cfg, arch,
-                 shape_name, shape, cal)
+                 _estimate(cfg, shape, dp, tp, pods,
+                           topology=topology, domain_chips=domain_chips),
+                 cfg, arch, shape_name, shape, cal)
              for dp, tp in candidates(n_chips, pods)]
     cands.sort(key=lambda c: c.step_s)
     return cands[:top]

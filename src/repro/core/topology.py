@@ -139,6 +139,82 @@ class Device:
     chip: ChipSpec = ChipSpec()
 
 
+# ---------------------------------------------------------------------------
+# Topology: how the link classes are physically wired
+# ---------------------------------------------------------------------------
+def link_class_between(a: Device, b: Device,
+                       links: Optional[Mapping[LinkClass, LinkSpec]] = None
+                       ) -> LinkClass:
+    """Canonical Table IV link-class lookup for one device pair.
+
+    Same domain + same fabric rides the fabric itself; mixed fabrics
+    within a domain cross the host root complex (F-L).  The composable
+    switch physically spans drawers, so cross-domain SWITCH stays on the
+    switch fabric; local ICI does not span drawers, so cross-domain
+    LOCAL rides the DCN.  A pair that crosses *both* the host complex
+    and the pod boundary traverses the two paths in series and is priced
+    at the slower of HOST and DCN — cross-domain traffic that leaves the
+    composed fabric can never be priced faster than the inter-pod
+    network.  (The pre-topology lookup returned HOST for cross-domain
+    mixed-fabric pairs, pricing them ~3x faster than the DCN.)
+    """
+    tbl = links if links is not None else DEFAULT_LINKS
+    if a.domain == b.domain:
+        return a.fabric if a.fabric == b.fabric else LinkClass.HOST
+    if a.fabric != b.fabric:
+        return min((LinkClass.HOST, LinkClass.DCN),
+                   key=lambda c: tbl[c].bandwidth)
+    return a.fabric if a.fabric == LinkClass.SWITCH else LinkClass.DCN
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """How the pool's link classes are physically wired.
+
+    The base class *is* the flat ``single_switch`` fabric this model has
+    always priced: every path is one traversal of the link class the
+    Table IV lookup assigns, at that link's full bandwidth.  Subclasses
+    (``repro.core.fabrics``) override the two wiring hooks to model
+    multi-tier fabrics:
+
+      * ``hops(cls, span)``      — switch traversals for a path whose
+        endpoints are ``span`` domain ids apart (0 = same drawer);
+        pricing charges ``(hops - 1)`` *extra* hops of link latency so a
+        1-hop path is exactly the legacy cost.
+      * ``bw_scale(cls, span, flows)`` — bandwidth derate (<= 1.0) for
+        that path when ``flows`` chips in one drawer drive it
+        concurrently (oversubscribed uplinks, cascade taper).
+    """
+    name: str = "single_switch"
+
+    # ------------------------------------------------- wiring hooks ------
+    def hops(self, cls: LinkClass, span: int) -> int:
+        return 1
+
+    def bw_scale(self, cls: LinkClass, span: int, flows: int = 1) -> float:
+        return 1.0
+
+    # ---------------------------------------------- path resolution ------
+    @staticmethod
+    def effective(link: LinkSpec, scale: float) -> LinkSpec:
+        """``link`` derated to ``scale`` of its bandwidth (1.0 = as-is)."""
+        if scale >= 1.0:
+            return link
+        return dataclasses.replace(link, bandwidth=link.bandwidth * scale)
+
+    def path(self, links: Mapping[LinkClass, LinkSpec], a: Device,
+             b: Device) -> Tuple[LinkSpec, int]:
+        """Effective ``(link, hops)`` for traffic a<->b; feed the hop
+        count to ``LinkSpec.time(nbytes, hops)``."""
+        cls = link_class_between(a, b, links)
+        span = abs(a.domain - b.domain)
+        link = self.effective(links[cls], self.bw_scale(cls, span))
+        return link, self.hops(cls, span)
+
+
+SINGLE_SWITCH = Topology()
+
+
 @dataclasses.dataclass
 class DevicePool:
     """The pool of composable devices + storage (the chassis inventory).
@@ -158,6 +234,12 @@ class DevicePool:
     links: Dict[LinkClass, LinkSpec] = dataclasses.field(
         default_factory=lambda: dict(DEFAULT_LINKS))
     leases: Dict[int, str] = dataclasses.field(default_factory=dict)
+    # how the link classes are wired (None = the flat single-switch model)
+    topology: Optional[Topology] = None
+
+    @property
+    def topo(self) -> Topology:
+        return self.topology if self.topology is not None else SINGLE_SWITCH
 
     # ------------------------------------------------------------- query --
     def healthy(self) -> List[Device]:
@@ -241,42 +323,59 @@ class DevicePool:
             self.leases.pop(u, None)
 
     # ------------------------------------------------------------ fabric --
+    def path(self, a: Device, b: Device) -> Tuple[LinkSpec, int]:
+        """Effective ``(link, hops)`` for traffic a<->b under the pool's
+        topology — the hop-count-aware form of ``link_between``."""
+        return self.topo.path(self.links, a, b)
+
     def link_between(self, a: Device, b: Device) -> LinkSpec:
         """Effective link for traffic a<->b (the Table IV lookup)."""
-        if a.domain == b.domain and a.fabric == b.fabric:
-            return self.links[a.fabric]
-        if a.fabric != b.fabric:
-            # crossing fabrics goes through the host root complex (F-L)
-            return self.links[LinkClass.HOST]
-        # same fabric, different domain: pod boundary -> DCN
-        return self.links[LinkClass.DCN]
+        return self.path(a, b)[0]
+
+
+def _split_across(n: int, pods: int) -> List[int]:
+    """``n`` devices over ``pods`` domains, remainder on the leading pods
+    (so every device the caller asked for is actually built)."""
+    base, extra = divmod(n, pods)
+    return [base + (1 if p < extra else 0) for p in range(pods)]
 
 
 def make_pool(n_local: int = 256, n_switch: int = 256,
-              pods: int = 2) -> DevicePool:
+              pods: int = 2,
+              topology: Optional[Topology] = None) -> DevicePool:
     """Build the production pool: ``pods`` domains of local-fabric chips plus
     an equal tranche of switch-attached (composable) chips.
 
     The single-pod production mesh (16x16=256) draws from one local domain;
     the multi-pod mesh (2x16x16=512) spans two domains over the DCN/pod axis
-    — the TPU rendering of "host + falcon drawers".
+    — the TPU rendering of "host + falcon drawers".  Counts that do not
+    divide over ``pods`` spread the remainder across the leading pods (the
+    old build silently dropped up to ``pods - 1`` devices per fabric).
     """
     devs: List[Device] = []
     uid = itertools.count()
-    per_pod = n_local // pods
-    for p in range(pods):
-        devs += [Device(next(uid), LinkClass.LOCAL, p)
-                 for _ in range(per_pod)]
-    per_pod_sw = n_switch // pods
-    for p in range(pods):
-        devs += [Device(next(uid), LinkClass.SWITCH, p)
-                 for _ in range(per_pod_sw)]
-    return DevicePool(devs)
+    for p, cnt in enumerate(_split_across(n_local, pods)):
+        devs += [Device(next(uid), LinkClass.LOCAL, p) for _ in range(cnt)]
+    for p, cnt in enumerate(_split_across(n_switch, pods)):
+        devs += [Device(next(uid), LinkClass.SWITCH, p) for _ in range(cnt)]
+    assert len(devs) == n_local + n_switch, \
+        f"pool built {len(devs)} devices; requested {n_local + n_switch}"
+    return DevicePool(devs, topology=topology)
 
 
 # ---------------------------------------------------------------------------
 # FabricSpec: the axis -> link-class map of a composed mesh
 # ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AxisPath:
+    """Resolved path for one mesh axis: the link class it rides, the
+    switch traversals one message crosses, and the bandwidth derate the
+    pool's topology imposes on that span (1.0 = full link speed)."""
+    link: LinkClass
+    hops: int = 1
+    bw_scale: float = 1.0
+
+
 @dataclasses.dataclass(frozen=True)
 class FabricSpec:
     """Which link class each logical mesh axis rides on.
@@ -284,20 +383,40 @@ class FabricSpec:
     This is the heart of the paper's experiment: the *same* program priced
     on different fabrics.  ``axis_links["data"] = LinkClass.SWITCH`` is the
     falconGPUs configuration; ``LOCAL`` everywhere is localGPUs.
+
+    ``axis_hops``/``axis_bw_scale`` carry the pool topology's path
+    resolution (``repro.core.fabrics``): axes absent from either map ride
+    one full-speed hop, so a spec built without them prices exactly the
+    flat single-switch fabric.
     """
     axis_links: Mapping[str, LinkClass]
     links: Mapping[LinkClass, LinkSpec] = dataclasses.field(
         default_factory=lambda: dict(DEFAULT_LINKS))
     storage: StorageSpec = LOCAL_NVME
+    axis_hops: Mapping[str, int] = dataclasses.field(default_factory=dict)
+    axis_bw_scale: Mapping[str, float] = dataclasses.field(
+        default_factory=dict)
 
     def bandwidth(self, axis: str) -> float:
-        return self.links[self.axis_links[axis]].bandwidth
+        return (self.links[self.axis_links[axis]].bandwidth
+                * self.axis_bw_scale.get(axis, 1.0))
 
     def latency(self, axis: str) -> float:
         return self.links[self.axis_links[axis]].latency
 
+    def hops(self, axis: str) -> int:
+        return self.axis_hops.get(axis, 1)
+
     def link(self, axis: str) -> LinkSpec:
-        return self.links[self.axis_links[axis]]
+        return Topology.effective(self.links[self.axis_links[axis]],
+                                  self.axis_bw_scale.get(axis, 1.0))
+
+    def axis_time(self, axis: str, nbytes: float) -> float:
+        """Wire time for ``nbytes`` on ``axis``: derated bandwidth plus
+        one link latency per hop *beyond the first*, so a 1-hop
+        full-speed axis prices exactly ``nbytes / bandwidth``."""
+        return (nbytes / self.bandwidth(axis)
+                + (self.hops(axis) - 1) * self.latency(axis))
 
     def with_axis(self, axis: str, cls: LinkClass) -> "FabricSpec":
         m = dict(self.axis_links)
@@ -305,5 +424,11 @@ class FabricSpec:
         return dataclasses.replace(self, axis_links=m)
 
     def slowest(self) -> LinkSpec:
-        return min((self.links[c] for c in self.axis_links.values()),
+        return min((self.link(a) for a in self.axis_links),
                    key=lambda l: l.bandwidth)
+
+    def slowest_path(self) -> Tuple[LinkSpec, int]:
+        """Worst axis's effective ``(link, hops)`` — the conservative
+        price for traffic not attributed to a specific axis."""
+        axis = min(self.axis_links, key=lambda a: self.bandwidth(a))
+        return self.link(axis), self.hops(axis)

@@ -235,6 +235,43 @@ def test_chaos_bench_artifact_schema():
 
 
 # ---------------------------------------------------------------------------
+# fabric-topology scaling artifact (results/fabric_bench.json)
+# ---------------------------------------------------------------------------
+FABRIC_BENCH = os.path.join(RESULTS_DIR, "fabric_bench.json")
+
+
+@pytest.mark.skipif(
+    not os.path.exists(FABRIC_BENCH),
+    reason="fabric_bench artifact not generated "
+           "(run benchmarks/run.py --bench fabric_bench)")
+def test_fabric_bench_artifact_schema():
+    with open(FABRIC_BENCH) as f:
+        js = json.load(f)
+    assert js["bench"] == "fabric_bench"
+    assert set(js["curves"]) == {"single_switch", "pcie_cascade",
+                                 "oversubscribed_spine"}
+    sizes = js["config"]["sizes"]
+    for name, curve in js["curves"].items():
+        assert [p["devices"] for p in curve] == sizes, name
+        for p in curve:
+            assert p["step_s"] > 0
+            assert 0.0 < p["efficiency"] <= 1.0 + 1e-9, (name, p)
+            assert set(p["axis_links"]) == set(p["axis_hops"]) \
+                == set(p["axis_bw_scale"])
+        # efficiency at the smallest size is 1.0 by construction
+        assert curve[0]["efficiency"] == pytest.approx(1.0)
+    acc = js["acceptance"]
+    assert acc["single_switch_matches_flat_model"] is True
+    assert acc["oversub_knee_ge_10pct"] is True
+    assert acc["oversub_knee_drop_32"] >= 0.10
+    assert acc["cross_domain_never_beats_dcn"] is True
+    # the spine degrades fastest: its 32-device efficiency trails both
+    eff32 = {n: c[-1]["efficiency"] for n, c in js["curves"].items()}
+    assert eff32["oversubscribed_spine"] <= eff32["pcie_cascade"] \
+        <= eff32["single_switch"]
+
+
+# ---------------------------------------------------------------------------
 # storage benchmark artifact (results/storage_bench.json)
 # ---------------------------------------------------------------------------
 STORAGE_BENCH = os.path.join(RESULTS_DIR, "storage_bench.json")
@@ -298,7 +335,7 @@ def test_every_result_artifact_is_schema_versioned(path):
 
 @pytest.mark.parametrize("bench", ["cluster_sim", "serve_bench",
                                    "storage_bench", "kernel_tune",
-                                   "chaos_bench"])
+                                   "chaos_bench", "fabric_bench"])
 def test_bench_artifacts_record_their_run_id(bench):
     path = os.path.join(RESULTS_DIR, f"{bench}.json")
     if not os.path.exists(path):
@@ -357,7 +394,7 @@ def test_bench_trajectory_schema(path):
 
 @pytest.mark.parametrize("bench", ["cluster_sim", "serve_bench",
                                    "storage_bench", "kernel_tune",
-                                   "chaos_bench"])
+                                   "chaos_bench", "fabric_bench"])
 def test_each_shipped_bench_has_a_seeded_trajectory(bench):
     art = os.path.join(RESULTS_DIR, f"{bench}.json")
     traj = os.path.join(RESULTS_DIR, f"BENCH_{bench}.json")

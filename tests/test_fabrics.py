@@ -1,0 +1,244 @@
+"""Fabric-topology tests (always-on; seeded sweeps, no hypothesis).
+
+Covers the canonical Table IV link lookup — including the cross-domain
+mixed-fabric pricing bugfix — the pool-builder remainder bugfix, the
+three registered wiring models, and the path-resolution invariants
+documented in ``repro.core.fabrics``.  The hypothesis renderings of the
+same invariants live in tests/test_topology.py (skipped where hypothesis
+is absent); these sweeps always run.
+"""
+import dataclasses
+import random
+
+import pytest
+
+from repro.core.fabrics import (OversubscribedSpine, PCIeCascade,
+                                TOPOLOGIES, make_topology)
+from repro.core.topology import (DEFAULT_LINKS, Device, DevicePool,
+                                 LinkClass, LinkSpec, Topology,
+                                 link_class_between, make_pool)
+from repro.data.storage import make_storage_pool
+
+NBYTES = 1e9
+ALL_TOPOS = [
+    Topology(),
+    PCIeCascade(tiers=2, bw_taper=0.7),
+    OversubscribedSpine(oversubscription=4.0, leaf_ports=8),
+]
+
+
+def _dev(uid, fabric, domain):
+    return Device(uid, fabric, domain)
+
+
+def _mixed_pool(topology=None):
+    return make_pool(n_local=6, n_switch=6, pods=3, topology=topology)
+
+
+# ---------------------------------------------------------------------------
+# canonical lookup — Table IV regression matrix
+# ---------------------------------------------------------------------------
+def test_link_class_lookup_table_iv_matrix():
+    L, S = LinkClass.LOCAL, LinkClass.SWITCH
+    cases = [
+        ((L, 0), (L, 0), LinkClass.LOCAL),       # intra-drawer NVLink
+        ((S, 0), (S, 0), LinkClass.SWITCH),      # intra-drawer falcon
+        ((L, 0), (S, 0), LinkClass.HOST),        # same drawer, mixed (F-L)
+        ((S, 0), (S, 1), LinkClass.SWITCH),      # composed switch spans
+        ((L, 0), (L, 1), LinkClass.DCN),         # local ICI does not
+        ((L, 0), (S, 1), LinkClass.DCN),         # BUGFIX: host+pod in series
+        ((S, 0), (L, 1), LinkClass.DCN),         # ... symmetric
+    ]
+    for (fa, da), (fb, db), want in cases:
+        got = link_class_between(_dev(0, fa, da), _dev(1, fb, db))
+        assert got is want, f"{fa}/{da} <-> {fb}/{db}: {got} != {want}"
+
+
+def test_cross_domain_mixed_fabric_priced_at_slower_path():
+    """Regression for the link-pricing bug: a cross-domain mixed-fabric
+    pair crosses the host complex AND the pod boundary; it must be
+    priced at the slower of the two, never the faster (the old lookup
+    returned HOST, ~2.2x the DCN's bandwidth)."""
+    a, b = _dev(0, LinkClass.LOCAL, 0), _dev(1, LinkClass.SWITCH, 1)
+    assert DEFAULT_LINKS[LinkClass.DCN].bandwidth \
+        < DEFAULT_LINKS[LinkClass.HOST].bandwidth
+    assert link_class_between(a, b) is LinkClass.DCN
+    # slower-of semantics, not hardcoded DCN: with a link table whose
+    # HOST staging path is the bottleneck, the pair prices at HOST
+    slow_host = dict(DEFAULT_LINKS)
+    slow_host[LinkClass.HOST] = dataclasses.replace(
+        DEFAULT_LINKS[LinkClass.HOST], bandwidth=1e9)
+    assert link_class_between(a, b, slow_host) is LinkClass.HOST
+
+
+def test_no_cross_domain_path_beats_dcn():
+    """Acceptance invariant: across every registered topology, no
+    cross-domain pair that leaves the composed switch fabric is priced
+    above DCN bandwidth."""
+    dcn_bw = DEFAULT_LINKS[LinkClass.DCN].bandwidth
+    for topo in ALL_TOPOS:
+        pool = _mixed_pool(topo)
+        for a in pool.devices:
+            for b in pool.devices:
+                if a.domain == b.domain or a is b:
+                    continue
+                link, _ = pool.path(a, b)
+                assert link.cls is LinkClass.SWITCH \
+                    or link.bandwidth <= dcn_bw, (topo.name, a, b, link)
+
+
+# ---------------------------------------------------------------------------
+# path-resolution invariants (seeded sweeps)
+# ---------------------------------------------------------------------------
+def test_path_symmetry_all_topologies():
+    rng = random.Random(7)
+    for topo in ALL_TOPOS:
+        pool = _mixed_pool(topo)
+        for _ in range(200):
+            a, b = rng.sample(pool.devices, 2)
+            assert pool.path(a, b) == pool.path(b, a)
+
+
+def test_path_class_always_matches_canonical_lookup():
+    rng = random.Random(11)
+    for topo in ALL_TOPOS:
+        pool = _mixed_pool(topo)
+        for _ in range(200):
+            a, b = rng.sample(pool.devices, 2)
+            link, hops = pool.path(a, b)
+            assert link.cls is link_class_between(a, b, pool.links)
+            assert hops >= 1
+            assert link.bandwidth <= pool.links[link.cls].bandwidth
+
+
+def test_same_domain_never_slower_than_cross_domain():
+    """Moving one endpoint of a pair to another drawer can only add
+    cost, on every topology and fabric combination."""
+    for topo in ALL_TOPOS:
+        pool = DevicePool([], topology=topo)
+        for fa in (LinkClass.LOCAL, LinkClass.SWITCH):
+            for fb in (LinkClass.LOCAL, LinkClass.SWITCH):
+                near_l, near_h = pool.path(_dev(0, fa, 0), _dev(1, fb, 0))
+                for span in (1, 2, 3):
+                    far_l, far_h = pool.path(_dev(0, fa, 0),
+                                             _dev(1, fb, span))
+                    assert far_l.time(NBYTES, far_h) \
+                        >= near_l.time(NBYTES, near_h), \
+                        (topo.name, fa, fb, span)
+
+
+def test_single_switch_is_bit_identical_to_legacy_lookup():
+    """The pluggable default must price exactly what the pre-topology
+    pool priced: 1 hop of the canonical class at full bandwidth —
+    both through an explicit Topology() and through topology=None."""
+    rng = random.Random(3)
+    legacy = _mixed_pool(None)
+    explicit = _mixed_pool(Topology())
+    assert [d.uid for d in legacy.devices] \
+        == [d.uid for d in explicit.devices]
+    for _ in range(300):
+        a, b = rng.sample(legacy.devices, 2)
+        want = legacy.links[link_class_between(a, b, legacy.links)]
+        for pool in (legacy, explicit):
+            link, hops = pool.path(a, b)
+            assert link == want and hops == 1
+            assert link.time(NBYTES, hops) == NBYTES / want.bandwidth \
+                + want.latency
+
+
+# ---------------------------------------------------------------------------
+# wiring models
+# ---------------------------------------------------------------------------
+def test_pcie_cascade_hops_and_taper():
+    t = PCIeCascade(tiers=2, bw_taper=0.7)
+    assert t.hops(LinkClass.SWITCH, 0) == 1          # same drawer: flat
+    assert t.hops(LinkClass.SWITCH, 3) == 7          # 1 + 2 * 3 stages
+    assert t.hops(LinkClass.LOCAL, 3) == 1           # ICI never cascades
+    assert t.hops(LinkClass.DCN, 3) == 1
+    assert t.bw_scale(LinkClass.SWITCH, 0) == 1.0
+    assert t.bw_scale(LinkClass.SWITCH, 3) == pytest.approx(0.7 ** 6)
+
+
+def test_oversubscribed_spine_uplink_sharing():
+    t = OversubscribedSpine(oversubscription=4.0, leaf_ports=8)
+    assert t.hops(LinkClass.SWITCH, 1) == 3          # leaf-spine-leaf
+    assert t.hops(LinkClass.SWITCH, 0) == 1
+    # uplink = 8/4 = 2 chip-links; 1-2 flows ride free, 8 get a quarter
+    assert t.bw_scale(LinkClass.SWITCH, 1, flows=1) == 1.0
+    assert t.bw_scale(LinkClass.SWITCH, 1, flows=2) == 1.0
+    assert t.bw_scale(LinkClass.SWITCH, 1, flows=8) == pytest.approx(0.25)
+    assert t.bw_scale(LinkClass.LOCAL, 1, flows=8) == 1.0
+
+
+def test_topology_registry_and_params():
+    assert set(TOPOLOGIES) \
+        == {"single_switch", "pcie_cascade", "oversubscribed_spine"}
+    assert make_topology("single_switch").name == "single_switch"
+    assert make_topology("pcie_cascade", tiers=3).tiers == 3
+    with pytest.raises(KeyError):
+        make_topology("torus")
+
+
+def test_effective_never_raises_bandwidth():
+    base = DEFAULT_LINKS[LinkClass.SWITCH]
+    assert Topology.effective(base, 1.0) is base
+    assert Topology.effective(base, 2.0) is base     # scale caps at 1
+    half = Topology.effective(base, 0.5)
+    assert half.bandwidth == pytest.approx(base.bandwidth * 0.5)
+    assert half.latency == base.latency and half.cls is base.cls
+
+
+# ---------------------------------------------------------------------------
+# pool-builder bugfixes
+# ---------------------------------------------------------------------------
+def test_make_pool_keeps_every_device_on_remainder():
+    """Regression: non-divisible counts used to silently drop up to
+    ``pods - 1`` devices per fabric (10 local over 4 pods built 8)."""
+    pool = make_pool(n_local=10, n_switch=7, pods=4)
+    assert len(pool.devices) == 17
+    by = {}
+    for d in pool.devices:
+        by.setdefault((d.fabric, d.domain), 0)
+        by[(d.fabric, d.domain)] += 1
+    assert [by.get((LinkClass.LOCAL, p), 0) for p in range(4)] \
+        == [3, 3, 2, 2]
+    assert [by.get((LinkClass.SWITCH, p), 0) for p in range(4)] \
+        == [2, 2, 2, 1]
+    assert len({d.uid for d in pool.devices}) == 17
+
+
+def test_make_pool_divisible_layout_unchanged():
+    pool = make_pool(n_local=8, n_switch=8, pods=2)
+    assert [d.domain for d in pool.devices] == [0] * 4 + [1] * 4 \
+        + [0] * 4 + [1] * 4
+    assert [d.uid for d in pool.devices] == list(range(16))
+
+
+def test_make_storage_pool_builds_exact_counts():
+    """make_storage_pool round-robins domains and was never subject to
+    the remainder drop — pin that it builds exactly what is asked."""
+    sp = make_storage_pool(5, 3, domains=2)
+    tranches = list(sp.tranches.values())
+    assert len(tranches) == 8
+    assert sum(t.attach is LinkClass.LOCAL for t in tranches) == 5
+    assert sum(t.attach is LinkClass.SWITCH for t in tranches) == 3
+    assert {t.domain for t in tranches} == {0, 1}
+
+
+# ---------------------------------------------------------------------------
+# bench acceptance (smoke)
+# ---------------------------------------------------------------------------
+def test_fabric_bench_acceptance():
+    from benchmarks import fabric_bench
+    rep = fabric_bench.report()
+    acc = rep["acceptance"]
+    assert acc["single_switch_matches_flat_model"]
+    assert acc["oversub_knee_ge_10pct"]
+    assert acc["oversub_knee_drop_32"] >= 0.10
+    assert acc["cross_domain_never_beats_dcn"]
+    # flat fabric scales ideally on this compute-bound job; the spine's
+    # knee appears exactly at 32 devices (8 concurrent flows per drawer)
+    assert rep["knee_devices"]["single_switch"] is None
+    assert rep["knee_devices"]["oversubscribed_spine"] == 32
+    row = fabric_bench.trajectory_row(rep)
+    assert set(row) == set(fabric_bench.TRAJECTORY)

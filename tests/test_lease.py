@@ -160,10 +160,16 @@ def test_placement_mixed_fabrics_ride_host_and_switch_spans_domains():
     pool = make_pool(n_local=4, n_switch=4, pods=2)    # whole pool needed
     plan = plan_placement(pool, dp=4, tp=2)            # must mix fabrics
     assert plan.axis_links["model"] == LinkClass.SWITCH
-    assert plan.axis_links["data"] == LinkClass.HOST   # crossing fabrics
-    pool2 = make_pool(n_local=0, n_switch=16, pods=2)
-    plan2 = plan_placement(pool2, dp=4, tp=4)          # all switch-attached
-    assert plan2.axis_links["data"] == LinkClass.SWITCH
+    # the data span crosses fabrics AND domains: host complex + pod
+    # boundary in series prices at the slower (DCN) — the cross-domain
+    # pricing bugfix (it used to ride HOST, ~2.2x too fast)
+    assert plan.axis_links["data"] == LinkClass.DCN
+    pool2 = make_pool(n_local=4, n_switch=4, pods=1)   # one domain
+    plan2 = plan_placement(pool2, dp=4, tp=2)          # mixed, same drawer
+    assert plan2.axis_links["data"] == LinkClass.HOST  # crossing fabrics
+    pool3 = make_pool(n_local=0, n_switch=16, pods=2)
+    plan3 = plan_placement(pool3, dp=4, tp=4)          # all switch-attached
+    assert plan3.axis_links["data"] == LinkClass.SWITCH
 
 
 def test_placement_insufficient_pool_raises():

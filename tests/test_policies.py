@@ -195,6 +195,23 @@ def test_gang_with_oversized_member_clique_rejected_at_submit():
     assert "large enough" in job.why_rejected
 
 
+def test_gang_indivisible_chips_rejected_at_submit():
+    """A gang whose chip count does not divide over its pods can never
+    build equal member cliques; submit() must reject it with the
+    divisibility reason rather than let sizing truncate chips (10 over
+    4 pods would otherwise run as 4x2=8 chips)."""
+    pool = make_pool(n_local=64, n_switch=0, pods=4)
+    sched = Scheduler(pool)
+    job = _gang("odd", n_chips=10, n_pods=4)
+    assert not sched.submit(job, 0.0)
+    assert job.state == "rejected"
+    assert job.why_rejected == "10 chips do not divide over 4 gang pods"
+    # ... and the divisible sibling sails through the same check
+    ok = _gang("even", n_chips=16, n_pods=4)
+    assert sched.submit(ok, 0.0)
+    assert ok.state == QUEUED
+
+
 def test_no_eviction_when_head_cannot_fit_anyway():
     """Livelock regression: a head pinned by an equal-priority job must
     not trigger evictions of lower-priority work — backfill would

@@ -6,7 +6,9 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import compose, topology
-from repro.core.topology import DevicePool, LinkClass, make_pool
+from repro.core.fabrics import OversubscribedSpine, PCIeCascade
+from repro.core.topology import (Device, DevicePool, LinkClass, Topology,
+                                 link_class_between, make_pool)
 
 
 # ---------------------------------------------------------------------------
@@ -107,6 +109,77 @@ def test_multi_pod_production_system():
     assert sys_.shape == {"pod": 2, "data": 16, "model": 16}
     assert sys_.fabric.axis_links["pod"] == LinkClass.DCN
     assert sys_.axis_bandwidth("pod") < sys_.axis_bandwidth("data")
+
+
+# ---------------------------------------------------------------------------
+# fabric topologies — path-resolution properties (repro.core.fabrics)
+# ---------------------------------------------------------------------------
+_fabrics = st.sampled_from([LinkClass.LOCAL, LinkClass.SWITCH])
+_topos = st.one_of(
+    st.just(Topology()),
+    st.builds(PCIeCascade, tiers=st.integers(1, 3),
+              bw_taper=st.floats(0.5, 1.0)),
+    st.builds(OversubscribedSpine,
+              oversubscription=st.floats(1.0, 16.0),
+              leaf_ports=st.integers(1, 16)))
+_devices = st.builds(Device, uid=st.integers(0, 1000), fabric=_fabrics,
+                     domain=st.integers(0, 7))
+
+
+@given(topo=_topos, a=_devices, b=_devices)
+@settings(max_examples=200, deadline=None)
+def test_path_is_symmetric(topo, a, b):
+    pool = DevicePool([], topology=topo)
+    assert pool.path(a, b) == pool.path(b, a)
+
+
+@given(topo=_topos, a=_devices, b=_devices, span=st.integers(1, 7))
+@settings(max_examples=200, deadline=None)
+def test_cross_domain_never_faster_than_intra_domain(topo, a, b, span):
+    """Splitting a pair across drawers can only add cost — on every
+    registered topology, for every fabric combination."""
+    pool = DevicePool([], topology=topo)
+    near_a = Device(a.uid, a.fabric, 0)
+    near_b = Device(b.uid + 1, b.fabric, 0)
+    far_b = Device(b.uid + 1, b.fabric, span)
+    nl, nh = pool.path(near_a, near_b)
+    fl, fh = pool.path(near_a, far_b)
+    nbytes = 1e9
+    assert fl.time(nbytes, fh) >= nl.time(nbytes, nh)
+
+
+@given(topo=_topos, a=_devices, b=_devices)
+@settings(max_examples=200, deadline=None)
+def test_path_class_is_canonical_and_never_fast_cross_domain(topo, a, b):
+    """Topologies only add hops / derate bandwidth: the link *class* is
+    always the Table IV lookup, and cross-domain traffic off the
+    composed switch fabric is never priced above the DCN."""
+    pool = DevicePool([], topology=topo)
+    link, hops = pool.path(a, b)
+    assert link.cls is link_class_between(a, b, pool.links)
+    assert hops >= 1
+    assert link.bandwidth <= pool.links[link.cls].bandwidth
+    if a.domain != b.domain and link.cls is not LinkClass.SWITCH:
+        assert link.bandwidth <= pool.links[LinkClass.DCN].bandwidth
+
+
+@given(n_local=st.integers(0, 40), n_switch=st.integers(0, 40),
+       pods=st.integers(1, 7))
+@settings(max_examples=100, deadline=None)
+def test_single_switch_topology_is_identity(n_local, n_switch, pods):
+    """A pool wired with the explicit default topology prices every pair
+    exactly like the legacy flat pool (class lookup, 1 hop, full speed),
+    and make_pool builds every requested device on any pod count."""
+    legacy = make_pool(n_local, n_switch, pods)
+    flat = make_pool(n_local, n_switch, pods, topology=Topology())
+    assert len(legacy.devices) == n_local + n_switch
+    assert [(d.uid, d.fabric, d.domain) for d in legacy.devices] \
+        == [(d.uid, d.fabric, d.domain) for d in flat.devices]
+    for a in legacy.devices[:12]:
+        for b in legacy.devices[-12:]:
+            want = legacy.links[link_class_between(a, b, legacy.links)]
+            assert legacy.path(a, b) == (want, 1)
+            assert flat.path(a, b) == (want, 1)
 
 
 # ---------------------------------------------------------------------------

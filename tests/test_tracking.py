@@ -296,6 +296,24 @@ def test_check_perf_cli_empty_dir_passes(tmp_path):
     assert _check_perf(tmp_path).returncode == 0
 
 
+def test_check_perf_demo_survives_spiky_rows_and_wide_bands(tmp_path):
+    """Self-test regression: the synthetic degradation must beat the
+    gate's *median* baseline and each metric's *own* band.  A newest
+    row sitting above the median (kernel_tune's 6,6,7 case counts) or
+    a wide custom band (serve_bench's wall-clock throughput at 0.5)
+    used to absorb the flat 20%-off-the-last-row nudge and falsely
+    fail the demo."""
+    spec = {"n_cases": {"direction": "up"},
+            "throughput": {"direction": "up", "band": 0.5}}
+    p = tmp_path / "BENCH_toy.json"
+    for i, n in enumerate((6.0, 6.0, 7.0)):
+        _append(p, f"r{i}", float(i),
+                {"n_cases": n, "throughput": 40.0}, spec=spec)
+    out = _check_perf(tmp_path, "--demo-regression")
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "demo OK" in out.stdout and "demo FAIL" not in out.stdout
+
+
 # ---------------------------------------------------------------------------
 # producer integration: bench specs + the simulator telemetry mirror
 # ---------------------------------------------------------------------------
