@@ -1,0 +1,255 @@
+"""Recompose benchmark: live mid-job attach / detach / migrate.
+
+Four deterministic scenarios over the live recomposition plane
+(``repro.cluster.recomposer``), one artifact
+(``results/recompose_bench.json``; schema in ``docs/artifacts.md``):
+
+  * **legacy identity** — the cluster_sim base trace (``recompose=None``)
+    replayed twice must produce bit-identical reports with no
+    ``recompose`` section and no attach/detach/migrate events: the
+    plane is free when unused.
+  * **shrink-to-admit (skew)** — two wide elastic trainers flood the
+    pool; a wave of small jobs plus one medium job queues behind them.
+    The recomposer halves a donor so the queue admits immediately and
+    the projected makespan improves — both the makespan *and* the mean
+    queue wait must beat the fixed-composition baseline strictly.
+  * **attach after repair (chaos)** — a failure wave shrinks an elastic
+    trainer to half width; the legacy repair path returns the devices
+    but never re-widens the job.  The recomposer attaches the repaired
+    capacity (priced: it only fires because the projected completion
+    beats staying narrow net of the checkpoint restore), cutting the
+    makespan roughly in half.
+  * **tranche migrate** — an input-bound elastic trainer shares an NVMe
+    tranche with two co-tenants while another tranche sits idle behind
+    a finished blocker.  The recomposer re-attaches the drawer with the
+    strictly better per-lessee bandwidth and the input stalls collapse.
+
+A **determinism** check replays every recomposer-on scenario twice and
+requires bit-identical reports (the tick is rng-free).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Dict, List, Tuple
+
+from benchmarks.cluster_sim import BENCH_CFG
+from repro.cluster.recomposer import RecomposeConfig
+from repro.cluster.simulator import (ClusterSimulator, JobTemplate,
+                                     TraceConfig)
+from repro.core.topology import LinkClass
+from repro.data.pipeline import IOWorkload
+from repro.data.storage import StorageTranche
+
+# Tick fast enough to catch the scripted windows; cooldown still long
+# enough that no job is re-shaped on consecutive ticks.
+RC = RecomposeConfig(interval_s=10.0, cooldown_s=20.0)
+
+# -- shrink-to-admit: two wide elastic trainers + a queued small wave -----
+_WIDE = JobTemplate("llama3.2-3b", "train_4k", 64, 100, elastic=True)
+_SMALL = JobTemplate("qwen2-0.5b", "train_4k", 16, 10)
+_MED = JobTemplate("qwen2-0.5b", "train_4k", 32, 30)
+
+SKEW_ARRIVALS: Tuple[Tuple[float, JobTemplate], ...] = (
+    ((0.0, _WIDE), (1.0, _WIDE))
+    + tuple((40.0 + i, _SMALL) for i in range(8))
+    + ((60.0, _MED),))
+
+SKEW_CFG = TraceConfig(n_jobs=0, n_local=64, n_switch=64, pods=2,
+                       failures=(), arrivals=SKEW_ARRIVALS)
+
+# -- attach after repair: failure wave shrinks, legacy repair idles -------
+# The pool gives one 64-chip local domain (n_local=128, pods=2), so the
+# re-widened mesh is as fast as the admission-time one; the failure wave
+# is large enough that the trainer cannot re-fit at full width and
+# shrinks in place instead of restarting.
+_CHAOS_JOB = JobTemplate("llama3.2-3b", "train_4k", 64, 200, elastic=True)
+
+CHAOS_CFG = TraceConfig(n_jobs=0, n_local=128, n_switch=16, pods=2,
+                        failures=((30.0, 85),), repair_after_s=60.0,
+                        arrivals=((1.0, _CHAOS_JOB),))
+
+# -- tranche migrate: contended drawer vs an idle one ---------------------
+def _io(name: str, dataset_tb: float, batch: int = 2048) -> IOWorkload:
+    return IOWorkload(name, 1e6, 0.0, batch, int(dataset_tb * 1e6))
+
+# nvme-0 is sized so the blocker's dataset fills it: every later job
+# lands on nvme-1 at admission, and only the blocker's completion frees
+# the idle drawer the recomposer can migrate onto.
+_BLOCKER = JobTemplate("qwen2-0.5b", "train_4k", 16, 40,
+                       io=_io("blocker", 1.0))
+_IO_ELASTIC = JobTemplate("qwen2-0.5b", "train_4k", 16, 400, elastic=True,
+                          io=_io("elastic", 0.5))
+_IO_SMALL = JobTemplate("qwen2-0.5b", "train_4k", 16, 150,
+                        io=_io("small", 0.3))
+
+MIGRATE_CFG = TraceConfig(
+    n_jobs=0, n_local=64, n_switch=64, pods=2, failures=(),
+    storage_tranches=(
+        StorageTranche("nvme-0", capacity_bytes=1.2e12,
+                       attach=LinkClass.LOCAL, domain=0),
+        StorageTranche("nvme-1", capacity_bytes=4e12,
+                       attach=LinkClass.LOCAL, domain=0)),
+    arrivals=((0.0, _BLOCKER), (2.0, _IO_ELASTIC),
+              (3.0, _IO_SMALL), (4.0, _IO_SMALL)))
+
+
+# Perf-trajectory spec for results/BENCH_recompose_bench.json (see
+# docs/tracking.md).  All metrics come from fixed-seed deterministic
+# replays, so the gate is machine-independent.
+TRAJECTORY = {
+    "skew_makespan_s": {"direction": "down"},
+    "skew_wait_mean_s": {"direction": "down"},
+    "skew_makespan_gain_s": {"direction": "up"},
+    "skew_wait_gain_s": {"direction": "up"},
+    "chaos_makespan_gain_s": {"direction": "up"},
+    "migrate_makespan_gain_s": {"direction": "up"},
+    "recompose_actions": {"direction": "info"},
+    "legacy_identical": {"direction": "up"},
+    "deterministic": {"direction": "up"},
+}
+
+
+def trajectory_row(rep: Dict[str, object]) -> Dict[str, float]:
+    """Flatten one report() into the gated summary-row metrics."""
+    acc = rep["acceptance"]
+    sk = rep["scenarios"]["skew"]
+    return {
+        "skew_makespan_s": sk["recompose"]["makespan_s"],
+        "skew_wait_mean_s": sk["recompose"]["job_wait_mean_s"],
+        "skew_makespan_gain_s": acc["skew_makespan_gain_s"],
+        "skew_wait_gain_s": acc["skew_wait_gain_s"],
+        "chaos_makespan_gain_s": acc["chaos_makespan_gain_s"],
+        "migrate_makespan_gain_s": acc["migrate_makespan_gain_s"],
+        "recompose_actions": float(rep["actions_total"]),
+        "legacy_identical": float(acc["legacy_identical"]),
+        "deterministic": float(acc["deterministic"]),
+    }
+
+
+def _canon(rep: Dict[str, object]) -> str:
+    return json.dumps(rep, sort_keys=True, default=str)
+
+
+def _pair(cfg: TraceConfig) -> Tuple[Dict[str, object], Dict[str, object]]:
+    """One scenario replayed without and with the recomposition plane."""
+    base = ClusterSimulator(cfg).run()
+    rc = ClusterSimulator(dataclasses.replace(cfg, recompose=RC)).run()
+    return base, rc
+
+
+def _trim(rep: Dict[str, object]) -> Dict[str, object]:
+    """The fields the artifact keeps per scenario leg."""
+    out = {
+        "makespan_s": rep["makespan_s"],
+        "job_wait_mean_s": rep["job_wait_s"]["mean"],
+        "jobs": rep["jobs"],
+        "recomposition": rep["recomposition"],
+    }
+    if "recompose" in rep:
+        out["recompose"] = rep["recompose"]
+    return out
+
+
+def report() -> Dict[str, object]:
+    # legacy identity: recompose=None twice, bit-identical, no new keys
+    legacy_a = ClusterSimulator(BENCH_CFG).run()
+    legacy_b = ClusterSimulator(BENCH_CFG).run()
+    legacy_identical = (
+        _canon(legacy_a) == _canon(legacy_b)
+        and "recompose" not in legacy_a)
+
+    skew_base, skew_rc = _pair(SKEW_CFG)
+    chaos_base, chaos_rc = _pair(CHAOS_CFG)
+    mig_base, mig_rc = _pair(MIGRATE_CFG)
+
+    # determinism: every recomposer-on leg replayed bit-identically
+    deterministic = all(
+        _canon(ClusterSimulator(
+            dataclasses.replace(cfg, recompose=RC)).run()) == _canon(rc)
+        for cfg, rc in ((SKEW_CFG, skew_rc), (CHAOS_CFG, chaos_rc),
+                        (MIGRATE_CFG, mig_rc)))
+
+    scen = {
+        "skew": {"base": _trim(skew_base), "recompose": _trim(skew_rc)},
+        "chaos": {"base": _trim(chaos_base), "recompose": _trim(chaos_rc)},
+        "migrate": {"base": _trim(mig_base), "recompose": _trim(mig_rc)},
+    }
+    actions = sum(
+        leg["recompose"]["attaches"] + leg["recompose"]["detaches"]
+        + leg["recompose"]["migrations"]
+        for leg in (scen[s]["recompose"] for s in scen))
+    rep: Dict[str, object] = {
+        "bench": "recompose_bench",
+        "legacy_identical": legacy_identical,
+        "deterministic": deterministic,
+        "actions_total": actions,
+        "scenarios": scen,
+    }
+    sk_b, sk_r = scen["skew"]["base"], scen["skew"]["recompose"]
+    ch_b, ch_r = scen["chaos"]["base"], scen["chaos"]["recompose"]
+    mg_b, mg_r = scen["migrate"]["base"], scen["migrate"]["recompose"]
+    rep["acceptance"] = {
+        "legacy_identical": legacy_identical,
+        "deterministic": deterministic,
+        "skew_makespan_gain_s":
+            sk_b["makespan_s"] - sk_r["makespan_s"],
+        "skew_wait_gain_s":
+            sk_b["job_wait_mean_s"] - sk_r["job_wait_mean_s"],
+        "skew_strictly_better":
+            sk_r["makespan_s"] < sk_b["makespan_s"]
+            and sk_r["job_wait_mean_s"] < sk_b["job_wait_mean_s"],
+        "skew_detaches": sk_r["recompose"]["detaches"],
+        "chaos_makespan_gain_s":
+            ch_b["makespan_s"] - ch_r["makespan_s"],
+        "chaos_attaches": ch_r["recompose"]["attaches"],
+        "chaos_rejoins_repaired_capacity":
+            ch_r["recompose"]["attaches"] >= 1
+            and ch_r["recompose"]["devices_recomposed"] > 0
+            and ch_r["makespan_s"] < ch_b["makespan_s"],
+        "migrate_makespan_gain_s":
+            mg_b["makespan_s"] - mg_r["makespan_s"],
+        "migrate_migrations": mg_r["recompose"]["migrations"],
+        "migrate_strictly_better":
+            mg_r["recompose"]["migrations"] >= 1
+            and mg_r["makespan_s"] < mg_b["makespan_s"],
+        "no_jobs_lost": all(
+            leg["jobs"]["failed"] == 0 and leg["jobs"]["stranded"] == 0
+            for s in scen for leg in scen[s].values()),
+    }
+    return rep
+
+
+def run() -> List[Tuple[str, float, str]]:
+    t0 = time.perf_counter()
+    rep = report()
+    us = (time.perf_counter() - t0) * 1e6
+    acc = rep["acceptance"]
+    ok = (acc["legacy_identical"] and acc["deterministic"]
+          and acc["skew_strictly_better"]
+          and acc["chaos_rejoins_repaired_capacity"]
+          and acc["migrate_strictly_better"] and acc["no_jobs_lost"])
+    return [
+        ("recompose_bench/legacy", us,
+         f"recompose=None bit-identical, no new keys: "
+         f"{'OK' if acc['legacy_identical'] else 'FAIL'}"),
+        ("recompose_bench/skew", us,
+         f"makespan_gain={acc['skew_makespan_gain_s']:.1f}s "
+         f"wait_gain={acc['skew_wait_gain_s']:.1f}s "
+         f"detaches={acc['skew_detaches']} "
+         f"{'OK' if acc['skew_strictly_better'] else 'FAIL'}"),
+        ("recompose_bench/chaos", us,
+         f"makespan_gain={acc['chaos_makespan_gain_s']:.1f}s "
+         f"attaches={acc['chaos_attaches']} "
+         f"{'OK' if acc['chaos_rejoins_repaired_capacity'] else 'FAIL'}"),
+        ("recompose_bench/migrate", us,
+         f"makespan_gain={acc['migrate_makespan_gain_s']:.1f}s "
+         f"migrations={acc['migrate_migrations']} "
+         f"{'OK' if acc['migrate_strictly_better'] else 'FAIL'}"),
+        ("recompose_bench/determinism", us,
+         f"replays bit-identical: "
+         f"{'OK' if acc['deterministic'] else 'FAIL'} "
+         f"actions={rep['actions_total']} "
+         f"{'OK' if ok else 'FAIL'}"),
+    ]

@@ -41,8 +41,9 @@ def main() -> int:
                             fabric_bench, fig10_utilization,
                             fig11_switch_overhead, fig12_traffic,
                             fig15_storage, fig16_sw_opt, kernel_tune,
-                            recompose, roofline, serve_bench,
-                            storage_bench, table2_models, table4_links)
+                            recompose, recompose_bench, roofline,
+                            serve_bench, storage_bench, table2_models,
+                            table4_links)
     modules = {
         "table2": table2_models,
         "table4": table4_links,
@@ -53,6 +54,7 @@ def main() -> int:
         "fig16": fig16_sw_opt,
         "beyond": beyond_paper,
         "recompose": recompose,
+        "recompose_bench": recompose_bench,
         "roofline": roofline,
         "chaos_bench": chaos_bench,
         "cluster_sim": cluster_sim,

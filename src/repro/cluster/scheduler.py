@@ -131,6 +131,10 @@ class Job:
     fault_t: float = -1.0            # injection time of the pending fault
     #                                  (-1 = none); cleared at restart when
     #                                  the recovery-time sample is taken
+    # live recomposition (cluster.recomposer) opt-in: only elastic jobs
+    # may be attach-widened, shrunk-to-admit, or tranche-migrated
+    # mid-run; the default keeps every legacy job frozen at admission
+    elastic: bool = False
 
     @property
     def kind(self) -> str:
@@ -1069,6 +1073,161 @@ class Scheduler:
         if regrown:
             self.update_stalls()
         return regrown
+
+    # --------------------------------------------- live recomposition -----
+    def _recompose_placed(self, system: ComposedSystem, dp: int, tp: int
+                          ) -> ComposedSystem:
+        """``core.compose.recompose`` with hop-aware selection: the old
+        claim is released into the candidate set and the new mesh is
+        chosen by ``plan_placement``'s clique-major, hop-sorted rule —
+        so a live attach never picks a far drawer over an idle
+        same-domain chip the way the default domain-major re-lease can.
+        Atomic like ``acquire_gang``: any failure restores the old
+        claim exactly and re-raises ``CompositionError``."""
+        old = [u for u in system.device_uids
+               if self.pool.leases.get(u) == system.name]
+        self.pool.release(old)
+        try:
+            plan = plan_placement(self.pool, dp, tp)
+            links, hops, scale = path_maps(plan.axis_paths)
+            return compose(self.pool, system.name, system.axis_names,
+                           (dp, tp), links, system.fabric.storage,
+                           uids=plan.uids, tranche=system.tranche,
+                           axis_hops=hops, axis_bw_scale=scale)
+        except CompositionError:
+            present = {d.uid for d in self.pool.devices}
+            self.pool.lease([u for u in old if u in present], system.name)
+            raise
+
+    def attach_job(self, job: Job, now: float) -> bool:
+        """Live-attach idle devices to one running elastic job below its
+        submitted width — ``regrow_shrunk`` generalized beyond fault
+        repair (the Recomposer's widen action), with the replacement
+        mesh selected hop-aware (``_recompose_placed``).  Returns True
+        iff the job was widened; the caller drains ``policy_victims``
+        to re-price its traffic rates and completion event."""
+        if job.n_pods > 1 or job.system is None:
+            return False
+        if job.system.n_devices >= job.n_chips:
+            return False
+        if (len(self.pool.available())
+                < job.n_chips - job.system.n_devices):
+            return False
+        plan = self.plan_job(job)            # at the original budget
+        if plan is None:
+            return False
+        dp, tp = plan.shape[-2], plan.shape[-1]
+        if self.sync_progress is not None:
+            self.sync_progress(job, now)
+        self._accrue_usage(now)
+        old_shape = job.system.axis_sizes
+        old_n = job.system.n_devices
+        try:
+            new_sys = self._recompose_placed(job.system, dp, tp)
+        except CompositionError:
+            return False             # old claim restored; nothing changed
+        new_sys = self._with_axis_paths(new_sys, tp)
+        job.system = new_sys
+        if job.run is not None:
+            elastic.regrow(job.run, new_sys, step=int(job.steps_done))
+        job.plan = self._repriced(plan, new_sys)
+        self.manager.forget(job.name)
+        self.manager.adopt(new_sys, now)
+        job.steps_done = float(int(job.steps_done))
+        job.recompositions += 1
+        job.epoch += 1               # invalidates scheduled completions
+        self.telemetry.attaches += 1
+        self.telemetry.devices_recomposed += new_sys.n_devices - old_n
+        self.telemetry.log(now, "attach", job.name,
+                           f"{old_shape}->{new_sys.axis_sizes} "
+                           f"(+{new_sys.n_devices - old_n} devices)")
+        self.policy_victims.append(job)
+        self.update_stalls()
+        return True
+
+    def detach_job(self, job: Job, now: float) -> int:
+        """Live-detach half a running elastic job's data axis so queued
+        work can admit sooner (the Recomposer's shrink-to-admit action).
+        Same mechanics as ``preempt_to_shrink`` but attributed to the
+        recomposition plane; returns the devices freed (0 when the job
+        cannot shrink)."""
+        if job.n_pods > 1 or job.system is None:
+            return 0
+        dp, tp = job.dp_tp
+        if dp < 2:
+            return 0
+        cfg = get_config(job.arch)
+        new_plan = recommend.calibrate_candidate(
+            recommend._estimate(cfg, SHAPES[job.shape_name], dp // 2, tp),
+            cfg, job.arch, job.shape_name, SHAPES[job.shape_name],
+            self.calibration)
+        if not new_plan.feasible:
+            return 0
+        if self.sync_progress is not None:
+            self.sync_progress(job, now)
+        self._accrue_usage(now)
+        old_n = job.system.n_devices
+        old_shape = job.system.axis_sizes
+        try:
+            new_sys = recompose(self.pool, job.system,
+                                axis_sizes=(dp // 2, tp))
+        except CompositionError:
+            return 0                 # recompose restored the old claim
+        new_sys = self._with_axis_paths(new_sys, tp)
+        job.system = new_sys
+        if job.run is not None:
+            job.run.system = new_sys
+        job.plan = self._repriced(new_plan, new_sys)
+        self.manager.forget(job.name)
+        self.manager.adopt(new_sys, now)
+        job.steps_done = float(int(job.steps_done))
+        job.recompositions += 1
+        job.epoch += 1               # invalidates scheduled completions
+        freed = old_n - new_sys.n_devices
+        self.telemetry.detaches += 1
+        self.telemetry.devices_recomposed += freed
+        self.telemetry.log(now, "detach", job.name,
+                           f"{old_shape}->{new_sys.axis_sizes} "
+                           f"(shrink-to-admit, -{freed} devices)")
+        self.policy_victims.append(job)
+        self.update_stalls()
+        return freed
+
+    def migrate_tranche(self, job: Job, now: float, target: str) -> bool:
+        """Move a running job's storage lease to ``target`` (the
+        Recomposer's tranche-migrate action).  Attach-then-detach so a
+        conflict on the target leaves the old lease untouched (atomic);
+        the composable switch re-attaches the same drawer over a
+        different path, so no data copy is modeled — the cost (and the
+        gain) shows up as the re-derived contended stalls on both
+        tranches (``update_stalls`` -> ``stall_dirty``)."""
+        if job.system is None or job.system.tranche is None:
+            return False
+        old = job.system.tranche
+        if target == old:
+            return False
+        try:
+            self.storage.lease(target, job.name,
+                               capacity_bytes=self._storage_request(job))
+        except CompositionError:
+            return False             # target full/exclusive: no change
+        self.storage.release_tranche(job.name, old)
+        tr = self.storage.tranches[target]
+        self._accrue_usage(now)
+        job.system = dataclasses.replace(
+            job.system, tranche=target,
+            fabric=dataclasses.replace(job.system.fabric,
+                                       storage=tr.spec()))
+        if job.run is not None:
+            job.run.system = job.system
+        st = self.telemetry.tranche_stats(target, tr.attach.value)
+        st.leases_granted += 1
+        self.telemetry.migrations += 1
+        self.telemetry.log(now, "migrate", job.name,
+                           f"{old}->{target} "
+                           f"({self.storage.n_lessees(target)} lessees)")
+        self.update_stalls()
+        return True
 
     # ------------------------------------------------- policy preemption --
     def evict(self, job: Job, now: float, for_job: str = "") -> int:

@@ -56,6 +56,7 @@ from collections import deque
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.cluster.faults import FaultInjector, FaultPlan
+from repro.cluster.recomposer import Recomposer, RecomposeConfig
 from repro.cluster.scheduler import (DONE, QUEUED, REJECTED, RUNNING, Job,
                                      Scheduler, ServeJob)
 from repro.cluster.telemetry import ServingStats, Telemetry
@@ -86,6 +87,9 @@ class JobTemplate:
     priority: int = 0
     # anti-thrash eviction budget forwarded to Job.max_evictions
     max_evictions: int = 3
+    # live-recomposition opt-in forwarded to Job.elastic: the Recomposer
+    # may widen, shrink-to-admit, or tranche-migrate these jobs mid-run
+    elastic: bool = False
 
 
 # A mixed train/serve diet over small-to-mid archs: feasible on modest
@@ -242,6 +246,11 @@ class TraceConfig:
     # fabric wiring model (core.fabrics.Topology): None = the flat
     # single-switch fabric, bit-identical to every pre-topology trace
     topology: Optional[Topology] = None
+    # live recomposition plane (cluster.recomposer): None = off — no
+    # ticks, no rng draws, no report section, so every legacy trace
+    # stays bit-identical.  With a RecomposeConfig, elastic jobs are
+    # attach-widened / shrunk-to-admit / tranche-migrated on ticks.
+    recompose: Optional[RecomposeConfig] = None
 
 
 def restore_overhead_s(job: Job,
@@ -300,6 +309,12 @@ class ClusterSimulator:
         self.faults: Optional[FaultInjector] = (
             FaultInjector(self, cfg.faults) if cfg.faults is not None
             else None)
+        # live recomposition plane: only constructed when configured, so
+        # legacy traces carry zero recomposer state (and no report key)
+        self.recomposer: Optional[Recomposer] = None
+        if cfg.recompose is not None:
+            self.recomposer = Recomposer(self.scheduler, cfg.recompose)
+            self.telemetry.recompose_enabled = True
         self.draining: set = set()
         self._done_reps: Dict[str, Dict[str, object]] = {}
         self._heap: List[Tuple[float, int, str, object]] = []
@@ -335,7 +350,8 @@ class ClusterSimulator:
                       n_chips=tpl.n_chips, steps=tpl.steps, io=tpl.io,
                       n_pods=tpl.n_pods, tenant=tpl.tenant,
                       priority=tpl.priority,
-                      max_evictions=tpl.max_evictions)
+                      max_evictions=tpl.max_evictions,
+                      elastic=tpl.elastic)
             self.jobs[job.name] = job
             self._push(t_arr, "arrival", job.name)
 
@@ -386,6 +402,10 @@ class ClusterSimulator:
             if svc_cfg.autoscale and svc_cfg.autoscale_interval_s > 0:
                 self._push(svc_cfg.start_t + svc_cfg.autoscale_interval_s,
                            "autoscale", svc_cfg.name)
+        # live-recomposition ticks (rng-free; None = off, legacy-identical)
+        if (self.recomposer is not None
+                and self.cfg.recompose.interval_s > 0):
+            self._push(self.cfg.recompose.interval_s, "recompose_tick")
         # fault plane last: its (optional) MTBF schedule consumes the rng
         # only after every legacy draw, so pre-fault traces replay
         # identically with faults=None or an empty FaultPlan
@@ -552,6 +572,28 @@ class ClusterSimulator:
             self._rate_off(job.name)
             job.epoch += 1           # invalidates the stale completion
             self._schedule_completion(job, now)
+
+    # ------------------------------------------------- live recomposition --
+    def _recompose_tick(self, now: float) -> bool:
+        """Periodic (rng-free) recomposition pass: sync lazy progress so
+        the Recomposer prices exact remaining work, let it act, then
+        route the re-shaped jobs through the ordinary re-pricing paths
+        (``policy_victims`` -> restore-priced completion events,
+        ``stall_dirty`` -> contention resync).  Re-pushes itself only
+        while other events remain, so the heap always drains.  Returns
+        whether anything was re-shaped — a no-op tick must not advance
+        the simulation clock (``run`` skips its bookkeeping), or an
+        idle tail of ticks would inflate makespan past the last real
+        completion."""
+        for job in self.scheduler.running:
+            self._sync_steps(job, now)
+        changed = self.recomposer.tick(now)
+        if changed:
+            self._start_newly_scheduled(now)
+        if self._heap:
+            self._push(now + self.cfg.recompose.interval_s,
+                       "recompose_tick")
+        return bool(changed)
 
     # ------------------------------------------------------------- serving --
     def _make_replica_job(self, svc: _Service, i: int) -> ServeJob:
@@ -873,6 +915,26 @@ class ClusterSimulator:
         self._observe(0.0)
         while self._heap:
             now, _, kind, payload = heapq.heappop(self._heap)
+            if kind == "recompose_tick":
+                if not self._heap and self.scheduler.all_done():
+                    # trailing no-op tick scheduled before the trace
+                    # drained: skip it before it can extend makespan
+                    continue
+                self._accrue(now)
+                if self._recompose_tick(now):
+                    self._now = now
+                    self.scheduler.manager.check_exclusive()
+                    self._observe(now)
+                continue
+            if self.recomposer is not None and kind in ("rate", "complete"):
+                job = self.jobs[payload[0]]
+                if job.state != RUNNING or job.epoch != payload[1]:
+                    # epoch-stale no-op: with live recomposition every
+                    # attach/detach strands one of these, and letting it
+                    # advance the clock would bill the recomposed trace
+                    # for time nothing ran (legacy traces keep the old
+                    # accounting for bit-identity)
+                    continue
             self._now = now
             self._accrue(now)
             if kind == "arrival":

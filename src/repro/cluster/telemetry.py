@@ -46,7 +46,7 @@ from repro.core.topology import LinkClass
 EVENT_KINDS = ("submit", "reject", "start", "complete", "fail", "repair",
                "recompose", "preempt", "conflict", "storage", "evict",
                "shrink", "gang", "fault", "detect", "retry", "drain",
-               "autoscale")
+               "autoscale", "attach", "detach", "migrate")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -234,6 +234,17 @@ class Telemetry:
         self.recovery_s: List[float] = []        # fault -> restart samples
         self.retries_scheduled = 0      # backoff retries granted
         self.drains = 0                 # graceful drains honoured
+        # live recomposition plane (cluster.recomposer): widen / shrink /
+        # tranche-migrate actions taken on running jobs, plus the device
+        # delta they moved (attached + detached device count).
+        self.attaches = 0
+        self.detaches = 0
+        self.migrations = 0
+        self.devices_recomposed = 0
+        # set by the simulator when a RecomposeConfig is active; gates the
+        # ``recompose`` report section so legacy (recompose=None) reports
+        # stay bit-identical (same pattern as the serving autoscale block)
+        self.recompose_enabled = False
         self.storage: Dict[str, StorageStats] = {}   # tranche -> stats
         # gang scheduling: one span sample per gang start (DCN hop span)
         self.gang_spans: List[int] = []
@@ -366,7 +377,7 @@ class Telemetry:
         waits = sorted(self.waits_s)
         span = max(self.span_s, 1e-12)
         spans = self.gang_spans
-        return {
+        rep: Dict[str, object] = {
             "span_s": self.span_s,
             "pool_utilization": self.pool_utilization(),
             "auu": self.auu(),
@@ -418,3 +429,11 @@ class Telemetry:
             "storage": {name: st.report()
                         for name, st in sorted(self.storage.items())},
         }
+        if self.recompose_enabled:
+            rep["recompose"] = {
+                "attaches": self.attaches,
+                "detaches": self.detaches,
+                "migrations": self.migrations,
+                "devices_recomposed": self.devices_recomposed,
+            }
+        return rep

@@ -159,6 +159,13 @@ class StoragePool:
                 freed.append(name)
         return freed
 
+    def release_tranche(self, holder: str, tranche: str) -> bool:
+        """Release ``holder``'s claim on one tranche only — a live
+        migrate detaches the old drawer while keeping the new lease it
+        just took (``release`` would drop both).  Idempotent; returns
+        whether a lease was actually dropped."""
+        return self._leases[tranche].pop(holder, None) is not None
+
     # ------------------------------------------------------------ queries --
     def n_lessees(self, tranche: str) -> int:
         return len(self._leases[tranche])

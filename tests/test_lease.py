@@ -197,6 +197,36 @@ def test_lease_manager_adopt_and_invariant():
         mgr.adopt(s1)                        # no longer claimed in the pool
 
 
+def test_attach_prefers_idle_same_domain_over_far_drawer():
+    """Live attach must re-place hop-aware: when a shrunk job's own
+    drawer has idle chips, re-widening may never straddle domains by
+    grabbing far-drawer devices (the naive uid-order regression —
+    ``attach_job`` goes through ``plan_placement`` on the pool view)."""
+    from repro.cluster.scheduler import Job, Scheduler
+
+    pool = make_pool(n_local=32, n_switch=0, pods=2)   # two 16-chip drawers
+    sched = Scheduler(pool)
+    # pin half of drawer 0 so the 16-wide job can only start in drawer 1
+    other = Job(name="other", arch="qwen2-0.5b", shape_name="train_4k",
+                n_chips=8, steps=100)
+    job = Job(name="j", arch="qwen2-0.5b", shape_name="train_4k",
+              n_chips=16, steps=100, elastic=True)
+    assert sched.submit(other, 0.0) and sched.submit(job, 0.0)
+    assert len(sched.poll(0.0)) == 2
+    domain = {d.uid: d.domain for d in pool.devices}
+    homes = {domain[u] for u in job.system.device_uids}
+    assert len(homes) == 1
+    home = homes.pop()
+    assert sched.detach_job(job, 10.0) == 8
+    # free chips now: 8 beside the job in its drawer, 8 in the far one —
+    # a uid-ordered pick would take the far (lower-uid) drawer and span
+    assert sched.attach_job(job, 20.0)
+    assert job.system.n_devices == 16
+    assert {domain[u] for u in job.system.device_uids} == {home}
+    assert sched.telemetry.attaches == sched.telemetry.detaches == 1
+    sched.manager.check_exclusive()
+
+
 def test_lease_manager_tracks_multiple_leases_per_holder():
     """adopt() + acquire() for the same holder must both stay visible
     (a job's compute claim plus its storage tranche)."""

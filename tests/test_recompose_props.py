@@ -1,0 +1,167 @@
+"""Property tests: conservation invariants under live recomposition.
+
+The Recomposer re-shapes *running* jobs on ticks — attach widens,
+detach halves, migrate swaps the storage tranche — so every lease
+bookkeeping path (device pool, tranche lessees, step accounting) is
+exercised mid-flight.  ``_check_invariants`` states the contract:
+
+  * device-lease conservation — after the trace drains, every device
+    lease belongs to a still-running (stranded) job; completed jobs
+    hold nothing;
+  * tranche-lessee conservation — each tranche's lessees are exactly
+    the live jobs attached to it, and a job holds at most one tranche;
+  * conservation — every submitted job ends in exactly one terminal
+    bucket; no negative progress; no phantom completions;
+  * determinism — the same config replays to a bit-identical report;
+  * legacy opt-out — ``recompose=None`` produces no ``recompose``
+    report section and no attach/detach/migrate events.
+
+A seeded sweep below always runs; the ``hypothesis`` fuzz on top is
+skipped when the package isn't installed (the container doesn't ship
+it), so CI environments with hypothesis get the dense search for free.
+"""
+import dataclasses
+import json
+
+import pytest
+
+from repro.cluster.recomposer import RecomposeConfig
+from repro.cluster.simulator import (ClusterSimulator, JobTemplate,
+                                     TraceConfig)
+
+_ELASTIC_TEMPLATES = (
+    JobTemplate("qwen2-0.5b", "train_4k", 16, 20, weight=3, elastic=True),
+    JobTemplate("qwen2-0.5b", "train_4k", 32, 12, weight=2, elastic=True),
+    JobTemplate("llama3.2-3b", "train_4k", 64, 8, weight=2, elastic=True),
+    JobTemplate("mamba2-780m", "train_4k", 32, 10, weight=1),
+)
+
+
+def _cfg(seed: int, *, interval_s: float = 10.0, cooldown_s: float = 20.0,
+         n_jobs: int = 10, failures=((60.0, 24),)) -> TraceConfig:
+    return TraceConfig(
+        n_jobs=n_jobs, arrival_rate_hz=0.3, seed=seed,
+        n_local=64, n_switch=64, pods=2,
+        templates=_ELASTIC_TEMPLATES,
+        failures=failures, repair_after_s=90.0,
+        recompose=RecomposeConfig(interval_s=interval_s,
+                                  cooldown_s=cooldown_s))
+
+
+def _check_invariants(cfg: TraceConfig) -> None:
+    sim = ClusterSimulator(cfg)
+    rep = sim.run()
+    jobs = rep["jobs"]
+    sched = sim.scheduler
+
+    # conservation: one terminal bucket per job, no double-counting
+    assert jobs["completed"] + jobs["rejected"] + jobs["failed"] \
+        + jobs["stranded"] == jobs["submitted"]
+    done_names = [j.name for j in sched.done]
+    assert len(done_names) == len(set(done_names)) == jobs["completed"]
+
+    # device-lease conservation: every lease after the trace drains is
+    # held by a still-running job (stranded capacity), never a finished
+    # or queued one
+    live = {j.name for j in sched.running}
+    for uid, holder in sched.pool.leases.items():
+        assert holder in live, (
+            f"device {uid} leased by {holder!r} which is not running")
+    for j in sched.running:
+        if j.system is not None:
+            held = [u for u in j.system.device_uids
+                    if sched.pool.leases.get(u) == j.name]
+            assert len(held) == j.system.n_devices
+
+    # tranche-lessee conservation: lessees are exactly the live jobs
+    # attached to the tranche, and nobody holds two tranches (a migrate
+    # leases the target before releasing the source, but never exits
+    # the tick holding both)
+    for name in sched.storage.tranches:
+        for holder in sched.storage.lessees(name):
+            assert holder in live
+            assert sched.storage.tranches_of(holder) == [name]
+    for j in sched.running:
+        if j.system is not None and j.system.tranche is not None:
+            assert sched.storage.tranches_of(j.name) == [j.system.tranche]
+
+    # no negative progress, no phantom completions from stale events
+    for j in sched.done:
+        assert j.end_t >= j.start_t >= 0.0
+        assert j.steps_done >= j.steps - 1e-9
+
+    # determinism: an identical replay is bit-identical
+    rep2 = ClusterSimulator(cfg).run()
+    assert json.dumps(rep, sort_keys=True, default=str) \
+        == json.dumps(rep2, sort_keys=True, default=str)
+
+
+# --------------------------------------------- always-on seeded sweep ----
+
+@pytest.mark.parametrize("seed", [0, 3, 7, 11])
+def test_invariants_hold_under_live_recomposition(seed):
+    _check_invariants(_cfg(seed))
+
+
+def test_invariants_hold_with_aggressive_ticks():
+    # tick faster than the cooldown and with two failure waves so the
+    # attach/detach/migrate passes interleave with fault recomposition
+    _check_invariants(_cfg(
+        5, interval_s=5.0, cooldown_s=5.0,
+        failures=((40.0, 32), (100.0, 16))))
+
+
+def test_invariants_hold_with_permanent_capacity_loss():
+    # a never-repaired failure leaves the pool short: attach must not
+    # resurrect width that no longer exists
+    _check_invariants(_cfg(2, failures=((50.0, None, 48),)))
+
+
+def test_recompose_none_is_bit_identical_legacy():
+    base_cfg = dataclasses.replace(_cfg(7), recompose=None)
+    sim = ClusterSimulator(base_cfg)
+    rep = sim.run()
+    # no report section, no plane events, no counters
+    assert "recompose" not in rep
+    assert all(ev.kind not in ("attach", "detach", "migrate")
+               for ev in sim.telemetry.events)
+    assert sim.telemetry.attaches == sim.telemetry.detaches \
+        == sim.telemetry.migrations == 0
+    # and a replay is still bit-identical
+    rep2 = ClusterSimulator(base_cfg).run()
+    assert json.dumps(rep, sort_keys=True, default=str) \
+        == json.dumps(rep2, sort_keys=True, default=str)
+
+
+def test_recompose_section_present_and_consistent_when_enabled():
+    sim = ClusterSimulator(_cfg(7))
+    rep = sim.run()
+    rc = rep["recompose"]
+    assert set(rc) == {"attaches", "detaches", "migrations",
+                       "devices_recomposed"}
+    assert rc["attaches"] == sum(
+        1 for ev in sim.telemetry.events if ev.kind == "attach")
+    assert rc["detaches"] == sum(
+        1 for ev in sim.telemetry.events if ev.kind == "detach")
+    assert rc["migrations"] == sum(
+        1 for ev in sim.telemetry.events if ev.kind == "migrate")
+
+
+# ------------------------------------------------------ hypothesis fuzz --
+
+def test_invariants_hold_for_random_recompose_schedules():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**16),
+           interval=st.floats(min_value=2.0, max_value=60.0),
+           cooldown=st.floats(min_value=0.0, max_value=90.0),
+           fail_t=st.integers(min_value=10, max_value=150),
+           fail_n=st.integers(min_value=1, max_value=64))
+    def prop(seed, interval, cooldown, fail_t, fail_n):
+        _check_invariants(_cfg(
+            seed, interval_s=interval, cooldown_s=cooldown,
+            n_jobs=8, failures=((float(fail_t), fail_n),)))
+
+    prop()

@@ -453,6 +453,102 @@ def test_default_trace_still_completes_with_storage_layer():
 
 
 # ---------------------------------------------------------------------------
+# recomposition plane: tranche leases across shape changes and migrates
+# ---------------------------------------------------------------------------
+def test_tranche_lease_survives_recompose_and_shrink():
+    """Device-side recompose/shrink must carry the storage lease by name
+    without re-leasing it — the holder keeps exactly one lease on the
+    same tranche through spare-swap AND halving (a double-lease here
+    would halve the job's own effective bandwidth)."""
+    dev = make_pool(n_local=40, n_switch=0, pods=1)
+    st = _pool()
+    sys_ = compose.compose(dev, "j", ("data",), (32,),
+                           {"data": LinkClass.LOCAL},
+                           storage_pool=st, tranche="local-nvme-0",
+                           storage_capacity=1e12)
+    dev.mark_failed(list(sys_.device_uids[:8]))
+    swapped = compose.recompose(dev, sys_)       # 8 spares cover the loss
+    assert swapped.tranche == "local-nvme-0"
+    assert st.lessees("local-nvme-0") == ("j",)  # one lease, not two
+    dev.mark_failed(list(swapped.device_uids[:16]))
+    shrunk = compose.shrink_to_pool(dev, swapped, "data")
+    assert shrunk.axis_sizes == (16,)
+    assert shrunk.tranche == "local-nvme-0"
+    assert st.lessees("local-nvme-0") == ("j",)
+    assert st.capacity_used("local-nvme-0") == 1e12
+    st.check_invariants()
+
+
+def test_release_tranche_pops_only_the_named_lease():
+    pool = _pool()
+    pool.lease("local-nvme-0", "j", capacity_bytes=1e12)
+    pool.lease("local-nvme-1", "j")              # e.g. data + checkpoint
+    assert pool.release_tranche("j", "local-nvme-0")
+    assert pool.tranches_of("j") == ["local-nvme-1"]
+    assert pool.n_lessees("local-nvme-0") == 0
+    assert not pool.release_tranche("j", "local-nvme-0")   # idempotent
+    assert not pool.release_tranche("ghost", "local-nvme-1")
+    assert pool.tranches_of("j") == ["local-nvme-1"]
+    pool.check_invariants()
+
+
+def test_migrate_tranche_reprices_per_lessee_bandwidth():
+    """``migrate_tranche`` moves the lease atomically and re-derives the
+    contended stalls on BOTH tranches: the stayer gets its solo
+    bandwidth back, the mover streams at the target's lessee count."""
+    dev = make_pool(n_local=64, n_switch=0, pods=1)
+    st = StoragePool([
+        StorageTranche("a", attach=LinkClass.SWITCH),
+        StorageTranche("b", attach=LinkClass.SWITCH)])
+    sched = Scheduler(dev, storage=st)
+    # park an exclusive blocker on b so both jobs admit onto a
+    st.lease("b", "blocker", exclusive=True)
+    jobs = [Job(name=f"j{i}", arch="qwen2-0.5b", shape_name="train_4k",
+                n_chips=16, steps=50, io=HEAVY_IO) for i in range(2)]
+    for j in jobs:
+        sched.submit(j, 0.0)
+    sched.poll(0.0)
+    assert st.n_lessees("a") == 2
+    contended = jobs[0].input_stall_s
+    assert contended > 0
+    solo_bw = st.read_bw("a") * 2                # 2-way split today
+    st.release("blocker")
+    assert sched.migrate_tranche(jobs[1], 5.0, "b")
+    assert st.n_lessees("a") == st.n_lessees("b") == 1
+    assert st.tranches_of("j1") == ["b"]
+    assert jobs[1].system.tranche == "b"
+    assert jobs[1].system.fabric.storage.name == "b"
+    # per-lessee bandwidth re-priced on both sides
+    assert st.read_bw("a") == pytest.approx(solo_bw)
+    assert jobs[0].input_stall_s < contended
+    assert jobs[1].input_stall_s == pytest.approx(jobs[0].input_stall_s)
+    assert sched.telemetry.migrations == 1
+    # both jobs changed stall: the simulator will re-price their events
+    assert {"j0", "j1"} <= set(sched.stall_dirty)
+    # migrating onto the tranche already held is a no-op
+    assert not sched.migrate_tranche(jobs[1], 6.0, "b")
+    st.check_invariants()
+
+
+def test_migrate_tranche_conflict_leaves_old_lease_untouched():
+    dev = make_pool(n_local=32, n_switch=0, pods=1)
+    st = StoragePool([StorageTranche("a"),
+                      StorageTranche("b", capacity_bytes=1e9)])
+    sched = Scheduler(dev, storage=st)
+    job = Job(name="j", arch="qwen2-0.5b", shape_name="train_4k",
+              n_chips=16, steps=50, io=HEAVY_IO)   # ~16 GB dataset
+    sched.submit(job, 0.0)
+    sched.poll(0.0)
+    assert st.tranches_of("j") == ["a"]
+    # target lacks capacity: the migrate must fail atomically
+    assert not sched.migrate_tranche(job, 1.0, "b")
+    assert st.tranches_of("j") == ["a"]
+    assert job.system.tranche == "a"
+    assert sched.telemetry.migrations == 0
+    st.check_invariants()
+
+
+# ---------------------------------------------------------------------------
 # backfill guard: queued restores priced at the *contended* tranche rate
 # ---------------------------------------------------------------------------
 def test_est_restore_for_prices_queued_restore_contended():
